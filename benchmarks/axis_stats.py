@@ -1,0 +1,24 @@
+"""Paper Fig. 2 analog: row/col axis-selection counts by module sub-type."""
+from __future__ import annotations
+
+from collections import Counter
+
+from benchmarks.common import row, tiny_pair
+from repro.core import calibration as C
+
+
+def run() -> list:
+    model, base, ft, _, calib = tiny_pair()
+    dm, report = C.calibrate_transformer(model, base, ft, calib,
+                                         epochs=2, e2e_epochs=1,
+                                         lr=1e-3, e2e_lr=1e-3)
+    out = []
+    for proj, axes in sorted(report["axis"].items()):
+        c = Counter(axes)
+        out.append(row(f"axis_stats/{proj}", 0,
+                       f"row={c.get('row', 0)};col={c.get('col', 0)}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

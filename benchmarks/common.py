@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: tiny trained base/fine-tune pairs + timing."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import build_model
+from repro.train.step import init_train_state, make_train_step
+
+
+@functools.lru_cache(maxsize=4)
+def tiny_pair(arch: str = "deepseek-7b", layers: int = 2,
+              base_steps: int = 40, ft_steps: int = 20):
+    """Train a reduced model, then fine-tune on a shifted distribution.
+    Returns (model, base_params, ft_params, eval_batches, ft_batches)."""
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              num_layers=layers, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    src_ft = SyntheticLM(cfg.vocab_size, seed=77)
+    step = jax.jit(make_train_step(model, peak_lr=5e-3, warmup=5))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    for i in range(base_steps):
+        state, _ = step(state, src.lm_batch(i, 4, 32))
+    base_params = state.params
+    for i in range(ft_steps):
+        state, _ = step(state, src_ft.lm_batch(i, 4, 32))
+    ft_params = state.params
+    eval_batches = [src_ft.lm_batch(5000 + i, 4, 32) for i in range(8)]
+    calib_batches = [src_ft.lm_batch(9000 + i, 4, 32) for i in range(4)]
+    return model, base_params, ft_params, eval_batches, calib_batches
+
+
+def eval_loss_and_acc(model, params, batches) -> tuple[float, float]:
+    from repro.train.step import make_eval_step
+    ev = jax.jit(make_eval_step(model))
+    losses, accs = [], []
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    for b in batches:
+        losses.append(float(ev(params, b)["loss"]))
+        logits = fwd(params, b)
+        pred = jnp.argmax(logits[:, :-0 or None, :], axis=-1)
+        accs.append(float(jnp.mean(pred == b["labels"])))
+    return sum(losses) / len(losses), sum(accs) / len(accs)
+
+
+def timeit(fn, n: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,64 @@
+"""Paper §3.2 load-time experiment: delta apply vs full checkpoint load.
+
+Measured on-disk on the tiny pair (cold-ish: fresh np.load each time) and
+modelled for the full 8B setting from byte counts + this host's measured
+disk/apply bandwidths.  The paper reports 0.80 s (delta) vs 2.08 s (full
+fp16) on Llama-3.1-8B — the ratio, not the absolute numbers, is the
+claim under test.
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+
+import jax
+
+from benchmarks.common import row, timeit, tiny_pair
+from repro.core import calibration as C
+from repro.core import loader as L
+from repro.core import store as S
+
+
+def run() -> list:
+    model, base, ft, _, _ = tiny_pair()
+    out = []
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="loadbench_"))
+
+    dm = C.compress(base, ft)
+    S.save_artifact(dm, tmp / "delta", base_fp=None)
+    ckpt = tmp / "full_fp16.npz"
+    S.save_checkpoint_fp16(ft, ckpt)
+
+    def load_full():
+        L.load_full_checkpoint(str(ckpt), ft)
+
+    def load_delta():
+        dm2 = S.load_artifact(tmp / "delta", verify=False)
+        L.apply_artifact(base, dm2, use_kernel=False)
+
+    t_full = timeit(load_full, n=5)
+    t_delta = timeit(load_delta, n=5)
+
+    delta_bytes = sum(f.stat().st_size for f in (tmp / "delta").iterdir())
+    full_bytes = ckpt.stat().st_size
+    out.append(row("load_time/full_fp16", t_full * 1e6,
+                   f"bytes={full_bytes}"))
+    out.append(row("load_time/delta_apply", t_delta * 1e6,
+                   f"bytes={delta_bytes};speedup={t_full/t_delta:.2f}x;"
+                   f"bytes_ratio={full_bytes/delta_bytes:.2f}x"))
+
+    # modelled 8B (paper setting): transfer-bound at measured disk bw
+    from benchmarks.table2_sizes import arch_sizes
+    s = arch_sizes("qwen3-8b")
+    disk_bw = full_bytes / t_full  # measured effective load bandwidth
+    t8_full = s["fp16_mb"] * 1e6 / disk_bw
+    t8_delta = s["artifact_mb"] * 1e6 / disk_bw
+    out.append(row("load_time/model_8B_full", t8_full * 1e6,
+                   f"modelled;bw={disk_bw/1e6:.0f}MB/s"))
+    out.append(row("load_time/model_8B_delta", t8_delta * 1e6,
+                   f"modelled;speedup={t8_full/t8_delta:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,75 @@
+"""§Roofline table: aggregates the dry-run JSONs into the per-cell report.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits the
+three roofline terms, dominant bottleneck, MODEL_FLOPS ratio and MFU bound
+per (arch × shape × mesh).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import row
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(tag: str = "") -> list:
+    cells = []
+    suffix = f".{tag}.json" if tag else ".json"
+    for p in sorted(RESULTS.glob(f"*{suffix}")):
+        if tag == "" and p.name.count(".") > 1:
+            continue  # skip tagged variants in the default view
+        try:
+            cells.append(json.loads(p.read_text()))
+        except Exception:
+            continue
+    return cells
+
+
+def format_cell(d: dict) -> str:
+    if d.get("status") == "skip":
+        return f"SKIP({d.get('reason', '')[:40]})"
+    if d.get("status") != "ok":
+        return "ERROR"
+    r = d["roofline"]
+    return (f"compute={r['compute_s']:.3f}s;memory={r['memory_s']:.3f}s;"
+            f"collective={r['collective_s']:.3f}s;dom={r['dominant'][:-2]};"
+            f"useful={r['useful_ratio']:.2f};mfu_bound={r['mfu_bound']:.3f}")
+
+
+def run() -> list:
+    out = []
+    for d in load_cells():
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        out.append(row(name, 0, format_cell(d)))
+    if not out:
+        out.append(row("roofline/NO_RESULTS", 0,
+                       "run: python -m repro.launch.dryrun --all"))
+    return out
+
+
+def markdown_table(cells: list) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s "
+             "| dominant | useful | MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if d.get("status") == "skip":
+            lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | —"
+                         f" | — | SKIP: {d.get('reason','')[:48]} | — | — |")
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} |"
+                         " ERR | | | | | |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant'][:-2]} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

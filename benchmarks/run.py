@@ -1,0 +1,66 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+  table1   quality: baseline / BitDelta scalar / per-axis vector
+  table2   artifact sizes for all 10 assigned architectures
+  load     cold-start: delta apply vs full fp16 checkpoint
+  axis     Fig. 2 analog: row/col selection counts per sub-type
+  kernel   Pallas kernel byte accounting + correctness
+  serving  multi-tenant hot-swap engine throughput
+  roofline dry-run roofline terms per (arch × shape × mesh)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def _section(name: str, fn) -> list:
+    try:
+        return fn()
+    except Exception:
+        tb = traceback.format_exc().strip().splitlines()[-1]
+        return [f"{name}/ERROR,0,{tb[:160]}"]
+
+
+def serving_bench() -> list:
+    import numpy as np
+    from benchmarks.common import row, tiny_pair
+    from repro.core import calibration as C
+    from repro.serving import ServingEngine, VariantRegistry
+    model, base, ft, _, _ = tiny_pair()
+    reg = VariantRegistry(base, max_resident=2)
+    reg.register("v1", C.compress(base, ft))
+    reg.register("v2", C.compress(base, ft, scalar=True))
+    eng = ServingEngine(model, reg, batch_size=4, prompt_len=16, max_len=64)
+    import time
+    t0 = time.perf_counter()
+    for i in range(12):
+        eng.submit(np.arange(1, 9), variant=["__base__", "v1", "v2"][i % 3],
+                   max_new_tokens=8)
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    m = eng.metrics
+    tput = m["tokens_generated"] / max(m["decode_seconds"], 1e-9)
+    return [row("serving/12req_3variants", dt * 1e6,
+                f"tokens={m['tokens_generated']};decode_tps={tput:.0f};"
+                f"swaps={reg.stats['swaps']};failed={m['failed']}")]
+
+
+def main() -> None:
+    from benchmarks import (axis_stats, kernel_bench, load_time, roofline,
+                            table1_quality, table2_sizes)
+    rows = []
+    rows += _section("table2", table2_sizes.run)      # cheap first
+    rows += _section("kernel", kernel_bench.run)
+    rows += _section("load_time", load_time.run)
+    rows += _section("table1", table1_quality.run)
+    rows += _section("axis_stats", axis_stats.run)
+    rows += _section("serving", serving_bench)
+    rows += _section("roofline", roofline.run)
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

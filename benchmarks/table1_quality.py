@@ -1,0 +1,56 @@
+"""Paper Table 1 analog: quality of {fine-tune, BitDelta scalar, per-axis
+vector} on held-out evaluation.
+
+No pretrained LLMs ship offline, so the setting is scaled down (DESIGN.md
+§8): base = model trained on distribution A, fine-tune = further training
+on distribution B, evaluated by held-out loss and next-token accuracy on
+B.  The paper's claim under test: calibrated per-axis vector ≥ scalar
+BitDelta, both ≈ the uncompressed fine-tune.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import eval_loss_and_acc, row, tiny_pair
+from repro.core import calibration as C
+
+
+def run() -> list:
+    model, base, ft, eval_batches, calib = tiny_pair()
+    out = []
+    t0 = time.perf_counter()
+
+    loss_ft, acc_ft = eval_loss_and_acc(model, ft, eval_batches)
+    loss_base, acc_base = eval_loss_and_acc(model, base, eval_batches)
+
+    dm_vec, rep_vec = C.calibrate_transformer(
+        model, base, ft, calib, epochs=3, e2e_epochs=3, lr=1e-3, e2e_lr=1e-3)
+    stu_vec = C.apply_delta(base, dm_vec)
+    loss_vec, acc_vec = eval_loss_and_acc(model, stu_vec, eval_batches)
+
+    dm_sca, _ = C.calibrate_transformer(
+        model, base, ft, calib, scalar=True, e2e_epochs=3,
+        lr=1e-3, e2e_lr=1e-3)
+    stu_sca = C.apply_delta(base, dm_sca)
+    loss_sca, acc_sca = eval_loss_and_acc(model, stu_sca, eval_batches)
+
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(row("table1/baseline_ft", us / 4,
+                   f"loss={loss_ft:.4f};acc={acc_ft:.4f}"))
+    out.append(row("table1/base_model", 0,
+                   f"loss={loss_base:.4f};acc={acc_base:.4f}"))
+    out.append(row("table1/bitdelta_scalar", 0,
+                   f"loss={loss_sca:.4f};acc={acc_sca:.4f}"))
+    out.append(row("table1/vector_rowcol", 0,
+                   f"loss={loss_vec:.4f};acc={acc_vec:.4f}"))
+    gap_closed_vec = (loss_base - loss_vec) / max(loss_base - loss_ft, 1e-9)
+    gap_closed_sca = (loss_base - loss_sca) / max(loss_base - loss_ft, 1e-9)
+    out.append(row("table1/gap_closed", 0,
+                   f"vector={gap_closed_vec:.3f};scalar={gap_closed_sca:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,58 @@
+"""Paper Table 2 analog: artifact sizes vs full FP16 checkpoints.
+
+Exact byte accounting for all 10 assigned architectures from abstract
+parameter shapes (jax.eval_shape — no allocation), using the same target
+selection as the real compressor: packed 1-bit masks + fp16 per-axis
+vectors for every attention/MLP/expert projection, fp16 extras for
+embeddings/norms/convs.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row
+from repro.configs import ARCHS, get_config
+from repro.core.calibration import flatten_params, is_target
+from repro.models import build_model
+from repro.models.param import split
+
+
+def arch_sizes(arch: str) -> dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params_p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    struct, _ = split(params_p)
+    flat = flatten_params(struct)
+    mask = vec = extras = fp16 = 0
+    for path, leaf in flat.items():
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        fp16 += 2 * n
+        if is_target(path, leaf):
+            d_out, d_in = leaf.shape[-2], leaf.shape[-1]
+            stacked = n // (d_out * d_in)
+            mask += n // 8
+            vec += 2 * stacked * max(d_out, d_in) + (stacked + 7) // 8
+        else:
+            extras += 2 * n
+    artifact = mask + vec + extras
+    return {"artifact_mb": artifact / 1e6, "fp16_mb": fp16 / 1e6,
+            "ratio": fp16 / artifact, "mask_mb": mask / 1e6,
+            "vec_mb": vec / 1e6, "extras_mb": extras / 1e6}
+
+
+def run() -> list:
+    out = []
+    for arch in ARCHS:
+        s = arch_sizes(arch)
+        out.append(row(
+            f"table2/{arch}", 0,
+            f"artifact={s['artifact_mb']:.0f}MB;fp16={s['fp16_mb']:.0f}MB;"
+            f"ratio={s['ratio']:.2f}x;mask={s['mask_mb']:.0f}MB;"
+            f"extras={s['extras_mb']:.0f}MB"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

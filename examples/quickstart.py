@@ -1,0 +1,72 @@
+"""Quickstart: compress a fine-tune into a 1-bit per-axis delta, save it,
+hot-swap it onto the resident base, and verify quality.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import loader as L
+from repro.core import store as S
+from repro.data.pipeline import SyntheticLM
+from repro.models import build_model
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    # 1. a small base model + a real fine-tune on a shifted distribution
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    step = jax.jit(make_train_step(model, peak_lr=5e-3, warmup=5))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    for i in range(30):
+        state, m = step(state, src.lm_batch(i, 4, 32))
+    base = state.params
+    ft_src = SyntheticLM(cfg.vocab_size, seed=7)
+    for i in range(15):
+        state, m = step(state, ft_src.lm_batch(i, 4, 32))
+    ft = state.params
+    print(f"trained base + fine-tune (loss {float(m['loss']):.3f})")
+
+    # 2. compress: sign mask + per-axis scales, calibrated (paper Alg. 1-7)
+    calib = [ft_src.lm_batch(1000 + i, 4, 32) for i in range(3)]
+    dm, report = C.calibrate_transformer(model, base, ft, calib,
+                                         epochs=2, e2e_epochs=2,
+                                         lr=1e-3, e2e_lr=1e-3)
+    print("axis selections:", {k: v for k, v in report["axis"].items()})
+
+    # 3. save the artifact; report sizes
+    out = pathlib.Path(tempfile.mkdtemp()) / "variant_a"
+    manifest = S.save_artifact(dm, out, base_fp=S.base_fingerprint(base))
+    fp16 = C.fp16_checkpoint_nbytes(ft)
+    print(f"artifact {manifest['artifact_bytes']/1e6:.2f} MB vs "
+          f"fp16 checkpoint {fp16/1e6:.2f} MB "
+          f"({fp16/manifest['artifact_bytes']:.2f}x smaller)")
+
+    # 4. hot-swap onto the resident base (fused Pallas unpack path)
+    dm2 = S.load_artifact(out, expect_base_fp=S.base_fingerprint(base))
+    student, stats = L.apply_artifact(base, dm2)
+    print(f"swap: {stats['seconds']*1e3:.1f} ms, "
+          f"{stats['transferred_bytes']/1e6:.2f} MB moved")
+
+    # 5. quality: student vs teacher on held-out data
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    batch = ft_src.lm_batch(9999, 4, 32)
+    err = float(jnp.mean((fwd(ft, batch) - fwd(student, batch)) ** 2))
+    base_err = float(jnp.mean((fwd(ft, batch) - fwd(base, batch)) ** 2))
+    print(f"teacher-student logit MSE {err:.5f} "
+          f"(base-teacher: {base_err:.5f}, "
+          f"{base_err/max(err,1e-12):.1f}x closer)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fault-tolerant training driver: train, get preempted, auto-resume, and
+optionally compress gradients as they would cross pods.
+
+    PYTHONPATH=src python examples/train_with_faults.py
+"""
+import dataclasses
+import pathlib
+import tempfile
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main():
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              num_layers=2, remat=False)
+    model = build_model(cfg)
+    ckpt_dir = pathlib.Path(tempfile.mkdtemp()) / "ckpts"
+    lcfg = LoopConfig(total_steps=60, ckpt_every=15, batch_size=4,
+                      seq_len=64, peak_lr=1e-3, grad_compress=True)
+
+    print("run 1: training with 1-bit error-feedback grad compression...")
+    t1 = Trainer(model, ckpt_dir, lcfg)
+    res1 = t1.run(interrupt_at=25)       # simulated preemption
+    print(f"  preempted at step {res1['completed']}, "
+          f"loss {res1['losses'][0]:.3f} -> {res1['losses'][-1]:.3f}")
+
+    print("run 2: fresh process auto-resumes from the newest checkpoint...")
+    t2 = Trainer(model, ckpt_dir, lcfg)
+    res2 = t2.run()
+    print(f"  resumed and finished at step {res2['completed']}, "
+          f"final loss {res2['losses'][-1]:.3f}")
+    assert res2["completed"] == lcfg.total_steps
+    print("done: restart was transparent (deterministic data + atomic "
+          "checkpoints).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Architecture registry + assigned input-shape grid.
+
+``get_config(arch_id)`` returns the full published config; ``SHAPES`` is the
+assigned shape set.  ``cells()`` enumerates the 40 (arch × shape) dry-run
+cells, with per-cell eligibility (see DESIGN.md §4 for skip rationale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Iterator, Optional
+
+from repro.configs.base import ModelConfig, param_counts  # noqa: F401
+
+_ARCH_MODULES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "xlstm-350m": "xlstm_350m",
+    "deepseek-7b": "deepseek_7b",
+    "qwen3-8b": "qwen3_8b",
+    "starcoder2-3b": "starcoder2_3b",
+    "gemma3-12b": "gemma3_12b",
+    "zamba2-7b": "zamba2_7b",
+    "internvl2-76b": "internvl2_76b",
+    "whisper-base": "whisper_base",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell should run; else a skip reason."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return "enc-dec with 30s audio frontend; decoder never sees 500k"
+        if not cfg.is_sub_quadratic():
+            return "pure full-attention arch; long_500k needs sub-quadratic"
+    return None
+
+
+def cells() -> Iterator[tuple[str, str, Optional[str]]]:
+    """Yield (arch, shape, skip_reason) for all 40 cells."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            yield arch, shape.name, cell_skip_reason(cfg, shape)

@@ -1,0 +1,188 @@
+"""Unified model configuration covering all assigned architecture families.
+
+One ``ModelConfig`` describes a model from any family (dense / moe / ssm /
+hybrid / vlm / audio); family-specific fields are ignored where not
+applicable.  ``reduced()`` produces the CPU smoke-test variant of the same
+family (small widths, few layers/experts, tiny vocab) per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    max_seq_len: int = 8192
+
+    # --- positional / attention flavour ---
+    rope_theta: float = 10000.0
+    qk_norm: bool = False             # qwen3 / gemma3
+    sliding_window: int = 0           # >0: local attention window
+    local_global_pattern: int = 0     # gemma3: N local layers per 1 global
+    rope_theta_local: float = 10000.0 # gemma3 local layers use smaller base
+    attn_logit_softcap: float = 0.0
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_first_dense: int = 0          # first K layers use dense MLP
+    moe_d_ff: int = 0                 # expert hidden dim (d_ff used if 0)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0                # mamba2 state size per head
+    ssm_heads: int = 0
+    ssm_conv: int = 4
+    mlstm_ratio: int = 0              # xlstm: mLSTM blocks per sLSTM block+1 (7 -> 7:1)
+    attn_every: int = 0               # zamba2: shared attn block every N mamba blocks
+    concat_embed: bool = False        # zamba2: concat original embedding into attn input
+
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 0           # stub frontend sequence length
+    cross_attention: bool = False
+
+    # --- vlm ---
+    num_image_tokens: int = 0         # stub frontend patch-embedding count
+
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # --- distribution ---
+    remat: bool = True
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the unembed matmul and
+        logits always shard over the model axis (whisper's 51865 would
+        otherwise replicate multi-GB logits per device)."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def is_sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (see DESIGN.md §4)."""
+        return self.family in ("ssm", "hybrid") or self.local_global_pattern > 0
+
+    def has_decoder(self) -> bool:
+        return True  # no encoder-only archs in the assignment
+
+    # -- reduced smoke config ------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same family, tiny dims — used by CPU smoke tests only."""
+        def shrink(v, lo, hi):
+            return 0 if v == 0 else max(lo, min(v, hi))
+        return dataclasses.replace(
+            self,
+            num_layers=min(self.num_layers, 4 if self.family != "hybrid" else 7),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            moe_d_ff=64 if self.num_experts else 0,
+            vocab_size=256,
+            max_seq_len=128,
+            num_experts=shrink(self.num_experts, 4, 8),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            top_k=shrink(self.top_k, 2, 2),
+            # dropless in smoke configs: capacity == group size makes routing
+            # independent of batch/seq composition (prefill == forward)
+            capacity_factor=(8.0 if self.num_experts else self.capacity_factor),
+            moe_first_dense=min(self.moe_first_dense, 1),
+            # keep num_layers a multiple of the (reduced) layer pattern
+            local_global_pattern=min(self.local_global_pattern, 1),
+            sliding_window=shrink(self.sliding_window, 16, 16),
+            ssm_state=shrink(self.ssm_state, 16, 16),
+            ssm_heads=shrink(self.ssm_heads, 2, 2),
+            mlstm_ratio=shrink(self.mlstm_ratio, 3, 3),
+            attn_every=shrink(self.attn_every, 3, 3),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_frames=shrink(self.encoder_frames, 16, 16),
+            num_image_tokens=shrink(self.num_image_tokens, 8, 8),
+            remat=False,
+            scan_layers=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS = 6·N·D needs N and N_active)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """Approximate total and active parameter counts (embedding included)."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+
+    def dense_mlp(hidden):
+        return 3 * d * hidden  # gated (gate, up, down)
+
+    total = active = 0
+    if cfg.family in ("dense", "vlm"):
+        total = L * (attn + dense_mlp(ff))
+        active = total
+    elif cfg.family == "moe":
+        e_ff = cfg.expert_d_ff
+        n_dense = cfg.moe_first_dense
+        n_moe = L - n_dense
+        per_moe = (attn + cfg.num_experts * dense_mlp(e_ff)
+                   + cfg.num_shared_experts * dense_mlp(e_ff)
+                   + d * cfg.num_experts)
+        per_moe_active = (attn + cfg.top_k * dense_mlp(e_ff)
+                          + cfg.num_shared_experts * dense_mlp(e_ff)
+                          + d * cfg.num_experts)
+        total = n_dense * (attn + dense_mlp(ff)) + n_moe * per_moe
+        active = n_dense * (attn + dense_mlp(ff)) + n_moe * per_moe_active
+    elif cfg.family == "ssm":
+        # xlstm block: up-proj 2x + qkv-ish + down; rough but consistent
+        per = 2 * d * 2 * d + 3 * (2 * d) * (2 * d) // 4 + 2 * d * d
+        total = L * per
+        active = total
+    elif cfg.family == "hybrid":
+        d_inner = 2 * d
+        mamba = d * (2 * d_inner) + d_inner * d + d_inner * (2 * cfg.ssm_state)
+        n_attn = L // max(cfg.attn_every, 1)
+        shared = attn + dense_mlp(ff)  # ONE shared block, reused
+        total = L * mamba + shared
+        active = L * mamba + n_attn * shared // max(n_attn, 1) * n_attn
+        active = total  # weight sharing: all params active across the pass
+    elif cfg.family == "audio":
+        enc = cfg.encoder_layers * (attn + 2 * d * ff)
+        dec = L * (2 * attn + 2 * d * ff)  # self + cross attention
+        total = enc + dec
+        active = total
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    total += emb
+    active += emb
+    return {"total": int(total), "active": int(active)}

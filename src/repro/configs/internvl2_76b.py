@@ -1,0 +1,24 @@
+"""internvl2-76b — InternViT + LLM backbone (backbone only; ViT stubbed).
+
+[arXiv:2404.16821; unverified-tier]  Assignment config:
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Per the assignment, [vlm] entries specify the transformer BACKBONE; the
+vision frontend is a STUB — input_specs() provides precomputed patch
+embeddings (num_image_tokens × d_model) prepended to the token stream.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    num_image_tokens=256,
+    rope_theta=500000.0,
+    max_seq_len=32768,
+)

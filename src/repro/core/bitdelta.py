@@ -1,0 +1,96 @@
+"""Compressed linear module: the paper's drop-in replacement layer.
+
+A :class:`DeltaLinear` represents one patched linear projection
+
+    y = x @ (v ⊙ unpack(B) + W_b)ᵀ
+
+in one of three apply modes:
+
+* ``"dense"``   — reconstruct Ŵ once (loader path; paper's deployed mode:
+                  "We add all residual terms at once ... yielding inference
+                  identical to FP16 weights").
+* ``"onfly"``   — fused delta GEMM per forward (no switch cost; the paper's
+                  §4 "alternative on-the-fly variant", backed by the Pallas
+                  ``bitlinear`` kernel).
+* ``"ref"``     — pure-jnp reference (used by calibration: it is
+                  differentiable w.r.t. v).
+
+All state is a plain pytree so the module composes with pjit/scan/remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta as D
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeltaLinear:
+    """Pytree state of one compressed projection."""
+    packed: jax.Array          # (d_out, d_in//8) uint8
+    v: jax.Array               # (d_out,) | (d_in,) | () fp16/fp32
+    w_base: jax.Array          # (d_out, d_in)
+    mode: str = dataclasses.field(metadata=dict(static=True), default="row")
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.w_base.shape
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_pair(cls, w_base: jax.Array, w_ft: jax.Array, mode: str
+                  ) -> "DeltaLinear":
+        packed, v0 = D.compress(w_base, w_ft, mode)
+        return cls(packed=packed, v=v0, w_base=w_base, mode=mode)
+
+    # -- forward -----------------------------------------------------------
+    def reconstruct(self, dtype=None) -> jax.Array:
+        return D.reconstruct(self.packed, self.v, self.w_base, self.mode,
+                             dtype=dtype)
+
+    def __call__(self, x: jax.Array, apply_mode: str = "ref") -> jax.Array:
+        if apply_mode == "ref":
+            *lead, k = x.shape
+            y = D.delta_matmul(x.reshape(-1, k), self.packed, self.v,
+                               self.w_base, self.mode)
+            return y.reshape(*lead, -1)
+        if apply_mode == "onfly":
+            from repro.kernels import ops as K
+            return K.bitlinear(x, self.packed, self.v, self.w_base,
+                               mode=self.mode)
+        if apply_mode == "dense":
+            w_hat = self.reconstruct(dtype=x.dtype)
+            return x @ w_hat.T
+        raise ValueError(apply_mode)
+
+    # -- accounting --------------------------------------------------------
+    def artifact_bytes(self) -> int:
+        d_out, d_in = self.w_base.shape
+        return D.artifact_bytes(d_out, d_in, self.mode)
+
+
+def reconstruction_error(lin: DeltaLinear, w_ft: jax.Array) -> jax.Array:
+    """||Ŵ - W_f||_F / ||W_f - W_b||_F — weight-space residual error.
+
+    (The paper optimizes *output* error, not this; we report both.)"""
+    w_hat = lin.reconstruct(dtype=jnp.float32)
+    num = jnp.linalg.norm(w_hat - w_ft.astype(jnp.float32))
+    den = jnp.linalg.norm(w_ft.astype(jnp.float32)
+                          - lin.w_base.astype(jnp.float32)) + 1e-12
+    return num / den
+
+
+def best_static_axis(w_base: jax.Array, w_ft: jax.Array) -> str:
+    """Weight-space heuristic axis choice (no calibration): lower Frobenius
+    residual with the init scale.  Calibration (core.calibration) replaces
+    this with the paper's output-MSE selection."""
+    errs: dict[str, Any] = {}
+    for mode in ("row", "col"):
+        lin = DeltaLinear.from_pair(w_base, w_ft, mode)
+        errs[mode] = float(reconstruction_error(lin, w_ft))
+    return min(errs, key=errs.get)

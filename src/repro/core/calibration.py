@@ -1,0 +1,438 @@
+"""Calibration pipeline: the paper's Alg. 1–7 in functional JAX.
+
+Stages (paper §2 "Calibration cache, training, and stacking"):
+  0. compress: B = sign(W_f − W_b) packed; v0 = mean(|ΔW|, axis); both row
+     and col variants instantiated per target matrix.
+  1. per-layer activation matching (Alg. 3/4): caches of (X, Y) pairs —
+     X from the student stack (already-compressed layers below), Y from
+     the teacher — fit v by MSE with AdamW, 5 epochs.
+  2. axis selection (Alg. 6): row vs col by held-out MSE, per matrix.
+  3. end-to-end logit matching (Alg. 2): jointly train all selected
+     vectors so the stacked student reproduces teacher logits.
+
+Targets: every linear projection in attention and MLP/expert blocks
+(TARGET_KEYS), matching the paper's "all linear projections in attention
+and MLP blocks".  Norms / biases / embeddings / convs are carried as
+uncompressed fine-tuned extras (paper §4).
+
+Stacked (scan) weights: masks/vectors carry the leading layer/expert dims;
+each stacked matrix gets its own axis choice, mirroring the paper's
+per-module selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta as D
+from repro.optim.adamw import adamw_init, adamw_update
+
+TARGET_KEYS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "w_in", "w_out", "w_ff1", "w_ff2", "w_zi", "w_if",
+               "w_z", "w_xc", "w_bc", "w_dt",  # zamba split projections
+               "router"}
+# router excluded per paper (not an attention/MLP projection); kept here
+# commented-out of the set on purpose:
+TARGET_KEYS.discard("router")
+
+
+# ---------------------------------------------------------------------------
+# path utilities
+# ---------------------------------------------------------------------------
+
+def flatten_params(params) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def unflatten_like(template, flat: dict):
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    paths = [".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)
+             for path, _ in leaves_with_path[0]]
+    leaves = [flat[k] for k in paths]
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], leaves)
+
+
+def is_target(path: str, arr) -> bool:
+    last = path.split(".")[-1]
+    return (last in TARGET_KEYS and arr.ndim >= 2
+            and arr.shape[-1] % 8 == 0 and "conv" not in path)
+
+
+# ---------------------------------------------------------------------------
+# delta model
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeltaEntry:
+    """One target matrix stack: packed sign mask + both axis variants."""
+    packed: jax.Array            # (..., dout, din//8) uint8
+    v_row: jax.Array             # (..., dout) fp32 while training
+    v_col: jax.Array             # (..., din)
+    use_row: jax.Array           # (...,) bool — per stacked matrix
+    scalar: bool = dataclasses.field(metadata=dict(static=True),
+                                     default=False)
+
+    def reconstruct(self, w_base: jax.Array, dtype=None) -> jax.Array:
+        dtype = dtype or w_base.dtype
+        signs = D.unpack_signs(self.packed, w_base.shape[-1], jnp.float32)
+        if self.scalar:
+            dv = self.v_row[..., None, None].astype(jnp.float32) * signs
+        else:
+            dr = self.v_row[..., :, None].astype(jnp.float32) * signs
+            dc = self.v_col[..., None, :].astype(jnp.float32) * signs
+            sel = self.use_row[..., None, None]
+            dv = jnp.where(sel, dr, dc)
+        return (w_base.astype(jnp.float32) + dv).astype(dtype)
+
+    def artifact_bytes(self) -> int:
+        """On-disk bytes: packed mask + the SELECTED fp16 vector per matrix
+        + 1 selector bit per matrix (scalar mode: 2 bytes per matrix)."""
+        mask = self.packed.size
+        if self.scalar:
+            return mask + 2 * int(self.v_row.size)
+        n_mats = max(int(self.use_row.size), 1)
+        d_out = self.v_row.shape[-1]
+        d_in = self.v_col.shape[-1]
+        n_row = int(jnp.sum(self.use_row))
+        vec = 2 * (n_row * d_out + (n_mats - n_row) * d_in)
+        return mask + vec + (n_mats + 7) // 8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeltaModel:
+    deltas: dict                 # path -> DeltaEntry
+    extras: dict                 # path -> fine-tuned value (uncompressed)
+
+    def scale_params(self) -> dict:
+        """The trainable pytree (v_row/v_col per target)."""
+        return {k: {"v_row": e.v_row, "v_col": e.v_col}
+                for k, e in self.deltas.items()}
+
+    def with_scales(self, scales: dict) -> "DeltaModel":
+        new = {k: dataclasses.replace(e, v_row=scales[k]["v_row"],
+                                      v_col=scales[k]["v_col"])
+               for k, e in self.deltas.items()}
+        return DeltaModel(deltas=new, extras=self.extras)
+
+
+def compress(base_params, ft_params, scalar: bool = False) -> DeltaModel:
+    """Stage 0: masks + init scales for every target; ft extras for the
+    rest (embeddings, norms, convs — paper §4 keeps them unpatched but the
+    artifact must carry the fine-tuned values)."""
+    base_flat = flatten_params(base_params)
+    ft_flat = flatten_params(ft_params)
+    deltas, extras = {}, {}
+    for path, wb in base_flat.items():
+        wf = ft_flat[path]
+        if is_target(path, wb):
+            dw = (wf - wb).astype(jnp.float32)
+            packed = D.pack_signs(D.sign_mask(dw))
+            if scalar:
+                v0 = D.init_scale(dw, "scalar")
+                deltas[path] = DeltaEntry(packed=packed, v_row=v0,
+                                          v_col=v0, use_row=jnp.ones(
+                                              dw.shape[:-2], bool),
+                                          scalar=True)
+            else:
+                deltas[path] = DeltaEntry(
+                    packed=packed,
+                    v_row=D.init_scale(dw, "row"),
+                    v_col=D.init_scale(dw, "col"),
+                    use_row=jnp.ones(dw.shape[:-2], bool))
+        else:
+            extras[path] = wf
+    return DeltaModel(deltas=deltas, extras=extras)
+
+
+def apply_delta(base_params, dm: DeltaModel):
+    """Materialise the student parameters (differentiable w.r.t. scales)."""
+    base_flat = flatten_params(base_params)
+    out = {}
+    for path, wb in base_flat.items():
+        if path in dm.deltas:
+            out[path] = dm.deltas[path].reconstruct(wb)
+        else:
+            out[path] = dm.extras.get(path, wb)
+    return unflatten_like(base_params, out)
+
+
+def artifact_nbytes(dm: DeltaModel) -> int:
+    total = sum(e.artifact_bytes() for e in dm.deltas.values())
+    total += sum(2 * int(v.size) for v in dm.extras.values())  # fp16 extras
+    return total
+
+
+def fp16_checkpoint_nbytes(params) -> int:
+    return sum(2 * int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1/2: per-layer activation matching + axis selection (Alg. 3/4/6)
+# ---------------------------------------------------------------------------
+
+def _fit_scale(packed, w_base, x, y, v0, mode, *, epochs: int = 5,
+               lr: float = 1e-4, batch: int = 1024, val_frac: float = 0.2):
+    """Fit one matrix's scale vector by output MSE; returns (v, val_mse).
+
+    x: (N, din), y: (N, dout) — the calibration cache for this layer.
+    """
+    n = x.shape[0]
+    n_val = max(1, int(n * val_frac))
+    x_tr, y_tr = x[:-n_val], y[:-n_val]
+    x_val, y_val = x[-n_val:], y[-n_val:]
+    n_tr = x_tr.shape[0]
+    bs = min(batch, n_tr)
+    steps_per_epoch = max(1, n_tr // bs)
+    total_steps = epochs * steps_per_epoch
+
+    def mse(v, xb, yb):
+        pred = D.delta_matmul(xb.astype(jnp.float32), packed,
+                              v, w_base, mode)
+        return jnp.mean((pred - yb.astype(jnp.float32)) ** 2)
+
+    opt = adamw_init({"v": v0})
+
+    def step(carry, i):
+        v, opt_state = carry
+        start = (i * bs) % max(n_tr - bs + 1, 1)
+        xb = jax.lax.dynamic_slice_in_dim(x_tr, start, bs)
+        yb = jax.lax.dynamic_slice_in_dim(y_tr, start, bs)
+        loss, g = jax.value_and_grad(lambda vv: mse(vv["v"], xb, yb))(
+            {"v": v})
+        new, opt_state, _ = adamw_update({"v": v}, g, opt_state, lr=lr,
+                                         weight_decay=0.0,
+                                         grad_clip_norm=1e9)
+        return (new["v"], opt_state), loss
+
+    (v_fit, _), _ = jax.lax.scan(step, (v0.astype(jnp.float32), opt),
+                                 jnp.arange(total_steps))
+    return v_fit, mse(v_fit, x_val, y_val)
+
+
+_fit_scale_jit = jax.jit(_fit_scale, static_argnames=("mode", "epochs",
+                                                      "lr", "batch",
+                                                      "val_frac"))
+
+
+def fit_layer(entry: DeltaEntry, w_base_l, x, y, layer_idx=None, *,
+              epochs: int = 5, lr: float = 1e-4):
+    """Alg. 6 for one matrix: fit row and col variants, select by val MSE.
+
+    entry fields may be stacked; ``layer_idx`` selects the matrix.
+    Returns (v_row, v_col, use_row, val_mses).
+    """
+    packed = entry.packed if layer_idx is None else entry.packed[layer_idx]
+    v_r0 = entry.v_row if layer_idx is None else entry.v_row[layer_idx]
+    v_c0 = entry.v_col if layer_idx is None else entry.v_col[layer_idx]
+    v_r, mse_r = _fit_scale_jit(packed, w_base_l, x, y, v_r0, "row",
+                                epochs=epochs, lr=lr)
+    v_c, mse_c = _fit_scale_jit(packed, w_base_l, x, y, v_c0, "col",
+                                epochs=epochs, lr=lr)
+    return v_r, v_c, mse_r <= mse_c, (float(mse_r), float(mse_c))
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: end-to-end logit matching (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def e2e_calibrate(forward_fn: Callable, base_params, dm: DeltaModel,
+                  teacher_logits: list, batches: list, *,
+                  epochs: int = 5, lr: float = 1e-4) -> DeltaModel:
+    """Jointly train all scale vectors to match teacher logits.
+
+    forward_fn(params, batch) -> logits.  teacher_logits[i] pre-computed
+    (the paper caches them — Alg. 5).
+    """
+    scales = dm.scale_params()
+    opt = adamw_init(scales)
+
+    @jax.jit
+    def update(scales, opt_state, batch, tl):
+        def loss_fn(s):
+            student = apply_delta(base_params, dm.with_scales(s))
+            logits = forward_fn(student, batch)
+            return jnp.mean((logits.astype(jnp.float32)
+                             - tl.astype(jnp.float32)) ** 2)
+        loss, g = jax.value_and_grad(loss_fn)(scales)
+        new, opt_state, _ = adamw_update(scales, g, opt_state, lr=lr,
+                                         weight_decay=0.0,
+                                         grad_clip_norm=1e9)
+        return new, opt_state, loss
+
+    losses = []
+    for _ in range(epochs):
+        for batch, tl in zip(batches, teacher_logits):
+            scales, opt, loss = update(scales, opt, batch, tl)
+            losses.append(float(loss))
+    return dm.with_scales(scales), losses
+
+
+# ---------------------------------------------------------------------------
+# full pipeline for the transformer family (uses IO capture)
+# ---------------------------------------------------------------------------
+
+def calibrate_transformer(model, base_params, ft_params, batches: list, *,
+                          epochs: int = 5, lr: float = 1e-4,
+                          e2e_epochs: int = 5, e2e_lr: float = 1e-4,
+                          sequential: bool = True, scalar: bool = False,
+                          progress: Optional[Callable] = None):
+    """Faithful Alg. 1: caches → per-layer fits → axis select → e2e.
+
+    ``sequential=True`` rebuilds the student cache after each block is
+    installed (X from the already-compressed stack below, paper §2);
+    ``False`` is the fast variant using base-stack inputs for all layers.
+    Returns (DeltaModel, report dict).
+    """
+    from repro.models import transformer as T
+    cfg = model.cfg
+    dm = compress(base_params, ft_params, scalar=scalar)
+
+    big = jnp.concatenate([b["tokens"] for b in batches], axis=0)
+    cal_batch = {"tokens": big}
+
+    teacher_fwd = jax.jit(lambda p, b: T.forward(p, b, cfg, collect_io=True))
+    _, t_aux = teacher_fwd(ft_params, cal_batch)
+    t_io = t_aux["io"]
+
+    if scalar:
+        # BitDelta baseline: single scalar per matrix, 1 epoch (paper §3.1)
+        epochs = 1
+
+    layer_keys = [k for k in dm.deltas if k.startswith("layers.")]
+    n_layers = dm.deltas[layer_keys[0]].packed.shape[0] if layer_keys else 0
+    base_flat = flatten_params(base_params)
+    report = {"val_mse": {}, "axis": {}}
+
+    student_fwd = jax.jit(lambda p, b: T.forward(p, b, cfg, collect_io=True))
+
+    s_io = None
+    for li in range(n_layers):
+        if sequential or s_io is None:
+            student = apply_delta(base_params, dm)
+            _, s_aux = student_fwd(student, cal_batch)
+            s_io = s_aux["io"]
+        new_deltas = dict(dm.deltas)
+        for key in layer_keys:
+            proj = ".".join(key.split(".")[1:])    # e.g. "attn.wq"
+            x_all, _ = s_io[proj]
+            _, y_all = t_io[proj]
+            x = x_all[li].reshape(-1, x_all.shape[-1])
+            y = y_all[li].reshape(-1, y_all.shape[-1])
+            entry = dm.deltas[key]
+            wb = base_flat[key][li]
+            if scalar:
+                v, mse = _fit_scale_jit(entry.packed[li], wb, x, y,
+                                        entry.v_row[li], "scalar",
+                                        epochs=epochs, lr=lr)
+                new_deltas[key] = dataclasses.replace(
+                    entry, v_row=entry.v_row.at[li].set(v),
+                    v_col=entry.v_col.at[li].set(v))
+                report["val_mse"].setdefault(proj, []).append(float(mse))
+            else:
+                v_r, v_c, use_row, mses = fit_layer(entry, wb, x, y, li,
+                                                    epochs=epochs, lr=lr)
+                new_deltas[key] = dataclasses.replace(
+                    entry,
+                    v_row=entry.v_row.at[li].set(v_r),
+                    v_col=entry.v_col.at[li].set(v_c),
+                    use_row=entry.use_row.at[li].set(use_row))
+                report["val_mse"].setdefault(proj, []).append(mses)
+                report["axis"].setdefault(proj, []).append(
+                    "row" if bool(use_row) else "col")
+        dm = DeltaModel(deltas=new_deltas, extras=dm.extras)
+        if progress:
+            progress(li, n_layers)
+
+    # non-stacked targets (pre_layers etc.): weight-space init only is kept;
+    # the e2e stage below trains their vectors too.
+
+    # Stage 3: end-to-end
+    fwd = jax.jit(lambda p, b: T.forward(p, b, cfg)[0])
+    teacher_logits = [fwd(ft_params, b) for b in batches]
+    dm, e2e_losses = e2e_calibrate(lambda p, b: fwd(p, b), base_params, dm,
+                                   teacher_logits, batches,
+                                   epochs=e2e_epochs, lr=e2e_lr)
+    report["e2e_losses"] = e2e_losses
+    return dm, report
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper) family
+# ---------------------------------------------------------------------------
+
+def calibrate_encdec(model, base_params, ft_params, batches: list, *,
+                     epochs: int = 5, lr: float = 1e-4,
+                     e2e_epochs: int = 5, e2e_lr: float = 1e-4,
+                     scalar: bool = False):
+    """Alg. 1 for the whisper family: encoder stack first, then decoder,
+    each block-sequential with teacher/student IO caches.  Proves the
+    pipeline ports across architecture families (DESIGN.md §4)."""
+    from repro.models import whisper as W
+    cfg = model.cfg
+    dm = compress(base_params, ft_params, scalar=scalar)
+    if scalar:
+        epochs = 1
+
+    cal_batch = {
+        "tokens": jnp.concatenate([b["tokens"] for b in batches], axis=0),
+        "frames": jnp.concatenate([b["frames"] for b in batches], axis=0),
+    }
+    fwd_io = jax.jit(lambda p, b: W.forward(p, b, cfg, collect_io=True)[1])
+    t_aux = fwd_io(ft_params, cal_batch)
+    base_flat = flatten_params(base_params)
+    report = {"val_mse": {}, "axis": {}}
+
+    for group, io_key in (("enc_layers", "enc_io"), ("dec_layers", "dec_io")):
+        keys = [k for k in dm.deltas if k.startswith(group + ".")]
+        if not keys:
+            continue
+        n_layers = dm.deltas[keys[0]].packed.shape[0]
+        for li in range(n_layers):
+            student = apply_delta(base_params, dm)
+            s_aux = fwd_io(student, cal_batch)
+            new_deltas = dict(dm.deltas)
+            for key in keys:
+                proj = key[len(group) + 1:]
+                x_all = s_aux[io_key][proj][0]
+                y_all = t_aux[io_key][proj][1]
+                x = x_all[li].reshape(-1, x_all.shape[-1])
+                y = y_all[li].reshape(-1, y_all.shape[-1])
+                entry = dm.deltas[key]
+                wb = base_flat[key][li]
+                if scalar:
+                    v, mse = _fit_scale_jit(entry.packed[li], wb, x, y,
+                                            entry.v_row[li], "scalar",
+                                            epochs=epochs, lr=lr)
+                    new_deltas[key] = dataclasses.replace(
+                        entry, v_row=entry.v_row.at[li].set(v),
+                        v_col=entry.v_col.at[li].set(v))
+                else:
+                    v_r, v_c, use_row, mses = fit_layer(
+                        entry, wb, x, y, li, epochs=epochs, lr=lr)
+                    new_deltas[key] = dataclasses.replace(
+                        entry,
+                        v_row=entry.v_row.at[li].set(v_r),
+                        v_col=entry.v_col.at[li].set(v_c),
+                        use_row=entry.use_row.at[li].set(use_row))
+                    report["axis"].setdefault(f"{group}.{proj}", []).append(
+                        "row" if bool(use_row) else "col")
+            dm = DeltaModel(deltas=new_deltas, extras=dm.extras)
+
+    fwd = jax.jit(lambda p, b: W.forward(p, b, cfg)[0])
+    teacher_logits = [fwd(ft_params, b) for b in batches]
+    dm, e2e_losses = e2e_calibrate(lambda p, b: fwd(p, b), base_params, dm,
+                                   teacher_logits, batches,
+                                   epochs=e2e_epochs, lr=e2e_lr)
+    report["e2e_losses"] = e2e_losses
+    return dm, report

@@ -1,0 +1,189 @@
+"""Core 1-bit delta math: sign extraction, bit packing, per-axis scales.
+
+Implements the paper's representation
+
+    What = v (.) B + W_b,   B = sign(W_f - W_b) in {-1,+1}^(dout x din)
+
+with B packed 1 bit per entry along the *input* axis (paper §Implementation
+remarks: "Masks B stay packed end-to-end (1 bit along input axis)").
+
+Conventions
+-----------
+* Weight matrices are (d_out, d_in) — output rows, input columns — matching
+  the paper's notation.  A linear layer computes ``y = x @ W.T``.
+* ``row`` mode: v has shape (d_out,) and scales whole output rows
+  (broadcast over columns).  ``col`` mode: v has shape (d_in,) and scales
+  whole input columns (broadcast over rows).  ``scalar`` mode (the BitDelta
+  baseline): v is a () scalar.
+* Packing: sign bits are mapped {-1 -> 0, +1 -> 1} and packed little-endian
+  into uint8 planes of shape (d_out, d_in // 8).  d_in must be a multiple
+  of 8 (true for every architecture in the zoo); ``pad_to_packable`` exists
+  for odd shapes in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AxisMode = Literal["row", "col", "scalar"]
+
+PACK = 8  # bits per uint8 plane
+
+
+# ---------------------------------------------------------------------------
+# sign / pack / unpack
+# ---------------------------------------------------------------------------
+
+def sign_mask(delta: jax.Array) -> jax.Array:
+    """sign(delta) in {-1, +1}; zeros map to +1 (paper fixes B at 1 bit,
+    forbidding explicit zeros — §4 Limitations)."""
+    return jnp.where(delta >= 0, jnp.int8(1), jnp.int8(-1))
+
+
+def pack_signs(signs: jax.Array) -> jax.Array:
+    """Pack a {-1,+1} (..., d_in) array into (..., d_in//8) uint8 planes.
+
+    Little-endian within each byte: bit j of byte i covers column i*8+j.
+    """
+    if signs.shape[-1] % PACK != 0:
+        raise ValueError(f"last dim {signs.shape[-1]} not a multiple of {PACK}")
+    bits = (signs > 0).astype(jnp.uint8)  # {-1,+1} -> {0,1}
+    bits = bits.reshape(*signs.shape[:-1], signs.shape[-1] // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_signs(packed: jax.Array, d_in: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_signs`: (..., d_in//8) uint8 -> (..., d_in) ±1."""
+    if packed.shape[-1] * PACK != d_in:
+        raise ValueError(
+            f"packed last dim {packed.shape[-1]} * {PACK} != d_in {d_in}")
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)  # (..., d_in//8, 8)
+    bits = bits.reshape(*packed.shape[:-1], d_in)
+    return (bits.astype(dtype) * 2 - 1).astype(dtype)
+
+
+def pad_to_packable(w: jax.Array) -> tuple[jax.Array, int]:
+    """Pad last dim up to a multiple of 8; returns (padded, original_d_in)."""
+    d_in = w.shape[-1]
+    rem = (-d_in) % PACK
+    if rem == 0:
+        return w, d_in
+    pad = [(0, 0)] * (w.ndim - 1) + [(0, rem)]
+    return jnp.pad(w, pad), d_in
+
+
+# ---------------------------------------------------------------------------
+# per-axis scale initialisation (Alg. 6 lines 3/5)
+# ---------------------------------------------------------------------------
+
+def init_scale(delta: jax.Array, mode: AxisMode) -> jax.Array:
+    """v0 = mean(|ΔW|, axis) — the paper's initialisation before training.
+
+    delta: (..., d_out, d_in); leading dims (stacked layers / experts) are
+    preserved — each stacked matrix gets its own per-axis vector.
+    row  -> mean over columns  -> (..., d_out)
+    col  -> mean over rows     -> (..., d_in)
+    scalar -> per-matrix mean  -> (...)
+    """
+    a = jnp.abs(delta)
+    if mode == "row":
+        return jnp.mean(a, axis=-1)
+    if mode == "col":
+        return jnp.mean(a, axis=-2)
+    if mode == "scalar":
+        return jnp.mean(a, axis=(-2, -1))
+    raise ValueError(mode)
+
+
+def broadcast_scale(v: jax.Array, mode: AxisMode) -> jax.Array:
+    """Reshape v so it broadcasts against a (d_out, d_in) sign matrix.
+
+    Supports stacked leading dims: v may be (..., d) — the trailing axis is
+    the per-axis dimension.
+    """
+    if mode == "row":
+        return v[..., :, None]
+    if mode == "col":
+        return v[..., None, :]
+    if mode == "scalar":
+        return v[..., None, None] if v.ndim else v
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# compress / reconstruct
+# ---------------------------------------------------------------------------
+
+def compress(w_base: jax.Array, w_ft: jax.Array, mode: AxisMode
+             ) -> tuple[jax.Array, jax.Array]:
+    """Compress a fine-tuned weight to (packed_mask, v0).
+
+    Returns packed uint8 (d_out, d_in//8) and the init scale for ``mode``.
+    """
+    delta = (w_ft - w_base).astype(jnp.float32)
+    packed = pack_signs(sign_mask(delta))
+    v0 = init_scale(delta, mode).astype(jnp.float16)
+    return packed, v0
+
+
+def reconstruct(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                mode: AxisMode, dtype=None) -> jax.Array:
+    """Ŵ = v ⊙ unpack(B) + W_b.  Pure-jnp reference path (the Pallas kernel
+    in ``repro.kernels.unpack_apply`` is the production path)."""
+    dtype = dtype or w_base.dtype
+    d_in = w_base.shape[-1]
+    signs = unpack_signs(packed, d_in, dtype=jnp.float32)
+    vb = broadcast_scale(v.astype(jnp.float32), mode)
+    return (vb * signs + w_base.astype(jnp.float32)).astype(dtype)
+
+
+def delta_matmul(x: jax.Array, packed: jax.Array, v: jax.Array,
+                 w_base: jax.Array, mode: AxisMode) -> jax.Array:
+    """On-the-fly y = x @ Ŵᵀ without densifying the delta *into HBM*.
+
+    Mathematically:
+      row:  y = x @ W_bᵀ + (x @ Sᵀ) * v        (v broadcasts over out dim)
+      col:  y = x @ W_bᵀ + ((x * v) @ Sᵀ)
+      scalar: y = x @ W_bᵀ + v * (x @ Sᵀ)
+    Reference path; the fused Pallas kernel lives in repro.kernels.bitlinear.
+    """
+    d_in = w_base.shape[-1]
+    signs = unpack_signs(packed, d_in, dtype=x.dtype)
+    base = x @ w_base.T.astype(x.dtype)
+    if mode == "row":
+        return base + (x @ signs.T) * v.astype(x.dtype)
+    if mode == "col":
+        return base + (x * v.astype(x.dtype)) @ signs.T
+    if mode == "scalar":
+        return base + v.astype(x.dtype) * (x @ signs.T)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# storage accounting (paper Table 2)
+# ---------------------------------------------------------------------------
+
+def artifact_bytes(d_out: int, d_in: int, mode: AxisMode) -> int:
+    """Bytes to store one compressed matrix: packed mask + FP16 vector."""
+    mask = d_out * d_in // PACK
+    if mode == "row":
+        vec = 2 * d_out
+    elif mode == "col":
+        vec = 2 * d_in
+    else:
+        vec = 2
+    return mask + vec
+
+
+def fp16_bytes(d_out: int, d_in: int) -> int:
+    return 2 * d_out * d_in
+
+
+def compression_ratio(d_out: int, d_in: int, mode: AxisMode) -> float:
+    return fp16_bytes(d_out, d_in) / artifact_bytes(d_out, d_in, mode)

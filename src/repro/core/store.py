@@ -1,0 +1,131 @@
+"""Delta artifact store: serialization + manifest + integrity.
+
+Artifact layout (one directory per fine-tuned variant):
+  manifest.json   paths, shapes, axis selections, dtypes, sha256 per tensor,
+                  base-checkpoint fingerprint (guards against applying a
+                  delta to the wrong base)
+  deltas.npz      packed masks (uint8) + selected scale vectors (fp16)
+                  + selector bits
+  extras.npz      uncompressed fine-tuned leaves (embeddings/norms), fp16
+
+Masks stay packed end-to-end (paper §Implementation remarks) — the loader
+transfers the packed buffer and unpacks on device via the Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import DeltaEntry, DeltaModel
+
+
+def _sha(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+def base_fingerprint(base_params) -> str:
+    """Cheap fingerprint of the base checkpoint (shapes + sampled bytes)."""
+    h = hashlib.sha256()
+    for path, leaf in sorted(
+            ((".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path), l)
+             for path, l in jax.tree_util.tree_flatten_with_path(
+                 base_params)[0])):
+        h.update(path.encode())
+        h.update(str(leaf.shape).encode())
+        arr = np.asarray(jax.device_get(leaf)).ravel()
+        h.update(arr[:64].tobytes())
+    return h.hexdigest()[:16]
+
+
+def save_artifact(dm: DeltaModel, out_dir: str, *,
+                  base_fp: Optional[str] = None,
+                  meta: Optional[dict] = None) -> dict:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest = {"version": 1, "base_fingerprint": base_fp,
+                "meta": meta or {}, "deltas": {}, "extras": {}}
+    dz, ez = {}, {}
+    for path, e in dm.deltas.items():
+        key = path.replace(".", "__")
+        packed = np.asarray(jax.device_get(e.packed))
+        use_row = np.asarray(jax.device_get(e.use_row))
+        v_row = np.asarray(jax.device_get(e.v_row)).astype(np.float16)
+        v_col = np.asarray(jax.device_get(e.v_col)).astype(np.float16)
+        dz[f"{key}__packed"] = packed
+        dz[f"{key}__v_row"] = v_row
+        dz[f"{key}__v_col"] = v_col
+        dz[f"{key}__use_row"] = use_row
+        manifest["deltas"][path] = {
+            "packed_shape": list(packed.shape),
+            "scalar": bool(e.scalar),
+            "sha": _sha(packed),
+            "axis_counts": {
+                "row": int(use_row.sum()),
+                "col": int(use_row.size - use_row.sum())},
+        }
+    for path, v in dm.extras.items():
+        key = path.replace(".", "__")
+        arr = np.asarray(jax.device_get(v)).astype(np.float16)
+        ez[key] = arr
+        manifest["extras"][path] = {"shape": list(arr.shape),
+                                    "sha": _sha(arr)}
+    np.savez(out / "deltas.npz", **dz)
+    np.savez(out / "extras.npz", **ez)
+    tmp = out / "manifest.json.tmp"
+    tmp.write_text(json.dumps(manifest, indent=2))
+    tmp.rename(out / "manifest.json")          # atomic finalize
+    manifest["artifact_bytes"] = sum(
+        f.stat().st_size for f in out.iterdir())
+    return manifest
+
+
+def load_artifact(in_dir: str, *, expect_base_fp: Optional[str] = None,
+                  verify: bool = True) -> DeltaModel:
+    path = pathlib.Path(in_dir)
+    manifest = json.loads((path / "manifest.json").read_text())
+    if expect_base_fp and manifest.get("base_fingerprint") and \
+            manifest["base_fingerprint"] != expect_base_fp:
+        raise ValueError(
+            f"artifact built for base {manifest['base_fingerprint']}, "
+            f"got {expect_base_fp}")
+    dz = np.load(path / "deltas.npz")
+    ez = np.load(path / "extras.npz")
+    deltas, extras = {}, {}
+    for p, info in manifest["deltas"].items():
+        key = p.replace(".", "__")
+        packed = dz[f"{key}__packed"]
+        if verify and _sha(packed) != info["sha"]:
+            raise IOError(f"corrupt mask for {p}")
+        deltas[p] = DeltaEntry(
+            packed=jnp.asarray(packed),
+            v_row=jnp.asarray(dz[f"{key}__v_row"]).astype(jnp.float32),
+            v_col=jnp.asarray(dz[f"{key}__v_col"]).astype(jnp.float32),
+            use_row=jnp.asarray(dz[f"{key}__use_row"]),
+            scalar=info["scalar"])
+    for p, info in manifest["extras"].items():
+        arr = ez[p.replace(".", "__")]
+        if verify and _sha(arr) != info["sha"]:
+            raise IOError(f"corrupt extra for {p}")
+        extras[p] = jnp.asarray(arr)
+    return DeltaModel(deltas=deltas, extras=extras)
+
+
+def save_checkpoint_fp16(params, out_path: str) -> int:
+    """Full fp16 checkpoint (the baseline the paper compares load against)."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "__".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf)).astype(np.float16)
+    p = pathlib.Path(out_path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(p, **flat)
+    return p.stat().st_size

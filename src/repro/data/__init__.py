@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, calib_stream,  # noqa: F401
+                                 make_batch_iterator)

@@ -1,0 +1,383 @@
+"""Static cost analyzer over optimized HLO text — with while-loop trip counts.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scan-based
+model (all of ours: layers, flash-attention chunks, SSD chunks) is
+undercounted by the trip count.  This walker parses the HLO module text,
+recurses through fusions / calls / while bodies / conditionals, and
+multiplies by ``backend_config["known_trip_count"]`` (fallback: the loop
+bound constant in the condition computation).
+
+Returned totals (per device, since the module is the SPMD-partitioned
+per-device program):
+  flops            dot FLOPs (2·M·N·K), the MXU work
+  bytes            fusion-idealized HBM traffic: the CPU backend wraps each
+                   elementwise op in its own trivial fusion, so op-level IO
+                   counting would overcount ~10× vs a real TPU compile.  We
+                   model TPU fusion instead: traffic is charged only at
+                   materialization boundaries (dot / reduce / concatenate /
+                   sort / scatter / collectives), elementwise+broadcast
+                   chains and CPU-inserted copy/transpose are free, gathers
+                   charge result+indices (not the table), dynamic-(update-)
+                   slice charges the slice (in-place donation).  Stated in
+                   EXPERIMENTS.md §Roofline.
+  collectives      per-op counts / result bytes / ring wire bytes,
+                   trip-multiplied
+Also exposes per-op-name flop aggregation for §Perf bottleneck hunting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_ZERO_BYTE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "iota"}
+
+# materialization boundaries under the TPU-fusion model (operands + result
+# charged); everything else is assumed fused → free.  copy/transpose are
+# excluded: the CPU backend inserts them for layout/loop-carry reasons that
+# TPU layout assignment avoids (verified via byte attribution on the
+# whisper train cell: >600 GB of CPU-only copy/transpose traffic).
+# static slice/pad also fuse into consumers on TPU (the causal-conv shift
+# chain showed 7 TB of fused-on-TPU slice traffic on the zamba train cell);
+# dynamic-(update-)slice are special-cased in cost().
+_MATERIALIZE = {"dot", "convolution", "reduce",
+                "sort", "scatter",
+                "concatenate", "reduce-window", "select-and-scatter",
+                "reverse", "cholesky", "triangular-solve",
+                "rng-bit-generator"}
+
+
+def _shape_info(seg: str):
+    """All (dtype, dims) in a type segment; returns (bytes, first_dims)."""
+    total = 0
+    first_dims = None
+    for dtype, dims in _SHAPE_RE.findall(seg):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dtype]
+        if first_dims is None:
+            first_dims = d
+    return total, (first_dims if first_dims is not None else [])
+
+
+def _balanced_operands(line: str, op_start: int) -> tuple[str, str]:
+    """Split '(operands)' at op_start into (operands_str, attrs_str)."""
+    depth = 0
+    for i in range(op_start, len(line)):
+        ch = line[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return line[op_start + 1:i], line[i + 1:]
+    return line[op_start + 1:], ""
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: list
+    operands: list
+    attrs: str
+    line: str
+
+
+def parse_computations(text: str) -> dict:
+    comps: dict[str, list[Instr]] = {}
+    current: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        name, type_seg, opcode = m.groups()
+        rb, rdims = _shape_info(type_seg)
+        op_paren = stripped.find(opcode + "(") + len(opcode)
+        operands_str, attrs = _balanced_operands(stripped, op_paren)
+        operands = re.findall(r"%([\w.\-]+)", operands_str)
+        comps[current].append(Instr(name, opcode, rb, rdims, operands,
+                                    attrs, stripped))
+    return comps
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if op == "all-reduce":
+        return 2 * (n - 1) / n
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_wire: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    flops_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] += v * mult
+        for k, v in other.flops_by_op.items():
+            self.flops_by_op[k] += v * mult
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        self.shapes = {c: {i.name: (i.result_bytes, i.result_dims)
+                           for i in instrs}
+                       for c, instrs in self.comps.items()}
+        self._memo: dict[str, Totals] = {}
+        # entry = computation whose header line had ENTRY; approximate:
+        # the one not referenced by any calls/body/condition
+        called = set()
+        for instrs in self.comps.values():
+            for i in instrs:
+                for rx in (_CALLS_RE, _BODY_RE, _COND_RE):
+                    for mm in rx.findall(i.attrs):
+                        called.add(mm)
+                m = _BRANCHES_RE.search(i.attrs)
+                if m:
+                    called.update(re.findall(r"%([\w.\-]+)", m.group(1)))
+        entries = [c for c in self.comps if c not in called]
+        self.entry = entries[-1] if entries else next(iter(self.comps))
+
+    # ---- per-instruction -------------------------------------------------
+    def _promoted_bf16(self, comp: str, i: Instr) -> bool:
+        """True when an f32 all-reduce's operands are convert-from-bf16
+        (CPU AllReducePromotion artifact; bf16 on TPU)."""
+        # result type segment sits between " = " and the opcode call; the
+        # instruction NAME also contains the opcode string, so split on
+        # " = " first
+        seg = i.line.split(" = ", 1)[-1].lstrip()
+        if not (seg.startswith("f32[") or seg.startswith("(f32[")):
+            return False
+        instr_map = {x.name: x for x in self.comps.get(comp, [])}
+        for o in i.operands:
+            src = instr_map.get(o)
+            if src is None:
+                return False
+            if src.opcode == "convert" or (src.opcode == "fusion"
+                                           and "convert" in src.name):
+                continue
+            return False
+        return bool(i.operands)
+
+    def _dot_flops(self, comp: str, i: Instr) -> float:
+        out_elems = 1
+        for d in i.result_dims:
+            out_elems *= d
+        contract = 1
+        m = _LHS_CDIMS_RE.search(i.attrs)
+        if m and i.operands:
+            lhs = self.shapes[comp].get(i.operands[0])
+            if lhs:
+                dims = lhs[1]
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contract *= dims[idx]
+        return 2.0 * out_elems * contract
+
+    def _operand_bytes(self, comp: str, i: Instr) -> int:
+        total = 0
+        for o in i.operands:
+            s = self.shapes[comp].get(o)
+            if s:
+                total += s[0]
+        return total
+
+    def _trip_count(self, i: Instr) -> int:
+        m = _TRIP_RE.search(i.attrs)
+        if m:
+            return int(m.group(1))
+        cond = _COND_RE.search(i.attrs)
+        if cond and cond.group(1) in self.comps:
+            consts = [int(x) for instr in self.comps[cond.group(1)]
+                      for x in re.findall(r"constant\((\d+)\)", instr.line)]
+            if consts:
+                return max(consts)
+        return 1
+
+    # ---- computation cost --------------------------------------------------
+    def cost(self, comp: Optional[str] = None) -> Totals:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        t = Totals()
+        self._memo[comp] = t  # guard cycles
+        for i in self.comps.get(comp, []):
+            opc = i.opcode
+            if opc == "while":
+                trips = self._trip_count(i)
+                body = _BODY_RE.search(i.attrs)
+                cond = _COND_RE.search(i.attrs)
+                if body and body.group(1) in self.comps:
+                    t.add(self.cost(body.group(1)), trips)
+                if cond and cond.group(1) in self.comps:
+                    t.add(self.cost(cond.group(1)), trips)
+                continue
+            if opc == "conditional":
+                m = _BRANCHES_RE.search(i.attrs)
+                if m:
+                    branches = re.findall(r"%([\w.\-]+)", m.group(1))
+                    costs = [self.cost(b) for b in branches
+                             if b in self.comps]
+                    if costs:
+                        t.add(max(costs, key=lambda c: c.flops))
+                continue
+            if opc in ("fusion", "call", "async-start"):
+                # recurse: inner materializing ops are charged there; the
+                # fusion node itself is free (TPU-fusion model)
+                m = _CALLS_RE.search(i.attrs)
+                if m and m.group(1) in self.comps:
+                    t.add(self.cost(m.group(1)))
+                continue
+            if opc in _COLLECTIVES or opc.rstrip("-start") in _COLLECTIVES:
+                base = opc[:-6] if opc.endswith("-start") else opc
+                if base in _COLLECTIVES:
+                    n = _group_size(i.attrs)
+                    nbytes = i.result_bytes
+                    # CPU-XLA promotes bf16 all-reduces to f32
+                    # (AllReducePromotion pass — TPU reduces bf16
+                    # natively): when the operand is a convert-from-bf16
+                    # fusion, charge the bf16 wire bytes
+                    if base == "all-reduce" and self._promoted_bf16(comp, i):
+                        nbytes //= 2
+                    t.coll_counts[base] += 1
+                    t.coll_bytes[base] += nbytes
+                    t.coll_wire[base] += nbytes * _wire_factor(base, n)
+                    t.bytes += nbytes + self._operand_bytes(comp, i) // (
+                        2 if nbytes < i.result_bytes else 1)
+                continue
+            if opc.endswith("-done"):
+                continue
+            if opc == "dot":
+                f = self._dot_flops(comp, i)
+                t.flops += f
+                key = "dot"
+                mm = re.search(r'op_name="([^"]*)"', i.attrs)
+                if mm:
+                    key = mm.group(1).split("/")[-1][:64]
+                t.flops_by_op[key] += f
+                t.bytes += i.result_bytes + self._operand_bytes(comp, i)
+                continue
+            if opc in ("exponential", "tanh", "log", "rsqrt", "power"):
+                n = 1
+                for d in i.result_dims:
+                    n *= d
+                t.transcendentals += n
+            if opc == "gather":
+                # TPU gather reads selected rows, not the whole table
+                idx_bytes = 0
+                if len(i.operands) > 1:
+                    s = self.shapes[comp].get(i.operands[1])
+                    idx_bytes = s[0] if s else 0
+                t.bytes += 2 * i.result_bytes + idx_bytes
+                continue
+            if opc == "dynamic-update-slice":
+                # in-place donation: traffic ≈ the update slice
+                upd_bytes = 0
+                if len(i.operands) > 1:
+                    s = self.shapes[comp].get(i.operands[1])
+                    upd_bytes = s[0] if s else 0
+                t.bytes += 2 * upd_bytes
+                continue
+            if opc == "dynamic-slice":
+                # fuses into its consumer on TPU; the consumer (dot etc.)
+                # charges the operand read — charging here double-counts
+                continue
+            if opc in _MATERIALIZE:
+                t.bytes += i.result_bytes + self._operand_bytes(comp, i)
+        self._memo[comp] = t
+        return t
+
+
+def analyze(text: str) -> dict:
+    model = HloCostModel(text)
+    t = model.cost()
+    top = sorted(t.flops_by_op.items(), key=lambda kv: -kv[1])[:12]
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "transcendentals": t.transcendentals,
+        "collectives": {
+            "counts": dict(t.coll_counts),
+            "result_bytes": dict(t.coll_bytes),
+            "wire_bytes": dict(t.coll_wire),
+            "total_wire_bytes": sum(t.coll_wire.values()),
+        },
+        "top_flop_ops": top,
+    }

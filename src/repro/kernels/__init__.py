@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+- ``unpack_apply``: loader-path dense reconstruction Ŵ = v⊙unpack(B) + W_b.
+- ``bitlinear``:   on-the-fly fused delta GEMM y = x @ Ŵᵀ.
+- ``flash_attention_fwd``: serving-prefill flash attention with
+  VMEM-resident logits (the memory-bound prefill cells' fix).
+
+``ref.py`` / models.attention hold the pure-jnp oracles; every kernel is
+validated against them in interpret mode (tests/test_kernels.py,
+tests/test_flash_kernel.py).
+"""
+from repro.kernels.ops import (bitlinear, flash_attention_fwd,  # noqa: F401
+                               unpack_apply)

@@ -1,0 +1,107 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles: per-axis-mode v reshaping, block-size selection (hardware-aligned
+where the shape allows, divisor fallback otherwise), interpret-mode fallback
+on CPU hosts (this container), and output dtype casting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitlinear as _bl
+from repro.kernels import unpack_apply as _ua
+
+PACK = 8
+
+# VMEM budget heuristics (v5e has ~128 MiB VMEM per core; stay well under).
+_TILE_M = 256
+_TILE_N = 512
+_TILE_K = 512
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(dim: int, target: int, multiple: int = 1) -> int:
+    """Largest divisor of ``dim`` that is <= target and a multiple of
+    ``multiple``; falls back to ``dim`` itself (always valid)."""
+    best = dim
+    for cand in range(min(dim, target), 0, -1):
+        if dim % cand == 0 and cand % multiple == 0:
+            best = cand
+            break
+    return best
+
+
+def _v2d(v: jax.Array, mode: str, d_out: int, d_in: int) -> jax.Array:
+    if mode == "row":
+        assert v.shape == (d_out,), (v.shape, d_out)
+        return v.reshape(d_out, 1)
+    if mode == "col":
+        assert v.shape == (d_in,), (v.shape, d_in)
+        return v.reshape(1, d_in)
+    if mode == "scalar":
+        return v.reshape(1, 1)
+    raise ValueError(mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_dtype"))
+def unpack_apply(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                 mode: str = "row", out_dtype=None) -> jax.Array:
+    """Production Ŵ = v ⊙ unpack(B) + W_b (loader hot path)."""
+    d_out, d_in = w_base.shape
+    out_dtype = out_dtype or w_base.dtype
+    bm = _pick_block(d_out, _TILE_M)
+    bn = _pick_block(d_in, _TILE_N, multiple=PACK)
+    return _ua.unpack_apply_p(
+        packed, _v2d(v, mode, d_out, d_in), w_base,
+        block_m=bm, block_n=bn, out_dtype=out_dtype,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset",
+                                              "kv_offset"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, q_offset: int = 0,
+                        kv_offset: int = 0) -> jax.Array:
+    """Pallas forward flash attention (serving/prefill hot path).
+
+    q (B, S, Hq, hd); k/v (B, T, Hkv, hd) — GQA via head index mapping.
+    Logits never leave VMEM (see kernels/flash_attn.py for the roofline
+    argument).  Forward-only: training uses models/attention.py.
+    """
+    from repro.kernels.flash_attn import flash_attention_fwd_p
+    b, s, hq, hd = q.shape
+    _, t, hkv, _ = k.shape
+    group = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, hd)
+    o = flash_attention_fwd_p(qf, kf, vf, group=group, causal=causal,
+                              q_offset=q_offset, kv_offset=kv_offset,
+                              interpret=_interpret())
+    return o.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def bitlinear(x: jax.Array, packed: jax.Array, v: jax.Array,
+              w_base: jax.Array, mode: str = "row") -> jax.Array:
+    """Fused y = x @ (v ⊙ unpack(B) + W_b)ᵀ, fp32 accumulate, cast to x.dtype.
+
+    x may have leading batch dims; they are flattened into M.
+    """
+    *lead, k_dim = x.shape
+    n, _ = w_base.shape
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    bm = _pick_block(m, _TILE_M)
+    bn = _pick_block(n, _TILE_N)
+    bk = _pick_block(k_dim, _TILE_K, multiple=PACK)
+    y = _bl.bitlinear_p(
+        x2, packed, _v2d(v, mode, n, k_dim), w_base,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    return y.astype(x.dtype).reshape(*lead, n)

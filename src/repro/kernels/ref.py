@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle here to within dtype
+tolerance (tests/test_kernels.py sweeps shapes/dtypes/modes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import delta as D
+
+
+def unpack_apply_ref(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                     mode: str, dtype=jnp.float32) -> jax.Array:
+    """Ŵ = v ⊙ unpack(B) + W_b  — dense reconstruction oracle."""
+    return D.reconstruct(packed, v, w_base, mode, dtype=dtype)
+
+
+def bitlinear_ref(x: jax.Array, packed: jax.Array, v: jax.Array,
+                  w_base: jax.Array, mode: str) -> jax.Array:
+    """y = x @ (v ⊙ unpack(B) + W_b)ᵀ — fused delta-GEMM oracle.
+
+    Computed the *dense* way (reconstruct then matmul) in fp32 so the oracle
+    is unambiguous; the kernel accumulates in fp32 too.
+    """
+    w_hat = D.reconstruct(packed, v, w_base, mode, dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ w_hat.T).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused dense reconstruction Ŵ = v ⊙ unpack(B) + W_b.
+
+This is the loader hot path (paper §3.2 "Storage and load-time"): after the
+packed mask + scale vector arrive in HBM (one transfer per module), this
+kernel streams W_b once and the packed mask at 1/16 the bytes of a bf16
+weight, unpacking to ±1 *inside VMEM* and applying the per-axis FMA on the
+VPU.  HBM traffic ≈ (1 + 1/16)·|W| reads + |W| writes — the unpack never
+round-trips a dense ±1 matrix through HBM.
+
+Layout contract (matches repro.core.delta):
+  packed : (d_out, d_in // 8) uint8, little-endian bit j ↔ column i*8+j
+  w_base : (d_out, d_in)
+  v2d    : row  (d_out, 1) · col (1, d_in) · scalar (1, 1)  — pre-reshaped
+           by ops.py so the kernel is mode-agnostic (pure broadcast FMA).
+
+Blocking: grid (d_out/bm, d_in/bn); bn must be a multiple of 8 (packing) and
+should be a multiple of 128 (lane width) in production.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 8
+
+
+def _unpack_tile(packed_tile: jax.Array, out_dtype) -> jax.Array:
+    """(bm, bn//8) uint8 -> (bm, bn) ±1 in out_dtype, little-endian."""
+    bm, bnp = packed_tile.shape
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)
+    bits = (packed_tile[:, :, None] >> shifts) & jnp.uint8(1)
+    bits = bits.reshape(bm, bnp * PACK)
+    return (bits.astype(out_dtype) * 2 - 1).astype(out_dtype)
+
+
+def _kernel(packed_ref, v_ref, wb_ref, out_ref):
+    signs = _unpack_tile(packed_ref[...], jnp.float32)
+    v = v_ref[...].astype(jnp.float32)          # (bm,1) | (1,bn) | (1,1)
+    wb = wb_ref[...].astype(jnp.float32)
+    out_ref[...] = (v * signs + wb).astype(out_ref.dtype)
+
+
+def unpack_apply_p(packed: jax.Array, v2d: jax.Array, w_base: jax.Array,
+                   *, block_m: int, block_n: int, out_dtype,
+                   interpret: bool) -> jax.Array:
+    d_out, d_in = w_base.shape
+    assert d_in % PACK == 0 and block_n % PACK == 0
+    assert d_out % block_m == 0 and d_in % block_n == 0
+    grid = (d_out // block_m, d_in // block_n)
+
+    vm, vn = v2d.shape  # (d_out,1) | (1,d_in) | (1,1)
+    v_block = (block_m if vm > 1 else 1, block_n if vn > 1 else 1)
+
+    def v_index(i, j):
+        return (i if vm > 1 else 0, j if vn > 1 else 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n // PACK), lambda i, j: (i, j)),
+            pl.BlockSpec(v_block, v_index),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), out_dtype),
+        interpret=interpret,
+    )(packed, v2d, w_base)

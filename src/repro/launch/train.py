@@ -1,0 +1,46 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 50 --ckpt-dir /tmp/ckpts [--grad-compress]
+
+Full (non-reduced) configs are for real accelerator fleets; on this CPU
+container use --reduced.  The loop auto-resumes from the newest valid
+checkpoint in --ckpt-dir (fault tolerance contract in train/loop.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpts")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.train.loop import LoopConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      batch_size=args.batch, seq_len=args.seq,
+                      peak_lr=args.lr, grad_compress=args.grad_compress)
+    trainer = Trainer(model, args.ckpt_dir, lcfg)
+    res = trainer.run()
+    print(f"completed={res['completed']} "
+          f"loss {res['losses'][0]:.4f} -> {res['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

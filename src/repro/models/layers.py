@@ -1,0 +1,145 @@
+"""Common building blocks: norms, RoPE, embeddings, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Param, dense_init, ones_init
+
+
+def cast_to(x: jax.Array, dtype_name: str) -> jax.Array:
+    return x.astype(jnp.dtype(dtype_name))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (fp32 internally)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Param:
+    return ones_init((d,), (None,))
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 statistics and an x.dtype data path — both ways.
+
+    Autodiff through an fp32 variance branch creates an fp32 (B,S,D)
+    cotangent that promotes the whole residual-stream gradient (and every
+    TP backward all-reduce riding on it) to fp32 — measured as 2× the
+    collective wire bytes on TP cells.  The hand-written VJP keeps all
+    (B,S,D) tensors in x.dtype; only rowwise statistics are fp32.
+    """
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_stats(x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return jax.lax.rsqrt(var + eps)              # fp32 (..., 1)
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_stats(x, eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rms_bwd(eps, res, dy):
+    x, scale, inv = res
+    d = x.shape[-1]
+    sc = scale.astype(x.dtype)
+    # t = Σ_D dy·scale·x   (fp32 rowwise scalar)
+    t = jnp.sum((dy * sc).astype(jnp.float32) * x.astype(jnp.float32),
+                axis=-1, keepdims=True)
+    coef = (inv ** 3 * (t / d)).astype(x.dtype)  # (..., 1)
+    dx = dy * sc * inv.astype(x.dtype) - x * coef
+    # scale broadcasts as a suffix of x.shape (may be multi-dim, e.g.
+    # per-head (H, hd) norms): reduce the leading broadcast dims
+    lead = tuple(range(x.ndim - scale.ndim))
+    dscale = jnp.sum((dy * x).astype(jnp.float32) * inv,
+                     axis=lead).astype(scale.dtype)
+    return dx.astype(x.dtype), dscale
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    theta may be a python float or a traced scalar (gemma3 per-layer base).
+    """
+    hd = x.shape[-1]
+    theta = jnp.asarray(theta, jnp.float32)
+    freqs = theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (S, d)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int) -> Param:
+    return dense_init(key, (vocab, d), ("vocab", "embed"), scale=1.0)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype: str) -> jax.Array:
+    return cast_to(jnp.take(table, tokens, axis=0), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_ff, d), ("ffn", "embed")),
+        "w_up": dense_init(k2, (d_ff, d), ("ffn", "embed")),
+        "w_down": dense_init(k3, (d, d_ff), ("embed", "ffn")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"].T.astype(x.dtype)) * (x @ p["w_up"].T.astype(x.dtype))
+    return h @ p["w_down"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Non-gated MLP (whisper)
+# ---------------------------------------------------------------------------
+
+def mlp2_init(key, d: int, d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d_ff, d), ("ffn", "embed")),
+        "w_out": dense_init(k2, (d, d_ff), ("embed", "ffn")),
+    }
+
+
+def mlp2_apply(p: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_in"].T.astype(x.dtype)) @ p["w_out"].T.astype(x.dtype)

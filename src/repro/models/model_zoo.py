@@ -1,0 +1,118 @@
+"""Unified model API: one ``Model`` facade over the four family modules.
+
+Methods (all functional, params = plain-array pytree after param.split):
+  init(rng)                     -> Param tree (arrays + logical axes)
+  forward(params, batch)        -> (logits, aux)          [train / eval]
+  prefill(params, batch, T)     -> (last_logits, cache)   [serving]
+  decode_step(params, tok, c)   -> (logits, cache)
+  init_cache(batch, T)          -> cache pytree
+  cache_pspecs(long_context)    -> logical-axes tree for the cache
+  input_specs(shape_spec)       -> ShapeDtypeStruct batch stand-ins
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer, whisper, xlstm, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    # -- construction ------------------------------------------------------
+    def init(self, rng) -> dict:
+        return self._mod.init(rng, self.cfg)
+
+    # -- compute -----------------------------------------------------------
+    def forward(self, params, batch):
+        return self._mod.forward(params, batch, self.cfg)
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        return self._mod.prefill(params, batch, self.cfg, max_len,
+                                 cache_dtype=cache_dtype)
+
+    def decode_step(self, params, token, cache):
+        return self._mod.decode_step(params, token, cache, self.cfg)
+
+    # -- caches ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return xlstm.init_state(cfg, batch)
+        if cfg.family == "hybrid":
+            return zamba.init_state(cfg, batch, max_len, dtype)
+        if cfg.family == "audio":
+            return whisper.init_cache(cfg, batch, max_len, dtype)
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+
+    def cache_pspecs(self, long_context: bool = False,
+                     kv_seq_shard: bool = False):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return xlstm.state_pspecs(cfg, long_context)
+        if cfg.family == "hybrid":
+            return zamba.state_pspecs(cfg, long_context)
+        if cfg.family == "audio":
+            return whisper.cache_pspecs(cfg, long_context, kv_seq_shard)
+        return transformer.cache_pspecs(cfg, long_context, kv_seq_shard)
+
+    # -- abstract inputs (dry-run) ------------------------------------------
+    def input_specs(self, seq_len: int, global_batch: int,
+                    kind: str = "train") -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+        For train/prefill: the full token batch (+ frontend stубs).
+        For decode: a single-token batch (the cache is built separately).
+        """
+        cfg = self.cfg
+        i32 = jnp.int32
+        if kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((global_batch,), i32)}
+        specs = {}
+        if cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (global_batch, n_img, cfg.d_model), jnp.bfloat16)
+            text_len = seq_len - n_img
+            specs["tokens"] = jax.ShapeDtypeStruct((global_batch, text_len), i32)
+        elif cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((global_batch, seq_len), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((global_batch, seq_len), i32)
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), i32)
+        return specs
+
+    def batch_pspecs(self, kind: str = "train") -> dict:
+        """Logical axes for input batches (mirrors input_specs keys)."""
+        cfg = self.cfg
+        if kind == "decode":
+            return {"tokens": ("act_batch",)}
+        specs = {}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = ("act_batch", "act_seq", "act_embed")
+        if cfg.family == "audio":
+            specs["frames"] = ("act_batch", "act_seq", "act_embed")
+        specs["tokens"] = ("act_batch", "act_seq")
+        if kind == "train":
+            specs["labels"] = ("act_batch", "act_seq")
+        return specs
+
+
+_FAMILY_MODULES = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "ssm": xlstm, "hybrid": zamba, "audio": whisper,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, _mod=_FAMILY_MODULES[cfg.family])

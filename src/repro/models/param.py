@@ -1,0 +1,82 @@
+"""Parameter containers: arrays carry their logical sharding axes at init.
+
+Every model init builds a pytree of :class:`Param` (array + logical axis
+names); ``split(params)`` separates it into (arrays, logical_specs) so the
+distribution layer (repro.distributed.sharding) can map logical axes to mesh
+axes without models knowing about meshes.
+
+Logical axis vocabulary (see distributed/sharding.py for the mesh mapping):
+  "embed"    d_model dims
+  "q_heads"  fused num_heads*head_dim output dims
+  "kv_heads" fused num_kv_heads*head_dim output dims
+  "ffn"      MLP hidden dims
+  "vocab"    vocabulary dims
+  "experts"  MoE expert dims
+  "ssm"      SSM inner dims
+  "layers"   stacked scan dims (never sharded)
+  None       replicated small dims (norm scales, per-axis delta vectors, ...)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Param:
+    """Array + logical axes.  Registered as a pytree (axes static) so
+    ``jax.eval_shape(model.init, rng)`` yields abstract Param trees for the
+    dry-run without allocating."""
+    value: jax.Array
+    axes: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+def dense_init(key, shape: Sequence[int], axes: Sequence[Optional[str]],
+               scale: Optional[float] = None, dtype=jnp.float32) -> Param:
+    """Variance-scaling normal init: std = scale or 1/sqrt(fan_in).
+
+    Weight convention: (d_out, d_in) — fan_in is the last dim.
+    """
+    fan_in = shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    val = (std * jax.random.normal(key, tuple(shape), jnp.float32)).astype(dtype)
+    assert len(axes) == len(shape), (axes, shape)
+    return Param(val, tuple(axes))
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(tuple(shape), dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(tuple(shape), dtype), tuple(axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split(params):
+    """(tree of Param) -> (tree of arrays, tree of logical-axis tuples)."""
+    arrays = jax.tree.map(lambda p: p.value, params, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.axes, params, is_leaf=is_param)
+    return arrays, specs
+
+
+def stack_layers(keyed_init, key, n: int):
+    """Initialise ``n`` copies of a block and stack each leaf along a new
+    leading "layers" axis (the scan dim)."""
+    keys = jax.random.split(key, n)
+    per_layer = [keyed_init(k) for k in keys]
+    def _stack(*ps):
+        vals = jnp.stack([p.value for p in ps])
+        return Param(vals, ("layers",) + ps[0].axes)
+    return jax.tree.map(_stack, *per_layer, is_leaf=is_param)
+
+
+def count_params(arrays) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(arrays))

@@ -1,0 +1,260 @@
+"""SSM / recurrent sequence-mixing primitives.
+
+Three cell families, each with a *chunkwise-parallel* training form and a
+*recurrent* single-step form (decode path; also the test oracle):
+
+* mLSTM (xLSTM): matrix memory C ∈ R^(hd×hd), exponential input gate,
+  sigmoid forget gate, max-stabilizer m.  Chunkwise form is exactly
+  equivalent to the recurrence (the stabilizer cancels in the output).
+* sLSTM (xLSTM): scalar memory with hidden-state recurrence (R·h_{t-1}
+  feeds the gates) — inherently sequential, implemented as lax.scan over
+  time (the xLSTM paper accepts this non-parallelizability).
+* Mamba2 (SSD): scalar-decay state S ∈ R^(P×N) per head; chunkwise SSD
+  with causal decay matrices, no stabilizer needed (log dA ≤ 0).
+
+Sequence layout: (B, S, H, ·); states carry (B, H, ·).
+All internal math fp32; outputs cast back to input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pick_chunk(s: int, target: int = 256) -> int:
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init_state(b: int, h: int, hd: int) -> dict:
+    return {
+        "C": jnp.zeros((b, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((b, h, hd), jnp.float32),
+        "m": jnp.zeros((b, h), jnp.float32),
+    }
+
+
+def mlstm_step(state: dict, q, k, v, i_gate, f_gate) -> tuple[dict, jax.Array]:
+    """One recurrent step.  q,k,v: (B,H,hd); gates: (B,H) pre-activations."""
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    li = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_act = jnp.exp(lf + state["m"] - m_new)[..., None]
+    i_act = jnp.exp(li - m_new)[..., None]
+    C = f_act[..., None] * state["C"] + i_act[..., None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = f_act * state["n"] + i_act * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h_out = (num / den).astype(q.dtype)
+    return {"C": C, "n": n, "m": m_new}, h_out
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, state: dict | None = None,
+                    chunk: int = 256) -> tuple[jax.Array, dict]:
+    """Parallel chunkwise mLSTM over a full sequence.
+
+    q,k,v: (B,S,H,hd); gates: (B,S,H).  Returns (h (B,S,H,hd), final state).
+    """
+    b, s, h, hd = q.shape
+    c = _pick_chunk(s, chunk)
+    nc = s // c
+    if state is None:
+        state = mlstm_init_state(b, h, hd)
+
+    def to_chunks(x):
+        return x.reshape(b, nc, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qf = to_chunks(q.astype(jnp.float32) * hd ** -0.5)   # (nc,B,c,H,hd)
+    kf = to_chunks(k.astype(jnp.float32))
+    vf = to_chunks(v.astype(jnp.float32))
+    li = to_chunks(i_gate.astype(jnp.float32))           # (nc,B,c,H)
+    lf = to_chunks(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)))
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, lic, lfc = inp
+        bcum = jnp.cumsum(lfc, axis=1)                    # (B,c,H) inclusive
+        a = lic - bcum                                    # a_s = ĩ_s − b_s
+        rm = jnp.maximum(m_p[:, None, :],
+                         jax.lax.cummax(a, axis=1))       # (B,c,H)
+        # intra-chunk decay D_{is} = exp(a_s − rm_i), s ≤ i
+        dmat = jnp.exp(a[:, None, :, :] - rm[:, :, None, :])      # (B,i,s,H)
+        dmat = jnp.where(causal[None, :, :, None], dmat, 0.0)
+        scores = jnp.einsum("bihd,bshd->bish", qc, kc)            # (B,i,s,H)
+        w = scores * dmat
+        o_intra = jnp.einsum("bish,bshd->bihd", w, vc)
+        nd_intra = jnp.sum(w, axis=2)                             # (B,i,H)
+        # inter-chunk (carry) contribution
+        g = jnp.exp(m_p[:, None, :] - rm)                         # (B,i,H)
+        o_inter = g[..., None] * jnp.einsum("bhkv,bihk->bihv", C_p, qc)
+        nd_inter = g * jnp.einsum("bhk,bihk->bih", n_p, qc)
+        m_i = bcum + rm
+        num = o_intra + o_inter
+        den = jnp.maximum(jnp.abs(nd_intra + nd_inter), jnp.exp(-m_i))
+        h_c = num / den[..., None]
+        # carry update:
+        # m_next = b_tot + max(m_p, max_s a_s)
+        # C_next = exp(b_tot + m_p − m_next)·C_p
+        #        + Σ_s exp(b_tot − b_s + ĩ_s − m_next)·k_s v_sᵀ
+        b_tot = bcum[:, -1, :]                                    # (B,H)
+        rm_c = rm[:, -1, :]
+        m_new = b_tot + rm_c
+        decay_carry = jnp.exp(b_tot + m_p - m_new)                # (B,H)
+        kv_w = jnp.exp((b_tot[:, None, :] - bcum + lic) - m_new[:, None, :])
+        C_new = decay_carry[..., None, None] * C_p + \
+            jnp.einsum("bsh,bshk,bshv->bhkv", kv_w, kc, vc)
+        n_new = decay_carry[..., None] * n_p + \
+            jnp.einsum("bsh,bshk->bhk", kv_w, kc)
+        return (C_new, n_new, m_new), h_c
+
+    (C_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]),
+        (qf, kf, vf, li, lf))
+    h_out = hs.swapaxes(0, 1).reshape(b, s, h, hd).astype(q.dtype)
+    return h_out, {"C": C_f, "n": n_f, "m": m_f}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init_state(b: int, h: int, hd: int) -> dict:
+    return {
+        "c": jnp.zeros((b, h, hd), jnp.float32),
+        "n": jnp.ones((b, h, hd), jnp.float32),
+        "h": jnp.zeros((b, h, hd), jnp.float32),
+        "m": jnp.zeros((b, h, hd), jnp.float32),
+    }
+
+
+def slstm_step(state: dict, zx, ix, fx, ox, r_z, r_i, r_f, r_o
+               ) -> tuple[dict, jax.Array]:
+    """One sLSTM step with per-head recurrent weights.
+
+    zx/ix/fx/ox: (B,H,hd) input-projected pre-activations;
+    r_*: (H, hd, hd) block-diagonal recurrent weights acting on h_{t-1}.
+    """
+    hp = state["h"]
+    rec = lambda r: jnp.einsum("bhd,hde->bhe", hp, r)
+    z = jnp.tanh(zx.astype(jnp.float32) + rec(r_z))
+    li = ix.astype(jnp.float32) + rec(r_i)
+    lf = jax.nn.log_sigmoid(fx.astype(jnp.float32) + rec(r_f))
+    o = jax.nn.sigmoid(ox.astype(jnp.float32) + rec(r_o))
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_act = jnp.exp(lf + state["m"] - m_new)
+    i_act = jnp.exp(li - m_new)
+    c = f_act * state["c"] + i_act * z
+    n = f_act * state["n"] + i_act
+    h_new = o * (c / jnp.maximum(n, 1e-6))
+    return {"c": c, "n": n, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_scan(zx, ix, fx, ox, r_z, r_i, r_f, r_o, state: dict | None = None
+               ) -> tuple[jax.Array, dict]:
+    """Sequential sLSTM over (B,S,H,hd) pre-activations."""
+    b, s, h, hd = zx.shape
+    if state is None:
+        state = slstm_init_state(b, h, hd)
+
+    def step(st, xs):
+        return slstm_step(st, *xs, r_z, r_i, r_f, r_o)
+
+    xs = tuple(x.swapaxes(0, 1) for x in (zx, ix, fx, ox))
+    final, hs = jax.lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1).astype(zx.dtype), final
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba_init_state(b: int, h: int, p: int, n: int) -> jax.Array:
+    return jnp.zeros((b, h, p, n), jnp.float32)
+
+
+def mamba_step(state: jax.Array, x, bm, cm, dt, a_log, d_skip
+               ) -> tuple[jax.Array, jax.Array]:
+    """One SSD step.  x: (B,H,P); bm/cm: (B,N); dt: (B,H);
+    a_log (H,), d_skip (H,)."""
+    xf = x.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,) negative
+    da = jnp.exp(dt.astype(jnp.float32) * a)              # (B,H)
+    upd = dt.astype(jnp.float32)[..., None, None] * (
+        xf[..., :, None] * bm.astype(jnp.float32)[:, None, None, :])
+    s_new = da[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cm.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    return s_new, y.astype(x.dtype)
+
+
+def mamba_chunkwise(x, bm, cm, dt, a_log, d_skip,
+                    state: jax.Array | None = None, chunk: int = 128
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Chunkwise-parallel SSD.
+
+    x: (B,S,H,P); bm/cm: (B,S,N) (single B/C group shared over heads);
+    dt: (B,S,H) post-softplus; a_log/d_skip: (H,).
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    c = _pick_chunk(s, chunk)
+    nc = s // c
+    if state is None:
+        state = mamba_init_state(b, h, p, n)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)
+
+    def to_chunks(t):
+        return t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+    xc = to_chunks(x.astype(jnp.float32))                 # (nc,B,c,H,P)
+    bc = to_chunks(bm.astype(jnp.float32))                # (nc,B,c,N)
+    cc = to_chunks(cm.astype(jnp.float32))
+    dtc = to_chunks(dt.astype(jnp.float32))               # (nc,B,c,H)
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    lp_dtype = x.dtype  # bf16 in production: the (B,c,c,H) intra-chunk
+    # matrices dominate SSD HBM traffic — keep them in the input dtype and
+    # let the einsums accumulate fp32 (preferred_element_type)
+
+    def chunk_step(s_p, inp):
+        xk, bk, ck, dtk = inp
+        ldak = dtk * a                                    # (B,c,H) log dA ≤ 0
+        lcum = jnp.cumsum(ldak, axis=1)                   # inclusive
+        # intra: M_{is} = (C_i·B_s)·exp(L_i − L_s)·dt_s for s ≤ i
+        cb = jnp.einsum("bin,bsn->bis", ck.astype(lp_dtype),
+                        bk.astype(lp_dtype),
+                        preferred_element_type=jnp.float32)  # (B,i,s)
+        decay = jnp.exp(lcum[:, :, None, :] - lcum[:, None, :, :])  # (B,i,s,H)
+        decay = jnp.where(causal[None, :, :, None], decay, 0.0)
+        m = (cb[..., None] * decay * dtk[:, None, :, :]).astype(lp_dtype)
+        y = jnp.einsum("bish,bshp->bihp", m, xk.astype(lp_dtype),
+                       preferred_element_type=jnp.float32)
+        # inter: exp(L_i)·C_i·S_prev
+        y = y + jnp.exp(lcum)[..., None] * jnp.einsum(
+            "bhpn,bin->bihp", s_p, ck)
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xk
+        # carry: S_next = exp(L_c)·S_prev + Σ_s exp(L_c − L_s)·dt_s·x_s ⊗ B_s
+        l_tot = lcum[:, -1, :]                            # (B,H)
+        w = jnp.exp(l_tot[:, None, :] - lcum) * dtk       # (B,s,H)
+        s_new = jnp.exp(l_tot)[..., None, None] * s_p + \
+            jnp.einsum("bsh,bshp,bsn->bhpn", w, xk, bk)
+        return s_new, y
+
+    s_f, ys = jax.lax.scan(chunk_step, state, (xc, bc, cc, dtc))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p).astype(x.dtype)
+    return y, s_f

@@ -1,0 +1,416 @@
+"""Decoder-only transformer LM: dense, MoE, VLM and local:global variants.
+
+One scanned block definition covers deepseek-7b, qwen3-8b, starcoder2-3b,
+gemma3-12b (5:1 local:global via per-layer scanned window/theta arrays),
+moonshot / deepseek-moe (MoE blocks + unrolled first-dense layers) and
+internvl2 (stub patch embeddings prepended to the token stream).
+
+Forward (train / prefill): flat ``lax.scan`` over layers with optional
+per-layer remat.  Decode: super-block scan — layers reshaped to
+(n_super, pattern_len, ...) so heterogeneous KV caches (1024-slot ring for
+local layers vs full-length for global layers) stay uniform under scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models.layers import (cast_to, embed_init, embed_lookup, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.param import dense_init, stack_layers
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_pattern(cfg) -> list[dict]:
+    """Static per-super-block layer descriptors.  Uniform archs have a
+    single-entry pattern; gemma3 has [local×5, global]."""
+    if cfg.local_global_pattern > 0:
+        local = {"window": cfg.sliding_window, "theta": cfg.rope_theta_local}
+        glob = {"window": 0, "theta": cfg.rope_theta}
+        return [dict(local) for _ in range(cfg.local_global_pattern)] + [glob]
+    return [{"window": cfg.sliding_window, "theta": cfg.rope_theta}]
+
+
+def scan_layer_meta(cfg, n_layers: int) -> tuple[jax.Array, jax.Array]:
+    """(theta (L,), window (L,)) arrays for the flat training scan."""
+    pat = layer_pattern(cfg)
+    thetas = jnp.array([pat[i % len(pat)]["theta"] for i in range(n_layers)],
+                       jnp.float32)
+    windows = jnp.array([pat[i % len(pat)]["window"] for i in range(n_layers)],
+                        jnp.int32)
+    return thetas, windows
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, moe_layer: bool) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    if moe_layer:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init(rng, cfg) -> dict:
+    keys = jax.random.split(rng, 4)
+    is_moe = cfg.family == "moe"
+    n_pre = cfg.moe_first_dense if is_moe else 0
+    n_scan = cfg.num_layers - n_pre
+    params = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "layers": stack_layers(
+            lambda k: _block_init(k, cfg, moe_layer=is_moe), keys[1], n_scan),
+    }
+    if n_pre:
+        params["pre_layers"] = stack_layers(
+            lambda k: _block_init(k, cfg, moe_layer=False), keys[2], n_pre)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[3], (cfg.padded_vocab, cfg.d_model),
+                                       ("vocab", "embed"), scale=cfg.d_model ** -0.5)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
+               decode_pos=None, io=None):
+    """Attention sub-block.  Returns (out, (k, v)) — k/v exported for cache
+    building during prefill.  ``io`` (dict or None) collects per-linear
+    (input, output) pairs — the functional stand-in for the paper's
+    PyTorch forward hooks (calibration cache, Alg. 3)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, theta)
+    if kv_override is None:
+        o = A.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        k_cache, v_cache, slot_pos = kv_override
+        o = A.decode_attention(q, k_cache, v_cache, slot_pos, decode_pos,
+                               window=0)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    # constraint forces the row-parallel psum HERE, in bf16 — without it
+    # GSPMD defers the reduction into the next op's fp32 domain (rmsnorm
+    # upcast), doubling the wire bytes of every TP all-reduce
+    wo_out = lc(o @ p["attn"]["wo"].T.astype(x.dtype),
+                "act_batch", "act_seq", None)
+    if io is not None:
+        b, s, _ = x.shape
+        io["attn.wq"] = (h, q.reshape(b, s, -1))
+        io["attn.wk"] = (h, k.reshape(b, s, -1))
+        io["attn.wv"] = (h, v.reshape(b, s, -1))
+        io["attn.wo"] = (o, wo_out)
+    return x + wo_out, (k, v)
+
+
+def _ffn_part(p, x, cfg, io=None):
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = MOE.moe_apply(p["moe"], h, cfg)
+    else:
+        y, aux = lc(mlp_apply(p["mlp"], h),
+                    "act_batch", "act_seq", None), jnp.float32(0)
+        if io is not None:
+            gate = h @ p["mlp"]["w_gate"].T.astype(h.dtype)
+            up = h @ p["mlp"]["w_up"].T.astype(h.dtype)
+            down_in = jax.nn.silu(gate) * up
+            io["mlp.w_gate"] = (h, gate)
+            io["mlp.w_up"] = (h, up)
+            io["mlp.w_down"] = (down_in, y)
+    return x + y, aux
+
+
+def block_apply(p, x, cfg, positions, theta, window, io=None):
+    # bf16 residual-stream boundary: the block-input cotangent (where the
+    # column-parallel backward psum lands) stays bf16
+    x = lc(x, "act_batch", "act_seq", None)
+    x, kv = _attn_part(p, x, cfg, positions, theta, window, io=io)
+    x, aux = _ffn_part(p, x, cfg, io=io)
+    return x, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding front (handles vlm prefix)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg) -> jax.Array:
+    """params is the plain-array tree (post param.split)."""
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = cast_to(batch["image_embeds"], cfg.compute_dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return lc(x, "act_batch", "act_seq", "act_embed")
+
+
+def _unembed(params, x, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ table.T.astype(x.dtype)
+    return lc(logits, "act_batch", "act_seq", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill teacher-forced)
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg, collect_kv: bool = False,
+            collect_io: bool = False):
+    """-> (logits (B,S,V), aux dict).
+
+    aux["kv"] (L,B,S,Hkv,hd)×2 when collect_kv (prefill cache building).
+    aux["io"] {proj_name: (X (L,B,S,·), Y (L,B,S,·))} when collect_io — the
+    calibration cache stand-in for the paper's forward hooks; stacked over
+    scan layers, so one forward yields every layer's linear IO.
+    """
+    x = embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    aux_total = jnp.float32(0)
+    kv_all = []
+    pre_io = []
+
+    n_pre = 0
+    if "pre_layers" in params:
+        pre = params["pre_layers"]
+        n_pre = jax.tree.leaves(pre)[0].shape[0]
+        for i in range(n_pre):
+            pi = jax.tree.map(lambda a: a[i], pre)
+            io_i = {} if collect_io else None
+            x, kv, aux = block_apply(pi, x, cfg, positions,
+                                     cfg.rope_theta, cfg.sliding_window,
+                                     io=io_i)
+            aux_total += aux
+            if collect_kv:
+                kv_all.append(kv)
+            if collect_io:
+                pre_io.append(io_i)
+
+    thetas, windows = scan_layer_meta(cfg, cfg.num_layers - n_pre)
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        lp, theta, window = xs
+        io_i = {} if collect_io else None
+        h, kv, aux = block_apply(lp, h, cfg, positions, theta, window,
+                                 io=io_i)
+        ys = (kv if collect_kv else None, io_i if collect_io else None)
+        return (h, aux_acc + aux), ys
+
+    body_fn = body
+    if cfg.remat and not collect_io:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    (x, aux_total), (kv_scan, io_scan) = jax.lax.scan(
+        body_fn, (x, aux_total), (params["layers"], thetas, windows))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    aux = {"moe_aux": aux_total}
+    if collect_kv:
+        if kv_all:
+            pre_k = jnp.stack([kv[0] for kv in kv_all])
+            pre_v = jnp.stack([kv[1] for kv in kv_all])
+            aux["pre_kv"] = (pre_k, pre_v)
+        aux["kv"] = kv_scan
+    if collect_io:
+        aux["io"] = io_scan
+        if pre_io:
+            aux["pre_io"] = jax.tree.map(lambda *a: jnp.stack(a), *pre_io)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode: caches + single-token step
+# ---------------------------------------------------------------------------
+
+def _cache_sizes(cfg, max_len: int) -> list[int]:
+    """Per-pattern-position cache length."""
+    return [min(e["window"], max_len) if e["window"] > 0 else max_len
+            for e in layer_pattern(cfg)]
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    pat = layer_pattern(cfg)
+    n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
+    n_scan = cfg.num_layers - n_pre
+    assert n_scan % len(pat) == 0, \
+        f"num_layers {cfg.num_layers} incompatible with pattern {len(pat)}"
+    n_super = n_scan // len(pat)
+    sizes = _cache_sizes(cfg, max_len)
+
+    def stack_caches(n_stack, size):
+        one = A.make_kv_cache(batch, size, cfg.num_kv_heads, cfg.head_dim, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_stack,) + a.shape).copy(), one)
+
+    cache = {"pos": jnp.int32(0),
+             "slots": [stack_caches(n_super, sz) for sz in sizes]}
+    if n_pre:
+        cache["pre"] = stack_caches(n_pre, max_len)
+    return cache
+
+
+def cache_pspecs(cfg, long_context: bool,
+                 kv_seq_shard: bool = False) -> object:
+    """Logical-axes tree matching init_cache output (for sharding).
+
+    kv_seq_shard: shard the cache SEQUENCE over the model axis — the
+    distributed flash-decode layout used when kv-head counts don't divide
+    the tensor-parallel axis (qwen3 kv=8 vs 16): attention reductions over
+    the sharded T dim lower to tiny (B,H)/(B,H,hd) psums instead of
+    full-logit all-reduces from a head-dim-sharded contraction."""
+    if long_context:
+        seq_ax = "act_seq"
+    elif kv_seq_shard:
+        seq_ax = "act_seq_tp"
+    else:
+        seq_ax = None
+    kv_heads_ax = None if kv_seq_shard else "act_kv"
+    hd_ax = None if kv_seq_shard else "act_hd"
+    kv_axes = {"k": (None, "act_batch", seq_ax, kv_heads_ax, hd_ax),
+               "v": (None, "act_batch", seq_ax, kv_heads_ax, hd_ax),
+               "slot_pos": (None, seq_ax)}
+    # ring (windowed) caches are small: never sequence-sharded
+    ring_axes = {"k": (None, "act_batch", None, "act_kv", "act_hd"),
+                 "v": (None, "act_batch", None, "act_kv", "act_hd"),
+                 "slot_pos": (None, None)}
+    pat = layer_pattern(cfg)
+    spec = {"pos": (), "slots": [ring_axes if e["window"] > 0 else kv_axes
+                                 for e in pat]}
+    n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
+    if n_pre:
+        spec["pre"] = kv_axes
+    return spec
+
+
+def _decode_block(p, x, cfg, layer_cache, pat_entry, pos):
+    """One layer in decode mode; returns (x, updated layer cache)."""
+    window = pat_entry["window"]
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"])
+    new_cache = A.cache_insert(layer_cache, k, v, pos, ring=window > 0)
+    o = A.decode_attention(q, new_cache["k"], new_cache["v"],
+                           new_cache["slot_pos"], pos, window=window)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    x = x + o @ p["attn"]["wo"].T.astype(x.dtype)
+    x, _ = _ffn_part(p, x, cfg)
+    return x, new_cache
+
+
+def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos):
+    """One layer in decode mode against a STACKED cache carried by the
+    scan: inserts one token in place, reads the layer slice for attention.
+    Returns (x, updated stacked caches)."""
+    window = pat_entry["window"]
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"])
+    caches = A.cache_insert_stacked(caches, idx, k, v, pos,
+                                    ring=window > 0)
+    view = A.cache_layer_view(caches, idx)
+    o = A.decode_attention(q, view["k"], view["v"], view["slot_pos"], pos,
+                           window=window)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    x = x + o @ p["attn"]["wo"].T.astype(x.dtype)
+    x, _ = _ffn_part(p, x, cfg)
+    return x, caches
+
+
+def decode_step(params, token, cache, cfg):
+    """token (B,) int32 -> (logits (B,V), updated cache)."""
+    pos = cache["pos"]
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x = lc(x, "act_batch", None, "act_embed")
+    pat = layer_pattern(cfg)
+
+    new_cache = {"pos": pos + 1, "slots": None}
+    if "pre_layers" in params:
+        pre = params["pre_layers"]
+        n_pre = jax.tree.leaves(pre)[0].shape[0]
+        pre_out = []
+        for i in range(n_pre):
+            pi = jax.tree.map(lambda a: a[i], pre)
+            ci = jax.tree.map(lambda a: a[i], cache["pre"])
+            x, ci_new = _decode_block(
+                pi, x, cfg, ci, {"window": 0, "theta": cfg.rope_theta}, pos)
+            pre_out.append(ci_new)
+        new_cache["pre"] = jax.tree.map(lambda *a: jnp.stack(a), *pre_out)
+
+    n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
+    n_scan = cfg.num_layers - n_pre
+    n_super = n_scan // len(pat)
+    # reshape flat (L, ...) params to (n_super, pattern_len, ...)
+    sup_params = jax.tree.map(
+        lambda a: a.reshape(n_super, len(pat), *a.shape[1:]), params["layers"])
+
+    # caches ride in the scan CARRY (in-place one-token DUS per layer);
+    # passing them as xs/ys would rewrite the full cache every step
+    def body(carry, xs):
+        h, slots = carry
+        lp, idx = xs
+        new_slots = []
+        for j, entry in enumerate(pat):
+            pj = jax.tree.map(lambda a: a[j], lp)
+            h, cj = _decode_block_stacked(pj, h, cfg, slots[j], idx,
+                                          entry, pos)
+            new_slots.append(cj)
+        return (h, new_slots), None
+
+    (x, new_slots), _ = jax.lax.scan(
+        body, (x, list(cache["slots"])),
+        (sup_params, jnp.arange(n_super)))
+    new_cache["slots"] = new_slots
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: full forward + cache build
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+    """Teacher-forced pass over the prompt; returns (last_logits, cache)."""
+    logits, aux = forward(params, batch, cfg, collect_kv=True)
+    b = batch["tokens"].shape[0]
+    s = logits.shape[1]
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    pat = layer_pattern(cfg)
+    k_scan, v_scan = aux["kv"]          # (L_scan, B, S, Hkv, hd)
+    n_scan = k_scan.shape[0]
+    n_super = n_scan // len(pat)
+    k_sup = k_scan.reshape(n_super, len(pat), *k_scan.shape[1:])
+    v_sup = v_scan.reshape(n_super, len(pat), *v_scan.shape[1:])
+
+    new_slots = []
+    for j, entry in enumerate(pat):
+        slot = cache["slots"][j]
+        if entry["window"] > 0:
+            upd = jax.vmap(lambda c, kk, vv: A.prefill_ring(
+                c, kk, vv, entry["window"]))(slot, k_sup[:, j], v_sup[:, j])
+        else:
+            upd = jax.vmap(lambda c, kk, vv: A.cache_insert(c, kk, vv, 0))(
+                slot, k_sup[:, j], v_sup[:, j])
+        new_slots.append(upd)
+    cache["slots"] = new_slots
+    if "pre_kv" in aux:
+        pk, pv = aux["pre_kv"]
+        cache["pre"] = jax.vmap(lambda c, kk, vv: A.cache_insert(c, kk, vv, 0))(
+            cache["pre"], pk, pv)
+    cache["pos"] = jnp.int32(s)
+    return logits[:, -1, :], cache

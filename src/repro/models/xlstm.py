@@ -1,0 +1,317 @@
+"""xLSTM language model (xlstm-350m): mLSTM + sLSTM blocks, pattern 7:1.
+
+Block structure follows arXiv:2405.04517 (knobs noted in DESIGN.md §8):
+* mLSTM block: pre-LN → up-proj ×2 (mixer + gate branch) → causal conv4 →
+  q/k from conv path, v from pre-conv path → chunkwise matrix-memory cell →
+  per-head RMS norm → SiLU-gated output → down-proj.  O(1) decode state.
+* sLSTM block: pre-LN → causal conv4 feeding i/f gates → scalar-memory
+  recurrence with block-diagonal per-head recurrent weights → per-head
+  norm → gated 4/3 FFN.  Sequential over time (lax.scan).
+
+Layers scan as super-blocks of (7 mLSTM, 1 sLSTM); decode state is an
+explicit pytree so serving hot-swap works identically to transformers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import ssm
+from repro.models.layers import embed_init, embed_lookup, rmsnorm, rmsnorm_init
+from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (B,S,C), w (K,C) depthwise; left-padded causal."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, j:j + s] * w[j][None, None, :].astype(x.dtype)
+            for j in range(k))
+    return y
+
+
+def conv_step(window: jax.Array, x_new: jax.Array, w: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """window (B,K-1,C) past inputs; returns (new window, conv output (B,C))."""
+    k = w.shape[0]
+    full = jnp.concatenate([window, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, w.astype(x_new.dtype))
+    return full[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": rmsnorm_init(d),
+        "w_up": dense_init(ks[0], (di, d), ("ssm", "embed")),
+        "w_gate": dense_init(ks[1], (di, d), ("ssm", "embed")),
+        "conv": dense_init(ks[2], (cfg.ssm_conv, di), (None, "ssm"), scale=0.3),
+        "wq": dense_init(ks[3], (di, di), ("ssm", None)),
+        "wk": dense_init(ks[4], (di, di), ("ssm", None)),
+        "wv": dense_init(ks[5], (di, di), ("ssm", None)),
+        "w_if": dense_init(ks[6], (2 * h, di), (None, "ssm"), scale=0.02),
+        "b_if": zeros_init((2 * h,), (None,)),
+        "out_norm": ones_init((di,), (None,)),
+        "w_down": dense_init(ks[7], (d, di), ("embed", "ssm")),
+    }
+
+
+def _mlstm_heads(cfg):
+    di = 2 * cfg.d_model
+    return cfg.num_heads, di // cfg.num_heads
+
+
+def mlstm_block_state(cfg, batch: int) -> dict:
+    h, hd = _mlstm_heads(cfg)
+    di = 2 * cfg.d_model
+    return {"cell": ssm.mlstm_init_state(batch, h, hd),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)}
+
+
+def _mlstm_pre(p, x, cfg):
+    """Shared projection work for both seq and step paths (pre-conv)."""
+    hcount, hd = _mlstm_heads(cfg)
+    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xm = xi @ p["w_up"].T.astype(x.dtype)
+    z = xi @ p["w_gate"].T.astype(x.dtype)
+    return xm, z
+
+
+def mlstm_block_apply(p, x, cfg, state: dict):
+    """Sequence path: x (B,S,D) -> (y, new state)."""
+    b, s, d = x.shape
+    hcount, hd = _mlstm_heads(cfg)
+    xm, z = _mlstm_pre(p, x, cfg)
+    xc = jax.nn.silu(causal_conv(xm, p["conv"]))
+    xc = lc(xc, "act_batch", "act_seq", "act_ssm")
+    q = (xc @ p["wq"].T.astype(x.dtype)).reshape(b, s, hcount, hd)
+    k = (xc @ p["wk"].T.astype(x.dtype)).reshape(b, s, hcount, hd) * hd ** -0.5
+    v = (xm @ p["wv"].T.astype(x.dtype)).reshape(b, s, hcount, hd)
+    gates = xc @ p["w_if"].T.astype(x.dtype) + p["b_if"].astype(x.dtype)
+    ig, fg = jnp.split(gates, 2, axis=-1)              # (B,S,H)
+    h_seq, cell = ssm.mlstm_chunkwise(q, k, v, ig, fg, state=state["cell"])
+    h_seq = rmsnorm(h_seq, p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
+    y = (h_seq.reshape(b, s, 2 * d) * jax.nn.silu(z)) @ p["w_down"].T.astype(x.dtype)
+    # conv window for decode continuation
+    di = 2 * d
+    tail = jnp.concatenate(
+        [state["conv"].astype(xm.dtype), xm], axis=1)[:, -(cfg.ssm_conv - 1):]
+    return x + y, {"cell": cell, "conv": tail.astype(jnp.float32)}
+
+
+def mlstm_block_step(p, x, cfg, state: dict):
+    """Decode path: x (B,1,D)."""
+    b, _, d = x.shape
+    hcount, hd = _mlstm_heads(cfg)
+    xm, z = _mlstm_pre(p, x, cfg)
+    conv_win, xc1 = conv_step(state["conv"].astype(xm.dtype), xm[:, 0], p["conv"])
+    xc = jax.nn.silu(xc1)[:, None, :]
+    q = (xc @ p["wq"].T.astype(x.dtype)).reshape(b, hcount, hd)
+    k = (xc @ p["wk"].T.astype(x.dtype)).reshape(b, hcount, hd) * hd ** -0.5
+    v = (xm @ p["wv"].T.astype(x.dtype)).reshape(b, hcount, hd)
+    gates = (xc @ p["w_if"].T.astype(x.dtype) + p["b_if"].astype(x.dtype))[:, 0]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    cell, h_t = ssm.mlstm_step(state["cell"], q, k, v, ig, fg)
+    h_t = rmsnorm(h_t[:, None].reshape(b, 1, hcount, hd),
+                  p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
+    y = (h_t.reshape(b, 1, 2 * d) * jax.nn.silu(z)) @ p["w_down"].T.astype(x.dtype)
+    return x + y, {"cell": cell, "conv": conv_win.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ffn = max(64, int(4 * d / 3) // 64 * 64)
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": rmsnorm_init(d),
+        "conv": dense_init(ks[0], (cfg.ssm_conv, d), (None, "embed"), scale=0.3),
+        "w_zi": dense_init(ks[1], (2 * d, d), (None, "embed")),   # z,o from x
+        "w_if": dense_init(ks[2], (2 * d, d), (None, "embed")),   # i,f from conv
+        "r_z": dense_init(ks[3], (h, hd, hd), (None, None, None), scale=0.1),
+        "r_i": dense_init(ks[4], (h, hd, hd), (None, None, None), scale=0.1),
+        "r_f": dense_init(ks[5], (h, hd, hd), (None, None, None), scale=0.1),
+        "r_o": dense_init(ks[6], (h, hd, hd), (None, None, None), scale=0.1),
+        "out_norm": ones_init((d,), (None,)),
+        "w_ff1": dense_init(ks[7], (2 * ffn, d), ("ffn", "embed")),
+        "w_ff2": dense_init(ks[8], (d, ffn), ("embed", "ffn")),
+    }
+
+
+def slstm_block_state(cfg, batch: int) -> dict:
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {"cell": ssm.slstm_init_state(batch, h, hd),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_model), jnp.float32)}
+
+
+def _slstm_gate_pre(p, xi, xc, cfg):
+    b = xi.shape[0]
+    s = xi.shape[1]
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    zo = xi @ p["w_zi"].T.astype(xi.dtype)
+    if_ = xc @ p["w_if"].T.astype(xi.dtype)
+    zx, ox = jnp.split(zo, 2, axis=-1)
+    ix, fx = jnp.split(if_, 2, axis=-1)
+    rs = lambda t: t.reshape(b, s, h, hd)
+    return rs(zx), rs(ix), rs(fx), rs(ox)
+
+
+def _slstm_post(p, h_seq, x, cfg):
+    b, s = x.shape[:2]
+    d = cfg.d_model
+    hn = rmsnorm(h_seq.reshape(b, s, d), p["out_norm"], cfg.norm_eps)
+    ff = hn @ p["w_ff1"].T.astype(x.dtype)
+    gate, up = jnp.split(ff, 2, axis=-1)
+    y = (jax.nn.silu(gate) * up) @ p["w_ff2"].T.astype(x.dtype)
+    return x + y
+
+
+def slstm_block_apply(p, x, cfg, state: dict):
+    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xc = jax.nn.silu(causal_conv(xi, p["conv"]))
+    pre = _slstm_gate_pre(p, xi, xc, cfg)
+    h_seq, cell = ssm.slstm_scan(*pre, p["r_z"], p["r_i"], p["r_f"], p["r_o"],
+                                 state=state["cell"])
+    tail = jnp.concatenate(
+        [state["conv"].astype(xi.dtype), xi], axis=1)[:, -(cfg.ssm_conv - 1):]
+    return _slstm_post(p, h_seq, x, cfg), {"cell": cell,
+                                           "conv": tail.astype(jnp.float32)}
+
+
+def slstm_block_step(p, x, cfg, state: dict):
+    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
+    conv_win, xc1 = conv_step(state["conv"].astype(xi.dtype), xi[:, 0], p["conv"])
+    xc = jax.nn.silu(xc1)[:, None, :]
+    pre = _slstm_gate_pre(p, xi, xc, cfg)
+    cell, h_t = ssm.slstm_step(state["cell"], *(t[:, 0] for t in pre),
+                               p["r_z"], p["r_i"], p["r_f"], p["r_o"])
+    h_t = h_t.astype(x.dtype)   # slstm_step computes fp32; keep carry dtype
+    return (_slstm_post(p, h_t[:, None].reshape(x.shape), x, cfg),
+            {"cell": cell, "conv": conv_win.astype(jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _super_shape(cfg) -> tuple[int, int]:
+    """(n_super, mlstm_per_super); layers = n_super * (ratio + 1)."""
+    per = cfg.mlstm_ratio + 1
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, cfg.mlstm_ratio
+
+
+def init(rng, cfg) -> dict:
+    n_super, n_m = _super_shape(cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "embed": embed_init(k1, cfg.padded_vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "unembed": dense_init(k4, (cfg.padded_vocab, cfg.d_model),
+                              ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+        "mlstm": stack_layers(lambda k: mlstm_block_init(k, cfg), k2,
+                              n_super * n_m),
+        "slstm": stack_layers(lambda k: slstm_block_init(k, cfg), k3, n_super),
+    }
+
+
+def init_state(cfg, batch: int) -> dict:
+    n_super, n_m = _super_shape(cfg)
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a, (n,) + a.shape).copy(), tree)
+    return {"pos": jnp.int32(0),
+            "mlstm": rep(mlstm_block_state(cfg, batch), n_super * n_m),
+            "slstm": rep(slstm_block_state(cfg, batch), n_super)}
+
+
+def state_pspecs(cfg, long_context: bool = False):
+    """Logical axes for the decode state (constant-size: never seq-sharded)."""
+    m_axes = {"cell": {"C": (None, "act_batch", "act_ssm", None, None),
+                       "n": (None, "act_batch", "act_ssm", None),
+                       "m": (None, "act_batch", "act_ssm")},
+              "conv": (None, "act_batch", None, "act_ssm")}
+    s_axes = {"cell": {k: (None, "act_batch", None, None) for k in
+                       ("c", "n", "h", "m")},
+              "conv": (None, "act_batch", None, "act_ssm")}
+    return {"pos": (), "mlstm": m_axes, "slstm": s_axes}
+
+
+def _run(params, x, cfg, state, step: bool):
+    """Shared super-block scan for sequence and decode paths."""
+    n_super, n_m = _super_shape(cfg)
+    m_params = jax.tree.map(
+        lambda a: a.reshape(n_super, n_m, *a.shape[1:]), params["mlstm"])
+    m_state = jax.tree.map(
+        lambda a: a.reshape(n_super, n_m, *a.shape[1:]), state["mlstm"])
+    m_apply = mlstm_block_step if step else mlstm_block_apply
+    s_apply = slstm_block_step if step else slstm_block_apply
+
+    def body(h, xs):
+        mp, ms, sp, ss = xs
+        new_ms = []
+        for j in range(n_m):
+            pj = jax.tree.map(lambda a: a[j], mp)
+            sj = jax.tree.map(lambda a: a[j], ms)
+            h, sj_new = m_apply(pj, h, cfg, sj)
+            new_ms.append(sj_new)
+        h, ss_new = s_apply(sp, h, cfg, ss)
+        return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_ms), ss_new)
+
+    body_fn = body
+    if cfg.remat and not step:
+        body_fn = jax.checkpoint(body,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+    x, (m_new, s_new) = jax.lax.scan(
+        body_fn, x, (m_params, m_state, params["slstm"], state["slstm"]))
+    new_state = {"pos": state["pos"] + x.shape[1],
+                 "mlstm": jax.tree.map(
+                     lambda a: a.reshape(n_super * n_m, *a.shape[2:]), m_new),
+                 "slstm": s_new}
+    return x, new_state
+
+
+def forward(params, batch, cfg, state: dict | None = None):
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = lc(x, "act_batch", "act_seq", "act_embed")
+    if state is None:
+        state = init_state(cfg, tokens.shape[0])
+    x, new_state = _run(params, x, cfg, state, step=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].T.astype(x.dtype)
+    logits = lc(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, {"moe_aux": jnp.float32(0), "state": new_state}
+
+
+def prefill(params, batch, cfg, max_len: int = 0, cache_dtype=None):
+    logits, aux = forward(params, batch, cfg)
+    return logits[:, -1, :], aux["state"]
+
+
+def decode_step(params, token, state, cfg):
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x, new_state = _run(params, x, cfg, state, step=True)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].T.astype(x.dtype)
+    return logits[:, 0, :], new_state

@@ -1,0 +1,386 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+81 Mamba2 blocks; after every 6th block the single shared transformer
+block (attention at width 2·d over concat[h, original_embedding], output
+projected back to d, plus a gated MLP) is re-applied with the SAME weights
+(13 applications + 3 trailing Mamba blocks).  Per-invocation LoRA deltas
+from the Zamba2 paper are omitted (DESIGN.md §8) — weight sharing is the
+property that matters for delta compression (one delta, reused 13×).
+
+Decode state: per-Mamba-layer (SSD state + conv window) — O(1) in sequence
+— plus one KV cache per shared-block application point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import attention as A
+from repro.models import ssm
+from repro.models.layers import (embed_init, embed_lookup, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
+from repro.models.xlstm import causal_conv, conv_step
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg):
+    di = 2 * cfg.d_model
+    h = cfg.ssm_heads
+    p = di // h
+    n = cfg.ssm_state
+    return di, h, p, n
+
+
+def mamba_block_init(key, cfg) -> dict:
+    """Projections are SEPARATE per role (z / x / B,C / dt) rather than one
+    fused w_in: a fused projection's output splits are misaligned with the
+    model-axis shards, and GSPMD pays ~50 halo collective-permutes per
+    layer re-slicing them (measured 156 GB/step).  B,C and dt are tiny and
+    replicated over model ("ffn_small")."""
+    d = cfg.d_model
+    di, h, p, n = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": rmsnorm_init(d),
+        "w_z": dense_init(ks[6], (di, d), ("ssm", "embed")),
+        "w_xc": dense_init(ks[1], (di, d), ("ssm", "embed")),
+        "w_bc": dense_init(ks[2], (2 * n, d), ("ffn_small", "embed")),
+        "w_dt": dense_init(ks[3], (h, d), ("ffn_small", "embed")),
+        "conv_xc": dense_init(ks[4], (cfg.ssm_conv, di), (None, "ssm"),
+                              scale=0.3),
+        "conv_bc": dense_init(ks[5], (cfg.ssm_conv, 2 * n), (None, None),
+                              scale=0.3),
+        "a_log": zeros_init((h,), (None,)),
+        "dt_bias": zeros_init((h,), (None,)),
+        "d_skip": ones_init((h,), (None,)),
+        "gate_norm": ones_init((di,), (None,)),
+        "w_out": dense_init(ks[0], (d, di), ("embed", "ssm")),
+    }
+
+
+def mamba_block_state(cfg, batch: int) -> dict:
+    di, h, p, n = _dims(cfg)
+    return {"ssm": ssm.mamba_init_state(batch, h, p, n),
+            "conv_xc": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32),
+            "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * n),
+                                 jnp.float32)}
+
+
+def _mamba_proj(p, x, cfg):
+    di, h, _, n = _dims(cfg)
+    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z = xi @ p["w_z"].T.astype(x.dtype)
+    xc = xi @ p["w_xc"].T.astype(x.dtype)
+    bc = xi @ p["w_bc"].T.astype(x.dtype)
+    dt_raw = xi @ p["w_dt"].T.astype(x.dtype)
+    return z, xc, bc, dt_raw
+
+
+def _mamba_post(p, y, z, x, cfg):
+    b, s, _ = x.shape
+    di, h, pp, n = _dims(cfg)
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    return x + y @ p["w_out"].T.astype(x.dtype)
+
+
+def mamba_block_apply(p, x, cfg, state: dict):
+    b, s, d = x.shape
+    di, h, pp, n = _dims(cfg)
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg)
+    xc = jax.nn.silu(causal_conv(xc_pre, p["conv_xc"]))
+    bc = jax.nn.silu(causal_conv(bc_pre, p["conv_bc"]))
+    bm, cm = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    x_heads = lc(xc.reshape(b, s, h, pp), "act_batch", "act_seq", "act_ssm", None)
+    y, ssm_state = ssm.mamba_chunkwise(
+        x_heads, bm, cm, dt, p["a_log"], p["d_skip"], state=state["ssm"])
+    tail_xc = jnp.concatenate(
+        [state["conv_xc"].astype(xc_pre.dtype), xc_pre],
+        axis=1)[:, -(cfg.ssm_conv - 1):]
+    tail_bc = jnp.concatenate(
+        [state["conv_bc"].astype(bc_pre.dtype), bc_pre],
+        axis=1)[:, -(cfg.ssm_conv - 1):]
+    return (_mamba_post(p, y, z, x, cfg),
+            {"ssm": ssm_state, "conv_xc": tail_xc.astype(jnp.float32),
+             "conv_bc": tail_bc.astype(jnp.float32)})
+
+
+def mamba_block_step(p, x, cfg, state: dict):
+    b, _, d = x.shape
+    di, h, pp, n = _dims(cfg)
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg)
+    win_xc, xc1 = conv_step(state["conv_xc"].astype(xc_pre.dtype),
+                            xc_pre[:, 0], p["conv_xc"])
+    win_bc, bc1 = conv_step(state["conv_bc"].astype(bc_pre.dtype),
+                            bc_pre[:, 0], p["conv_bc"])
+    xc = jax.nn.silu(xc1)
+    bc = jax.nn.silu(bc1)
+    bm, cm = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    ssm_state, y = ssm.mamba_step(state["ssm"], xc.reshape(b, h, pp), bm, cm,
+                                  dt, p["a_log"], p["d_skip"])
+    return (_mamba_post(p, y[:, None], z, x, cfg),
+            {"ssm": ssm_state, "conv_xc": win_xc.astype(jnp.float32),
+             "conv_bc": win_bc.astype(jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# shared attention block (width 2d in, d out)
+# ---------------------------------------------------------------------------
+
+def shared_block_init(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": rmsnorm_init(2 * d),
+        "wq": dense_init(ks[0], (cfg.q_dim, 2 * d), ("q_heads", "embed")),
+        "wk": dense_init(ks[1], (cfg.kv_dim, 2 * d), ("kv_heads", "embed")),
+        "wv": dense_init(ks[2], (cfg.kv_dim, 2 * d), ("kv_heads", "embed")),
+        "wo": dense_init(ks[3], (d, cfg.q_dim), ("embed", "q_heads")),
+        "ln2": rmsnorm_init(d),
+        "mlp": mlp_init(ks[4], d, cfg.d_ff),
+    }
+
+
+def _shared_qkv(p, h2, cfg, positions):
+    b, s, _ = h2.shape
+    hi = rmsnorm(h2, p["ln1"], cfg.norm_eps)
+    q = (hi @ p["wq"].T.astype(h2.dtype)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (hi @ p["wk"].T.astype(h2.dtype)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (hi @ p["wv"].T.astype(h2.dtype)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def shared_block_apply(p, x, x0, cfg, positions):
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    q, k, v = _shared_qkv(p, h2, cfg, positions)
+    o = A.flash_attention(q, k, v, causal=True)
+    x = x + o.reshape(*x.shape[:-1], cfg.q_dim) @ p["wo"].T.astype(x.dtype)
+    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x
+
+
+def shared_block_step(p, x, x0, cfg, cache: dict, pos):
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    q, k, v = _shared_qkv(p, h2, cfg, pos[None])
+    new_cache = A.cache_insert(cache, k, v, pos)
+    o = A.decode_attention(q, new_cache["k"], new_cache["v"],
+                           new_cache["slot_pos"], pos)
+    x = x + o.reshape(*x.shape[:-1], cfg.q_dim) @ p["wo"].T.astype(x.dtype)
+    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _layout(cfg) -> tuple[int, int, int]:
+    """(n_super, per, n_rem): num_layers = n_super*per + n_rem."""
+    per = cfg.attn_every
+    n_super = cfg.num_layers // per
+    return n_super, per, cfg.num_layers - n_super * per
+
+
+def init(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 5)
+    return {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "unembed": dense_init(ks[1], (cfg.padded_vocab, cfg.d_model),
+                              ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+        "mamba": stack_layers(lambda k: mamba_block_init(k, cfg), ks[2],
+                              cfg.num_layers),
+        "shared": shared_block_init(ks[3], cfg),
+    }
+
+
+def _rep(tree, n):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(),
+                        tree)
+
+
+def mamba_only_state(cfg, batch: int) -> dict:
+    """Training-path state: SSD carries only, no KV caches allocated."""
+    return {"pos": jnp.int32(0),
+            "mamba": _rep(mamba_block_state(cfg, batch), cfg.num_layers),
+            "attn_kv": None}
+
+
+def init_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    n_super, per, n_rem = _layout(cfg)
+    kv = A.make_kv_cache(batch, max_len, cfg.num_kv_heads, cfg.head_dim, dtype)
+    st = mamba_only_state(cfg, batch)
+    st["attn_kv"] = _rep(kv, n_super)
+    return st
+
+
+def state_pspecs(cfg, long_context: bool = False):
+    seq_ax = "act_seq" if long_context else None
+    return {
+        "pos": (),
+        "mamba": {"ssm": (None, "act_batch", "act_ssm", None, None),
+                  "conv_xc": (None, "act_batch", None, "act_ssm"),
+                  "conv_bc": (None, "act_batch", None, None)},
+        "attn_kv": {"k": (None, "act_batch", seq_ax, "act_kv", "act_hd"),
+                    "v": (None, "act_batch", seq_ax, "act_kv", "act_hd"),
+                    "slot_pos": (None, seq_ax)},
+    }
+
+
+def _split_mamba(tree, cfg):
+    n_super, per, n_rem = _layout(cfg)
+    main = jax.tree.map(lambda a: a[:n_super * per].reshape(
+        n_super, per, *a.shape[1:]), tree)
+    rem = jax.tree.map(lambda a: a[n_super * per:], tree)
+    return main, rem
+
+
+def forward(params, batch, cfg, state: dict | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = lc(x, "act_batch", "act_seq", "act_embed")
+    x0 = x
+    positions = jnp.arange(s)
+    if state is None:
+        state = mamba_only_state(cfg, b)
+    m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_state, r_state = _split_mamba(state["mamba"], cfg)
+    n_super, per, n_rem = _layout(cfg)
+    shared = params["shared"]
+
+    def body(h, xs):
+        mp, ms = xs
+        new_states = []
+        for j in range(per):
+            pj = jax.tree.map(lambda a: a[j], mp)
+            sj = jax.tree.map(lambda a: a[j], ms)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj)
+            new_states.append(sj_new)
+        h = shared_block_apply(shared, h, x0, cfg, positions)
+        return h, jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+    x, m_new = jax.lax.scan(body_fn, x, (m_params, m_state))
+
+    r_new = []
+    for j in range(n_rem):
+        pj = jax.tree.map(lambda a: a[j], r_params)
+        sj = jax.tree.map(lambda a: a[j], r_state)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj)
+        r_new.append(sj_new)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].T.astype(x.dtype)
+    logits = lc(logits, "act_batch", "act_seq", "act_vocab")
+    flat_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), m_new)
+    if r_new:
+        r_stack = jax.tree.map(lambda *a: jnp.stack(a), *r_new)
+        flat_m = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2]),
+                              flat_m, r_stack)
+    new_state = {"pos": state["pos"] + s, "mamba": flat_m,
+                 "attn_kv": state.get("attn_kv")}
+    return logits, {"moe_aux": jnp.float32(0), "state": new_state}
+
+
+def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+    """Single pass over the prompt: SSD states carried, shared-block K/V
+    captured at every application point to fill the KV caches."""
+    b, s = batch["tokens"].shape
+    state0 = init_state(cfg, b, max_len, cache_dtype)
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    x = lc(x, "act_batch", "act_seq", "act_embed")
+    x0 = x
+    positions = jnp.arange(s)
+    m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_state, r_state = _split_mamba(state0["mamba"], cfg)
+    n_super, per, n_rem = _layout(cfg)
+
+    def body(h, xs):
+        mp, ms = xs
+        new_states = []
+        for j in range(per):
+            pj = jax.tree.map(lambda a: a[j], mp)
+            sj = jax.tree.map(lambda a: a[j], ms)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj)
+            new_states.append(sj_new)
+        h2 = jnp.concatenate([h, x0], axis=-1)
+        _, k, v = _shared_qkv(params["shared"], h2, cfg, positions)
+        h = shared_block_apply(params["shared"], h, x0, cfg, positions)
+        return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), k, v)
+
+    x, (m_new, k_all, v_all) = jax.lax.scan(body, x, (m_params, m_state))
+    r_new = []
+    for j in range(n_rem):
+        pj = jax.tree.map(lambda a: a[j], r_params)
+        sj = jax.tree.map(lambda a: a[j], r_state)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj)
+        r_new.append(sj_new)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].T.astype(x.dtype)
+
+    kv = jax.vmap(lambda c, kk, vv: A.cache_insert(c, kk, vv, 0))(
+        state0["attn_kv"], k_all, v_all)
+    flat_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), m_new)
+    if r_new:
+        r_stack = jax.tree.map(lambda *a: jnp.stack(a), *r_new)
+        flat_m = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2]),
+                              flat_m, r_stack)
+    return logits[:, -1, :], {"pos": jnp.int32(s), "mamba": flat_m,
+                              "attn_kv": kv}
+
+
+def decode_step(params, token, state, cfg):
+    pos = state["pos"]
+    b = token.shape[0]
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x0 = x
+    m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_state, r_state = _split_mamba(state["mamba"], cfg)
+    n_super, per, n_rem = _layout(cfg)
+
+    def body(h, xs):
+        mp, ms, kv = xs
+        new_states = []
+        for j in range(per):
+            pj = jax.tree.map(lambda a: a[j], mp)
+            sj = jax.tree.map(lambda a: a[j], ms)
+            h, sj_new = mamba_block_step(pj, h, cfg, sj)
+            new_states.append(sj_new)
+        h, kv_new = shared_block_step(params["shared"], h, x0, cfg, kv, pos)
+        return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), kv_new)
+
+    x, (m_new, kv_new) = jax.lax.scan(body, x,
+                                      (m_params, m_state, state["attn_kv"]))
+    r_new = []
+    for j in range(n_rem):
+        pj = jax.tree.map(lambda a: a[j], r_params)
+        sj = jax.tree.map(lambda a: a[j], r_state)
+        x, sj_new = mamba_block_step(pj, x, cfg, sj)
+        r_new.append(sj_new)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].T.astype(x.dtype)
+    flat_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), m_new)
+    if r_new:
+        r_stack = jax.tree.map(lambda *a: jnp.stack(a), *r_new)
+        flat_m = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2]),
+                              flat_m, r_stack)
+    new_state = {"pos": pos + 1, "mamba": flat_m, "attn_kv": kv_new}
+    return logits[:, 0, :], new_state

@@ -1,0 +1,70 @@
+"""Sharded AdamW.
+
+Moments are plain pytrees mirroring the parameters, so they inherit the
+parameter shardings (FSDP over `data`, TP over `model`) — no extra rules.
+Weight decay is masked off 1-D params (norm scales, biases, per-axis delta
+vectors) as is standard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def _decay_mask(path_leaf) -> bool:
+    """True if weight decay applies: only >=2-D weight matrices."""
+    return path_leaf.ndim >= 2
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    # global-norm clip (fp32)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    count = state.count + 1
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if _decay_mask(p):
+            step = step + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return (new_params, AdamWState(mu=new_mu, nu=new_nu, count=count),
+            {"grad_norm": gnorm})

@@ -1,0 +1,171 @@
+"""Serving engine: batched prefill+decode over hot-swappable variants.
+
+Request lifecycle: submit(prompt tokens, variant) → queued → engine groups
+pending requests BY VARIANT (one compiled prefill/decode pair serves every
+variant — same shapes, different params) → prefill fills a fixed-slot KV
+cache → decode steps run round-robin across variant groups → finished
+sequences retire and their slots are reused.
+
+Fault tolerance: a variant whose artifact fails to load has its requests
+re-queued up to ``max_retries`` then failed individually — the engine and
+other tenants keep serving.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+from repro.serving.variants import VariantRegistry
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # prompt (prompt_len,)
+    variant: str = "__base__"
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    status: str = "queued"        # queued | running | done | failed
+    retries: int = 0
+    error: Optional[str] = None
+
+
+class ServingEngine:
+    """Fixed-shape batched serving: batch slots of ``batch_size``, prompts
+    padded to ``prompt_len``, KV capacity ``max_len``."""
+
+    def __init__(self, model: Model, registry: VariantRegistry, *,
+                 batch_size: int = 4, prompt_len: int = 32,
+                 max_len: int = 128, max_retries: int = 1,
+                 greedy: bool = True):
+        self.model = model
+        self.registry = registry
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+        self.max_retries = max_retries
+        self._queue: collections.deque[Request] = collections.deque()
+        self._done: dict[int, Request] = {}
+        self._next_rid = 0
+        cfg = model.cfg
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len)
+
+        def decode_fn(params, token, cache):
+            logits, cache = model.decode_step(params, token, cache)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self.metrics = {"batches": 0, "tokens_generated": 0,
+                        "prefills": 0, "failed": 0,
+                        "prefill_seconds": 0.0, "decode_seconds": 0.0}
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, tokens, variant: str = "__base__",
+               max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, tokens=np.asarray(tokens),
+                                   variant=variant,
+                                   max_new_tokens=max_new_tokens))
+        return rid
+
+    def result(self, rid: int) -> Request:
+        return self._done[rid]
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def run_until_drained(self, max_rounds: int = 1000) -> dict:
+        rounds = 0
+        while self._queue and rounds < max_rounds:
+            self._serve_one_group()
+            rounds += 1
+        return self.metrics
+
+    # -- internals -------------------------------------------------------------
+    def _take_group(self) -> list:
+        """Pop up to batch_size requests of the same variant (FIFO head
+        decides the variant — simple fairness)."""
+        if not self._queue:
+            return []
+        variant = self._queue[0].variant
+        group, rest = [], collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if r.variant == variant and len(group) < self.batch_size:
+                group.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return group
+
+    def _serve_one_group(self) -> None:
+        group = self._take_group()
+        if not group:
+            return
+        variant = group[0].variant
+        try:
+            params = self.registry.params_for(variant)
+        except Exception as e:  # artifact failure: re-queue or fail
+            for r in group:
+                r.retries += 1
+                if r.retries > self.max_retries:
+                    r.status, r.error = "failed", str(e)
+                    self._done[r.rid] = r
+                    self.metrics["failed"] += 1
+                else:
+                    self._queue.append(r)
+            return
+
+        bs = self.batch_size
+        toks = np.zeros((bs, self.prompt_len), np.int32)
+        lengths = np.zeros(bs, np.int32)
+        for i, r in enumerate(group):
+            p = r.tokens[-self.prompt_len:]
+            toks[i, :len(p)] = p
+            lengths[i] = len(p)
+        batch = {"tokens": jnp.asarray(toks)}
+        batch.update(self._frontend_stub(bs))
+
+        t0 = time.perf_counter()
+        last_logits, cache = self._prefill(params, batch)
+        jax.block_until_ready(last_logits)
+        self.metrics["prefill_seconds"] += time.perf_counter() - t0
+        self.metrics["prefills"] += 1
+
+        next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        n_steps = max(r.max_new_tokens for r in group)
+        t0 = time.perf_counter()
+        for step in range(n_steps):
+            for i, r in enumerate(group):
+                if step < r.max_new_tokens:
+                    r.out_tokens.append(int(next_tok[i]))
+            next_tok, cache = self._decode(params, next_tok, cache)
+            self.metrics["tokens_generated"] += len(group)
+        jax.block_until_ready(next_tok)
+        self.metrics["decode_seconds"] += time.perf_counter() - t0
+
+        for r in group:
+            r.status = "done"
+            self._done[r.rid] = r
+        self.metrics["batches"] += 1
+
+    def _frontend_stub(self, bs: int) -> dict:
+        cfg = self.model.cfg
+        if cfg.family == "audio":
+            return {"frames": jnp.zeros((bs, cfg.encoder_frames,
+                                         cfg.d_model), jnp.float32)}
+        if cfg.family == "vlm":
+            return {"image_embeds": jnp.zeros(
+                (bs, cfg.num_image_tokens, cfg.d_model), jnp.float32)}
+        return {}

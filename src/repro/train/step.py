@@ -1,0 +1,130 @@
+"""Training / serving step functions (pure; pjit-ready).
+
+``make_train_step(model)`` returns step(state, batch) -> (state, metrics);
+``make_prefill_step`` / ``make_decode_step`` are the serving equivalents.
+All are mesh-agnostic — shardings are applied by the caller (launch/ or
+tests) via jax.jit in/out shardings + the shard_ctx rule context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model: Model, rng) -> TrainState:
+    from repro.models.param import split
+    params, _ = split(model.init(rng))
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=adamw_init(params))
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Masked next-token cross-entropy (labels already shifted by the data
+    pipeline; -100 labels are ignored)."""
+    valid = labels >= 0 if mask is None else mask
+    labels_safe = jnp.maximum(labels, 0)
+    lt = logits.astype(jnp.float32)
+    ll = jax.nn.log_softmax(lt, axis=-1)
+    nll = -jnp.take_along_axis(ll, labels_safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def make_loss_fn(model: Model, aux_weight: Optional[float] = None):
+    aux_w = (model.cfg.router_aux_weight if aux_weight is None else aux_weight)
+    compute_dtype = jnp.dtype(model.cfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        # cast params to the compute dtype ONCE, before the layer stack —
+        # FSDP all-gathers then move bf16 (half the wire bytes of fp32);
+        # grads flow through the cast and accumulate fp32
+        params = jax.tree.map(
+            lambda w: w.astype(compute_dtype)
+            if w.dtype == jnp.float32 and w.ndim >= 2 else w, params)
+        logits, aux = model.forward(params, batch)
+        labels = batch["labels"]
+        s_lbl = labels.shape[1]
+        # frontends may prepend positions (vlm image tokens): align tail
+        logits = logits[:, -s_lbl:, :]
+        loss = lm_loss(logits, labels)
+        total = loss + aux_w * aux.get("moe_aux", 0.0)
+        return total, {"loss": loss, "moe_aux": aux.get("moe_aux", 0.0)}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    weight_decay: float = 0.1,
+                    grad_transform: Optional[Callable] = None,
+                    param_axes=None):
+    """grad_transform(grads) -> grads hook: gradient compression plugs in
+    here (distributed/compression.py).
+
+    param_axes: logical-axes tree matching params — when given, gradients
+    are sharding-constrained to the parameter layout right after autodiff,
+    which turns GSPMD's full weight-grad all-reduces into reduce-scatters
+    into the FSDP shards (≈2× less gradient wire traffic)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (total, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        if param_axes is not None:
+            from repro.distributed.sharding import _axes_leaf
+            from repro.distributed.sharding import logical_constraint as lc
+            grads = jax.tree.map(lambda ax, g: lc(g, *ax), param_axes,
+                                 grads, is_leaf=_axes_leaf)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr = cosine_schedule(state.step, warmup, total_steps, peak_lr)
+        params, opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=weight_decay)
+        new_state = TrainState(step=state.step + 1, params=params, opt=opt)
+        return new_state, {**metrics, **opt_metrics, "lr": lr,
+                           "total_loss": total}
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch) -> dict:
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, max_len: int, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len, cache_dtype=cache_dtype)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return decode_step

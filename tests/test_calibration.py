@@ -1,0 +1,126 @@
+"""Calibration pipeline tests on a tiny base/fine-tune pair.
+
+Validates the paper's pipeline end to end: compression, per-layer
+activation matching, axis selection, e2e logit calibration — and the core
+quality ordering (calibrated vector ≤ MSE of scalar BitDelta vs teacher).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.models import build_model
+from repro.models import transformer as T
+from repro.models.param import split
+from repro.train.step import make_train_step, init_train_state
+
+
+@pytest.fixture(scope="module")
+def tiny_pair():
+    """Base = random init trained 30 steps; fine-tune = 15 more steps on a
+    shifted task — a real (small) fine-tuning delta."""
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    from repro.data.pipeline import SyntheticLM
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    step = jax.jit(make_train_step(model, peak_lr=5e-3, warmup=5))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    for i in range(30):
+        state, _ = step(state, src.lm_batch(i, 4, 32))
+    base_params = state.params
+    src2 = SyntheticLM(cfg.vocab_size, seed=99)
+    for i in range(15):
+        state, _ = step(state, src2.lm_batch(i, 4, 32))
+    ft_params = state.params
+    batches = [src.lm_batch(1000 + i, 4, 32) for i in range(4)]
+    return model, base_params, ft_params, batches
+
+
+def test_compress_targets_and_extras(tiny_pair):
+    model, base, ft, _ = tiny_pair
+    dm = C.compress(base, ft)
+    names = {k.split(".")[-1] for k in dm.deltas}
+    assert {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"} <= names
+    # embeddings / norms are extras, not deltas
+    assert not any("embed" in k for k in dm.deltas)
+    assert any("embed" in k for k in dm.extras)
+    # artifact much smaller than an fp16 checkpoint of the same params
+    ratio = C.fp16_checkpoint_nbytes(ft) / C.artifact_nbytes(dm)
+    assert ratio > 1.5, ratio
+
+
+def test_apply_delta_roundtrip_close(tiny_pair):
+    """With init scales the student must be closer to FT than base is."""
+    model, base, ft, batches = tiny_pair
+    dm = C.compress(base, ft)
+    student = C.apply_delta(base, dm)
+    logits_ft, _ = model.forward(ft, batches[0])
+    logits_st, _ = model.forward(student, batches[0])
+    logits_bs, _ = model.forward(base, batches[0])
+    err_st = float(jnp.mean((logits_ft - logits_st) ** 2))
+    err_bs = float(jnp.mean((logits_ft - logits_bs) ** 2))
+    assert err_st < err_bs, (err_st, err_bs)
+
+
+def test_full_calibration_improves_and_selects_axes(tiny_pair):
+    model, base, ft, batches = tiny_pair
+    cfg = model.cfg
+    fwd = jax.jit(lambda p, b: T.forward(p, b, cfg)[0])
+
+    def teacher_mse(dm):
+        student = C.apply_delta(base, dm)
+        errs = [float(jnp.mean((fwd(ft, b) - fwd(student, b)) ** 2))
+                for b in batches]
+        return sum(errs) / len(errs)
+
+    dm0 = C.compress(base, ft)
+    err_init = teacher_mse(dm0)
+
+    dm_cal, report = C.calibrate_transformer(
+        model, base, ft, batches, epochs=2, e2e_epochs=2, lr=1e-3,
+        e2e_lr=1e-3)
+    err_cal = teacher_mse(dm_cal)
+    assert err_cal < err_init, (err_cal, err_init)
+    # axis selection recorded per projection per layer
+    assert "attn.wq" in report["axis"]
+    assert len(report["axis"]["attn.wq"]) == 2  # layers
+    assert all(a in ("row", "col") for a in report["axis"]["attn.wq"])
+    # e2e losses decreased overall
+    assert report["e2e_losses"][-1] < report["e2e_losses"][0] * 1.5
+
+
+def test_vector_beats_scalar_bitdelta(tiny_pair):
+    """Paper's main quality claim at the logit level."""
+    model, base, ft, batches = tiny_pair
+    cfg = model.cfg
+    fwd = jax.jit(lambda p, b: T.forward(p, b, cfg)[0])
+
+    def teacher_mse(dm):
+        student = C.apply_delta(base, dm)
+        errs = [float(jnp.mean((fwd(ft, b) - fwd(student, b)) ** 2))
+                for b in batches]
+        return sum(errs) / len(errs)
+
+    dm_vec, _ = C.calibrate_transformer(model, base, ft, batches,
+                                        epochs=2, e2e_epochs=2,
+                                        lr=1e-3, e2e_lr=1e-3)
+    dm_sca, _ = C.calibrate_transformer(model, base, ft, batches,
+                                        scalar=True, e2e_epochs=2,
+                                        lr=1e-3, e2e_lr=1e-3)
+    assert teacher_mse(dm_vec) <= teacher_mse(dm_sca) * 1.05, \
+        (teacher_mse(dm_vec), teacher_mse(dm_sca))
+
+
+def test_scalar_mode_artifact_smaller_but_close(tiny_pair):
+    model, base, ft, _ = tiny_pair
+    dm_vec = C.compress(base, ft)
+    dm_sca = C.compress(base, ft, scalar=True)
+    assert C.artifact_nbytes(dm_sca) <= C.artifact_nbytes(dm_vec)
+    # vector adds only a tiny overhead (paper Table 2: ~same sizes)
+    assert C.artifact_nbytes(dm_vec) < C.artifact_nbytes(dm_sca) * 1.1

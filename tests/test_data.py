@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, resumability, structure."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticLM, calib_stream, make_batch_iterator
+
+
+def test_batches_deterministic_in_step():
+    src = SyntheticLM(1000, seed=3)
+    a = src.lm_batch(17, 4, 64)
+    b = src.lm_batch(17, 4, 64)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_different_steps_differ():
+    src = SyntheticLM(1000, seed=3)
+    a = src.lm_batch(1, 4, 64)
+    b = src.lm_batch(2, 4, 64)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    src = SyntheticLM(1000, seed=0)
+    batch = src.lm_batch(0, 2, 32)
+    np.testing.assert_array_equal(batch["labels"][:, :-1],
+                                  batch["tokens"][:, 1:])
+
+
+def test_iterator_resume_matches():
+    it_full = make_batch_iterator(500, 2, 16, seed=1)
+    full = [next(it_full) for _ in range(6)]
+    it_resumed = make_batch_iterator(500, 2, 16, seed=1, start_step=3)
+    resumed = [next(it_resumed) for _ in range(3)]
+    for a, b in zip(full[3:], resumed):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_tokens_in_vocab_and_structured():
+    src = SyntheticLM(128, seed=5)
+    t = src.sample(0, 4, 256)
+    assert t.min() >= 0 and t.max() < 128
+    # structure: repeated-motif copy exists -> sequence is compressible
+    # (non-uniform bigram distribution)
+    uniq = len(np.unique(t))
+    assert uniq < 128  # Zipf skew
+
+
+def test_calib_stream_budget():
+    batches = list(calib_stream(100, n_samples=50, seq_len=32, batch=5))
+    assert len(batches) == 10
+    assert batches[0]["tokens"].shape == (5, 32)

@@ -1,0 +1,132 @@
+"""Chunkwise-parallel forms must match the step-recurrent oracles exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+def _mlstm_recurrent(q, k, v, ig, fg):
+    b, s, h, hd = q.shape
+    state = ssm.mlstm_init_state(b, h, hd)
+    outs = []
+    for t in range(s):
+        state, ht = ssm.mlstm_step(state, q[:, t], k[:, t], v[:, t],
+                                   ig[:, t], fg[:, t])
+        outs.append(ht)
+    return jnp.stack(outs, axis=1), state
+
+
+@pytest.mark.parametrize("s,chunk", [(8, 4), (16, 4), (12, 5), (16, 16), (7, 3)])
+def test_mlstm_chunkwise_matches_recurrent(s, chunk):
+    key = jax.random.PRNGKey(0)
+    b, h, hd = 2, 3, 8
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    ig = jax.random.normal(ks[3], (b, s, h)) * 2.0
+    fg = jax.random.normal(ks[4], (b, s, h)) * 2.0 + 1.0
+    y_ref, st_ref = _mlstm_recurrent(q, k, v, ig, fg)
+    y_chk, st_chk = ssm.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chk["m"]), np.asarray(st_ref["m"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_chk["C"]), np.asarray(st_ref["C"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunkwise_state_continuation():
+    """Processing [first half] then [second half with carried state] must
+    equal one full pass."""
+    key = jax.random.PRNGKey(1)
+    b, s, h, hd = 1, 16, 2, 4
+    ks = jax.random.split(key, 5)
+    q, k, v = (jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3))
+    ig = jax.random.normal(ks[3], (b, s, h))
+    fg = jax.random.normal(ks[4], (b, s, h)) + 1.0
+    y_full, _ = ssm.mlstm_chunkwise(q, k, v, ig, fg, chunk=4)
+    y1, st = ssm.mlstm_chunkwise(q[:, :8], k[:, :8], v[:, :8], ig[:, :8], fg[:, :8], chunk=4)
+    y2, _ = ssm.mlstm_chunkwise(q[:, 8:], k[:, 8:], v[:, 8:], ig[:, 8:], fg[:, 8:],
+                                state=st, chunk=4)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+
+
+def _mamba_recurrent(x, bm, cm, dt, a_log, d_skip):
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    state = ssm.mamba_init_state(b, h, p, n)
+    outs = []
+    for t in range(s):
+        state, yt = ssm.mamba_step(state, x[:, t], bm[:, t], cm[:, t],
+                                   dt[:, t], a_log, d_skip)
+        outs.append(yt)
+    return jnp.stack(outs, axis=1), state
+
+
+@pytest.mark.parametrize("s,chunk", [(8, 4), (16, 8), (12, 5), (16, 16)])
+def test_mamba_chunkwise_matches_recurrent(s, chunk):
+    key = jax.random.PRNGKey(2)
+    b, h, p, n = 2, 3, 4, 6
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    bm = jax.random.normal(ks[1], (b, s, n))
+    cm = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a_log = jax.random.normal(ks[4], (h,)) * 0.5
+    d_skip = jax.random.normal(ks[5], (h,))
+    y_ref, st_ref = _mamba_recurrent(x, bm, cm, dt, a_log, d_skip)
+    y_chk, st_chk = ssm.mamba_chunkwise(x, bm, cm, dt, a_log, d_skip, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chk), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_state_continuation():
+    key = jax.random.PRNGKey(3)
+    b, s, h, p, n = 1, 12, 2, 3, 4
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    bm = jax.random.normal(ks[1], (b, s, n))
+    cm = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a_log = jax.random.normal(ks[4], (h,)) * 0.5
+    d_skip = jnp.zeros((h,))
+    y_full, _ = ssm.mamba_chunkwise(x, bm, cm, dt, a_log, d_skip, chunk=4)
+    y1, st = ssm.mamba_chunkwise(x[:, :4], bm[:, :4], cm[:, :4], dt[:, :4],
+                                 a_log, d_skip, chunk=4)
+    y2, _ = ssm.mamba_chunkwise(x[:, 4:], bm[:, 4:], cm[:, 4:], dt[:, 4:],
+                                a_log, d_skip, state=st, chunk=4)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_scan_shapes_and_determinism():
+    key = jax.random.PRNGKey(4)
+    b, s, h, hd = 2, 10, 2, 4
+    ks = jax.random.split(key, 8)
+    pre = [jax.random.normal(ks[i], (b, s, h, hd)) for i in range(4)]
+    rs = [jax.random.normal(ks[4 + i], (h, hd, hd)) * 0.1 for i in range(4)]
+    y, st = ssm.slstm_scan(*pre, *rs)
+    assert y.shape == (b, s, h, hd)
+    assert jnp.isfinite(y).all()
+    y2, _ = ssm.slstm_scan(*pre, *rs)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_slstm_step_matches_scan_prefix():
+    key = jax.random.PRNGKey(5)
+    b, s, h, hd = 1, 5, 2, 3
+    ks = jax.random.split(key, 8)
+    pre = [jax.random.normal(ks[i], (b, s, h, hd)) for i in range(4)]
+    rs = [jax.random.normal(ks[4 + i], (h, hd, hd)) * 0.1 for i in range(4)]
+    y_scan, _ = ssm.slstm_scan(*pre, *rs)
+    state = ssm.slstm_init_state(b, h, hd)
+    for t in range(s):
+        state, ht = ssm.slstm_step(state, *(x[:, t] for x in pre), *rs)
+        np.testing.assert_allclose(np.asarray(ht), np.asarray(y_scan[:, t]),
+                                   rtol=1e-5, atol=1e-5)

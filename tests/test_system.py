@@ -1,0 +1,72 @@
+"""End-to-end system test: the paper's full lifecycle on a tiny model.
+
+train base → fine-tune → calibrated per-axis compression → artifact on
+disk → hot-swap onto resident base → multi-tenant serving — asserting the
+paper's qualitative claims at each stage.
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import loader as L
+from repro.core import store as S
+from repro.data.pipeline import SyntheticLM
+from repro.models import build_model
+from repro.serving import ServingEngine, VariantRegistry
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.mark.slow
+def test_full_lifecycle(tmp_path):
+    cfg = dataclasses.replace(get_config("qwen3-8b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+
+    # 1. pretrain + fine-tune
+    step = jax.jit(make_train_step(model, peak_lr=5e-3, warmup=5))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    src = SyntheticLM(cfg.vocab_size, seed=0)
+    for i in range(30):
+        state, m = step(state, src.lm_batch(i, 4, 32))
+    base = state.params
+    ft_src = SyntheticLM(cfg.vocab_size, seed=9)
+    for i in range(15):
+        state, m = step(state, ft_src.lm_batch(i, 4, 32))
+    ft = state.params
+
+    # 2. calibrated compression (paper Alg. 1-7)
+    calib = [ft_src.lm_batch(1000 + i, 4, 32) for i in range(3)]
+    dm, report = C.calibrate_transformer(model, base, ft, calib,
+                                         epochs=2, e2e_epochs=2,
+                                         lr=1e-3, e2e_lr=1e-3)
+    assert report["axis"]  # axis selection happened
+
+    # 3. artifact round trip + integrity
+    fp = S.base_fingerprint(base)
+    manifest = S.save_artifact(dm, tmp_path / "v", base_fp=fp)
+    assert manifest["artifact_bytes"] < C.fp16_checkpoint_nbytes(ft)
+    dm2 = S.load_artifact(tmp_path / "v", expect_base_fp=fp)
+
+    # 4. hot swap: student ≈ teacher on held-out data
+    student, stats = L.apply_artifact(base, dm2)
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    batch = ft_src.lm_batch(5000, 4, 32)
+    mse_student = float(jnp.mean((fwd(ft, batch) - fwd(student, batch)) ** 2))
+    mse_base = float(jnp.mean((fwd(ft, batch) - fwd(base, batch)) ** 2))
+    assert mse_student < 0.5 * mse_base, (mse_student, mse_base)
+
+    # 5. serving with the swapped variant
+    reg = VariantRegistry(base)
+    reg.register("v", dm2)
+    eng = ServingEngine(model, reg, batch_size=2, prompt_len=8, max_len=32)
+    rid = eng.submit(np.arange(1, 7), variant="v", max_new_tokens=4)
+    eng.run_until_drained()
+    assert eng.result(rid).status == "done"
+    assert len(eng.result(rid).out_tokens) == 4

@@ -1,0 +1,157 @@
+"""Dev tool: per-op-name byte attribution for a dry-run cell's HLO.
+
+Usage: PYTHONPATH=src python tools/byte_attr.py <arch> <shape> [multi]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import hlo_cost as HC
+from repro.distributed.sharding import rules_for, shard_ctx, tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.param import split
+from repro.optim.adamw import AdamWState
+from repro.train.step import (TrainState, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+
+def lower_cell(arch, shape_name, multi_pod=False, opt_flags=()):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    long_ctx = shape_name == "long_500k"
+    rules = rules_for(shape.kind, long_context=long_ctx)
+    params_p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    ps, ax = split(params_p)
+    psh = tree_shardings(ps, ax, rules, mesh)
+    bs = model.input_specs(shape.seq_len, shape.global_batch, kind=shape.kind)
+    bsh = tree_shardings(bs, model.batch_pspecs(shape.kind), rules, mesh)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    if shape.kind == "train":
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+        opt = AdamWState(mu=jax.tree.map(f32, ps), nu=jax.tree.map(f32, ps),
+                         count=jax.ShapeDtypeStruct((), jnp.int32))
+        st = TrainState(step=jax.ShapeDtypeStruct((), jnp.int32), params=ps,
+                        opt=opt)
+        ssh = TrainState(step=repl, params=psh,
+                         opt=AdamWState(mu=psh, nu=psh, count=repl))
+        fn, args, shards = make_train_step(model, param_axes=ax), (st, bs), (ssh, bsh)
+        with mesh, shard_ctx(mesh, rules):
+            _, m_struct = jax.eval_shape(fn, *args)
+        out_sh = (ssh, jax.tree.map(lambda _: repl, m_struct))
+        with mesh, shard_ctx(mesh, rules):
+            return jax.jit(fn, in_shardings=shards,
+                           out_shardings=out_sh).lower(*args).compile(
+                               ).as_text()
+    else:
+        serve = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype), ps)
+        if shape.kind == "prefill":
+            fn = make_prefill_step(model, max_len=shape.seq_len)
+            args, shards = (serve, bs), (psh, bsh)
+        else:
+            cache = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            csh = tree_shardings(
+                cache, model.cache_pspecs(
+                    long_ctx, kv_seq_shard="kv_seq_shard" in opt_flags),
+                rules, mesh)
+            fn = make_decode_step(model)
+            args = (serve, bs["tokens"], cache)
+            shards = (psh, bsh["tokens"], csh)
+    with mesh, shard_ctx(mesh, rules):
+        return jax.jit(fn, in_shardings=shards).lower(*args).compile().as_text()
+
+
+def attribute(txt, top=25):
+    mh = HC.HloCostModel(txt)
+    agg = defaultdict(float)
+
+    def src(i):
+        m = re.search(r'op_name="([^"]*)"', i.attrs)
+        nm = m.group(1) if m else "?"
+        nm = re.sub(r"\d+", "#", nm)
+        return i.opcode + " :: " + nm[-90:]
+
+    def walk(comp, mult):
+        for i in mh.comps.get(comp, []):
+            opc = i.opcode
+            if opc == "while":
+                trips = mh._trip_count(i)
+                b = HC._BODY_RE.search(i.attrs)
+                if b:
+                    walk(b.group(1), mult * trips)
+            elif opc in ("fusion", "call", "async-start"):
+                m = HC._CALLS_RE.search(i.attrs)
+                if m:
+                    walk(m.group(1), mult)
+            elif opc == "gather":
+                agg[src(i)] += mult * 2 * i.result_bytes
+            elif opc == "dynamic-update-slice":
+                s = (mh.shapes[comp].get(i.operands[1])
+                     if len(i.operands) > 1 else None)
+                agg[src(i)] += mult * 2 * (s[0] if s else 0)
+            elif opc in HC._MATERIALIZE or opc == "dot":
+                agg[src(i)] += mult * (i.result_bytes
+                                       + mh._operand_bytes(comp, i))
+
+    walk(mh.entry, 1.0)
+    for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v/1e9:9.1f} GB  {k}")
+
+
+def attribute_collectives(txt, top=25):
+    mh = HC.HloCostModel(txt)
+    agg = defaultdict(float)
+    cnt = defaultdict(float)
+
+    def src(i):
+        m = re.search(r'op_name="([^"]*)"', i.attrs)
+        nm = m.group(1) if m else "?"
+        nm = re.sub(r"\d+", "#", nm)
+        return i.opcode + " :: " + nm[-100:]
+
+    def walk(comp, mult):
+        for i in mh.comps.get(comp, []):
+            opc = i.opcode
+            if opc == "while":
+                trips = mh._trip_count(i)
+                b = HC._BODY_RE.search(i.attrs)
+                if b:
+                    walk(b.group(1), mult * trips)
+            elif opc in ("fusion", "call", "async-start"):
+                m = HC._CALLS_RE.search(i.attrs)
+                if m:
+                    walk(m.group(1), mult)
+            else:
+                base = opc[:-6] if opc.endswith("-start") else opc
+                if base in HC._COLLECTIVES:
+                    agg[src(i)] += mult * i.result_bytes
+                    cnt[src(i)] += mult
+
+    walk(mh.entry, 1.0)
+    for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{v/1e9:9.2f} GB  n={cnt[k]:6.0f}  {k}")
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "whisper-base"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    mode = sys.argv[3] if len(sys.argv) > 3 else "bytes"
+    opts = tuple(sys.argv[4:])
+    txt = lower_cell(arch, shape, multi_pod=(mode == "multi"),
+                     opt_flags=opts)
+    if mode == "coll":
+        attribute_collectives(txt)
+    else:
+        attribute(txt)

@@ -1,0 +1,26 @@
+"""Dev tool: dump shapes of matching collective ops in a cell's HLO."""
+import sys
+
+from byte_attr import lower_cell  # noqa: E402  (same dir)
+
+import re
+
+
+def main():
+    arch, shape, pattern = sys.argv[1], sys.argv[2], sys.argv[3]
+    txt = lower_cell(arch, shape)
+    seen = {}
+    for line in txt.splitlines():
+        ls = line.strip()
+        if re.search(pattern, ls):
+            m = re.search(r"= (\(?\S+?\)?) (all-reduce|all-gather|"
+                          r"reduce-scatter|all-to-all)", ls)
+            if m:
+                key = (m.group(2), m.group(1)[:90])
+                seen[key] = seen.get(key, 0) + 1
+    for (op, s), c in sorted(seen.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"n={c:4d}  {op:14s} {s}")
+
+
+if __name__ == "__main__":
+    main()
