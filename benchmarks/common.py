@@ -14,7 +14,7 @@ from repro.models import build_model
 from repro.train.step import init_train_state, make_train_step
 
 
-@functools.lru_cache(maxsize=4)
+@functools.lru_cache(maxsize=8)
 def tiny_pair(arch: str = "deepseek-7b", layers: int = 2,
               base_steps: int = 40, ft_steps: int = 20):
     """Train a reduced model, then fine-tune on a shifted distribution.

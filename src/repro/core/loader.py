@@ -12,8 +12,15 @@ per module.  TPU-native mapping (DESIGN.md §3):
   ``unpack_apply`` kernel (vmapped over stacked layer/expert dims);
 * the base stays resident — swapping variants never reloads it.
 
-``swap_variant`` is the serving-path entry point; it returns new params
-and transfer/compute byte accounting for benchmarks.
+Two serving-path entry points, one per residency mode (DESIGN.md §6):
+
+* ``apply_artifact`` — swap-then-dense: materialise a full Ŵ copy per
+  variant (fast steady-state, max_resident bounded by HBM);
+* ``device_put_overlay`` — on-the-fly: transfer the packed delta as a
+  ``models/delta_overlay`` tree and let forward fuse it into each GEMM
+  (≈1/16 the resident bytes, no dense reconstruction ever).
+
+Both return transfer/compute byte accounting for benchmarks.
 """
 from __future__ import annotations
 
@@ -48,8 +55,7 @@ def _reconstruct_entry(entry, w_base: jax.Array, use_kernel: bool):
 
 
 def apply_artifact(base_params, dm: DeltaModel, *,
-                   param_shardings=None, use_kernel: bool = True,
-                   donate_extras: bool = True):
+                   param_shardings=None, use_kernel: bool = True):
     """Materialise fine-tuned params on device.
 
     param_shardings: optional tree matching base_params — packed buffers
@@ -89,6 +95,72 @@ def apply_artifact(base_params, dm: DeltaModel, *,
     stats = {"seconds": time.perf_counter() - t0,
              "transferred_bytes": int(transferred)}
     return params, stats
+
+
+def device_put_overlay(base_params, dm: DeltaModel, *,
+                       param_shardings=None, vec_dtype=jnp.float16,
+                       extras_dtype=jnp.float16):
+    """On-the-fly serving entry point: place a variant on device as a
+    packed :mod:`repro.models.delta_overlay` tree — NO dense reconstruction.
+
+    Transfers, per module, the packed mask (device_put with the base
+    weight's mask sharding) plus the fp16 axis vectors; extras (norms,
+    embeddings — uncompressed fine-tuned leaves) are swapped into a params
+    VIEW that aliases every unchanged base weight, so resident HBM cost is
+    overlay bytes + extras bytes (~1/16 of a dense fp16 copy when the
+    linear stacks dominate).
+
+    Returns (params_view, overlay, stats).  ``params_view`` pairs with
+    ``overlay`` as the (base_params, overlay) arguments of model
+    forward/prefill/decode_step.
+    """
+    from repro.models.delta_overlay import from_delta_entry, insert_entry
+
+    base_flat = flatten_params(base_params)
+    shard_flat = (flatten_params(param_shardings)
+                  if param_shardings is not None else None)
+    t0 = time.perf_counter()
+    transferred = 0
+    overlay_tree: dict = {}
+    out = {}
+    for path, wb in base_flat.items():
+        if path in dm.deltas:
+            e = from_delta_entry(dm.deltas[path], vec_dtype=vec_dtype)
+            packed = e.packed
+            if shard_flat is not None:
+                mask_sh = _mask_sharding(shard_flat[path], packed.ndim)
+                packed = jax.device_put(packed, mask_sh)
+            e = type(e)(packed=packed, v_row=jax.device_put(e.v_row),
+                        v_col=jax.device_put(e.v_col))
+            transferred += e.nbytes()
+            insert_entry(overlay_tree, path, e)
+            out[path] = wb                      # base weight, shared
+        elif path in dm.extras:
+            v = dm.extras[path].astype(extras_dtype)
+            if shard_flat is not None:
+                v = jax.device_put(v, shard_flat[path])
+            transferred += v.size * v.dtype.itemsize
+            out[path] = v
+        else:
+            out[path] = wb
+    params_view = unflatten_like(base_params, out)
+    leaves = jax.tree.leaves(overlay_tree) or jax.tree.leaves(params_view)
+    jax.block_until_ready(leaves[0])
+    stats = {"seconds": time.perf_counter() - t0,
+             "transferred_bytes": int(transferred)}
+    return params_view, overlay_tree, stats
+
+
+def fused_resident_bytes(base_params, params_view, overlay) -> int:
+    """HBM bytes a fused-resident variant actually adds on top of the
+    always-resident base: overlay buffers + extras leaves that are not
+    aliases of base arrays."""
+    base_ids = {id(leaf) for leaf in jax.tree.leaves(base_params)}
+    extra = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(params_view)
+                if id(leaf) not in base_ids)
+    from repro.models.delta_overlay import overlay_nbytes
+    return overlay_nbytes(overlay) + extra
 
 
 def _mask_sharding(weight_sharding, mask_ndim: int):

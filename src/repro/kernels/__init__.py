@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the perf-critical hot spots.
 
 - ``unpack_apply``: loader-path dense reconstruction Ŵ = v⊙unpack(B) + W_b.
-- ``bitlinear``:   on-the-fly fused delta GEMM y = x @ Ŵᵀ.
+- ``bitlinear``:   on-the-fly fused delta GEMM y = x @ Ŵᵀ (static axis mode).
+- ``bitlinear_axes``: dual-axis fused delta GEMM — the serving-overlay hot
+  path (v_eff = v_row ⊕ v_col; axis selection is data, not a static arg).
 - ``flash_attention_fwd``: serving-prefill flash attention with
   VMEM-resident logits (the memory-bound prefill cells' fix).
 
@@ -9,5 +11,5 @@
 validated against them in interpret mode (tests/test_kernels.py,
 tests/test_flash_kernel.py).
 """
-from repro.kernels.ops import (bitlinear, flash_attention_fwd,  # noqa: F401
-                               unpack_apply)
+from repro.kernels.ops import (bitlinear, bitlinear_axes,  # noqa: F401
+                               flash_attention_fwd, unpack_apply)

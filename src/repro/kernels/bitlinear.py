@@ -48,6 +48,58 @@ def _kernel(x_ref, packed_ref, v_ref, wb_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _kernel_axes(x_ref, packed_ref, vr_ref, vc_ref, wb_ref, out_ref):
+    """Dual-axis variant: effective scale v[n,k] = v_row[n] + v_col[k].
+
+    The serving overlay (models/delta_overlay.py) zeroes the UNSELECTED
+    axis vector per matrix, so the sum reduces to exactly the selected
+    per-axis scale — one kernel covers row, col and scalar entries, and
+    the axis choice stays a plain array (scan/vmap-able over stacked
+    layers) instead of a static mode argument.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    signs = _unpack_tile(packed_ref[...], jnp.float32)      # (bn, bk)
+    v = (vr_ref[...].astype(jnp.float32)                    # (bn, 1)
+         + vc_ref[...].astype(jnp.float32))                 # (1, bk)
+    w_hat = (v * signs + wb_ref[...].astype(jnp.float32))   # (bn, bk)
+    x = x_ref[...].astype(jnp.float32)                      # (bm, bk)
+    out_ref[...] += jax.lax.dot_general(
+        x, w_hat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def bitlinear_axes_p(x: jax.Array, packed: jax.Array, vr2d: jax.Array,
+                     vc2d: jax.Array, w_base: jax.Array, *, block_m: int,
+                     block_n: int, block_k: int,
+                     interpret: bool) -> jax.Array:
+    m, k_dim = x.shape
+    n, _ = w_base.shape
+    assert k_dim % PACK == 0 and block_k % PACK == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    assert vr2d.shape == (n, 1) and vc2d.shape == (1, k_dim)
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+
+    return pl.pallas_call(
+        _kernel_axes,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k // PACK), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, vr2d, vc2d, w_base)
+
+
 def bitlinear_p(x: jax.Array, packed: jax.Array, v2d: jax.Array,
                 w_base: jax.Array, *, block_m: int, block_n: int,
                 block_k: int, interpret: bool) -> jax.Array:

@@ -87,6 +87,30 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(b, hq, s, hd).transpose(0, 2, 1, 3)
 
 
+@jax.jit
+def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
+                   v_col: jax.Array, w_base: jax.Array) -> jax.Array:
+    """Fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ.
+
+    Effective scale v[n,k] = v_row[n] + v_col[k]; the on-the-fly serving
+    overlay zeroes the unselected axis vector per matrix, so this one
+    entry point covers row-, col- and scalar-scaled deltas with no static
+    mode argument (the axis choice stays data, scan-able over layers).
+    x may carry leading batch dims; fp32 accumulate, cast back to x.dtype.
+    """
+    *lead, k_dim = x.shape
+    n, _ = w_base.shape
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    bm = _pick_block(m, _TILE_M)
+    bn = _pick_block(n, _TILE_N)
+    bk = _pick_block(k_dim, _TILE_K, multiple=PACK)
+    y = _bl.bitlinear_axes_p(
+        x2, packed, v_row.reshape(n, 1), v_col.reshape(1, k_dim), w_base,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    return y.astype(x.dtype).reshape(*lead, n)
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
 def bitlinear(x: jax.Array, packed: jax.Array, v: jax.Array,
               w_base: jax.Array, mode: str = "row") -> jax.Array:

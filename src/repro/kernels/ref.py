@@ -26,3 +26,15 @@ def bitlinear_ref(x: jax.Array, packed: jax.Array, v: jax.Array,
     """
     w_hat = D.reconstruct(packed, v, w_base, mode, dtype=jnp.float32)
     return (x.astype(jnp.float32) @ w_hat.T).astype(x.dtype)
+
+
+def bitlinear_axes_ref(x: jax.Array, packed: jax.Array, v_row: jax.Array,
+                       v_col: jax.Array, w_base: jax.Array) -> jax.Array:
+    """Dual-axis oracle: v[n,k] = v_row[n] + v_col[k] (overlay convention:
+    the unselected vector is zero, so the sum IS the selected scale)."""
+    d_out, d_in = w_base.shape
+    signs = D.unpack_signs(packed, d_in, jnp.float32)
+    v = (v_row.astype(jnp.float32)[:, None]
+         + v_col.astype(jnp.float32)[None, :])
+    w_hat = v * signs + w_base.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w_hat.T).astype(x.dtype)

@@ -1,7 +1,11 @@
 """Serving launcher: multi-tenant engine over synthetic delta variants.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-        --variants 3 --requests 12
+        --variants 3 --requests 12 --mode fused
+
+--mode fused keeps variants resident as packed delta overlays (on-the-fly
+fused GEMMs, ~1/16 the HBM per variant); --mode dense materialises full
+copies (the classic hot-swap path).
 """
 from __future__ import annotations
 
@@ -16,6 +20,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", choices=("dense", "fused"), default="dense")
+    ap.add_argument("--max-resident", type=int, default=0,
+                    help="0 -> 2 for dense, 8 for fused")
     args = ap.parse_args()
 
     import jax
@@ -32,7 +39,8 @@ def main():
     model = build_model(cfg)
     base, _ = split(model.init(jax.random.PRNGKey(0)))
 
-    reg = VariantRegistry(base, max_resident=2)
+    max_resident = args.max_resident or (8 if args.mode == "fused" else 2)
+    reg = VariantRegistry(base, max_resident=max_resident, mode=args.mode)
     for i in range(args.variants):
         key = jax.random.PRNGKey(100 + i)
         leaves, treedef = jax.tree.flatten(base)

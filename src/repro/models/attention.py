@@ -42,7 +42,7 @@ def attn_init(key, cfg) -> dict:
 
 
 def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
-                theta) -> tuple[jax.Array, jax.Array, jax.Array]:
+                theta, ov=None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd), RoPE'd (if theta).
 
     Sharding strategy (picked by divisibility against the live mesh):
@@ -57,11 +57,12 @@ def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
     """
     from repro.distributed.sharding import ctx_axis_size, ctx_forward_only
     from repro.distributed.sharding import logical_constraint as _lc
+    from repro.models.layers import _oget, linear
     b, s, _ = x.shape
     ms = ctx_axis_size("model") or 1
-    q = x @ p["wq"].T.astype(x.dtype)
-    k = x @ p["wk"].T.astype(x.dtype)
-    v = x @ p["wv"].T.astype(x.dtype)
+    q = linear(x, p["wq"], _oget(ov, "wq"))
+    k = linear(x, p["wk"], _oget(ov, "wk"))
+    v = linear(x, p["wv"], _oget(ov, "wv"))
     if cfg.num_heads % ms == 0 and cfg.num_kv_heads % ms == 0:
         # full head-TP
         q = _lc(q, "act_batch", "act_seq", "act_heads")

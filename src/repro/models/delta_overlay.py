@@ -1,0 +1,99 @@
+"""Delta overlay: per-module packed deltas that ride alongside base params.
+
+The paper's §4 on-the-fly variant: instead of materialising a dense copy of
+every resident fine-tune (``core/loader.apply_artifact``), a variant is kept
+on device as a pytree of :class:`OverlayEntry` — packed sign mask + per-axis
+fp16 scale vectors — that MIRRORS the params tree structure.  Model forwards
+accept the overlay as an optional argument and dispatch any matmul whose
+module has an entry to the fused delta GEMM (``kernels/ops.bitlinear_axes``),
+so the dense Ŵ is never written to HBM: ~1/16 the resident bytes of a dense
+fp16 copy per variant.
+
+Canonical form (one kernel, no static axis mode):
+  v_eff[n, k] = v_row[n] + v_col[k]
+with the UNSELECTED axis vector zeroed per matrix (scalar entries broadcast
+their per-matrix scalar into v_row).  The axis choice therefore stays plain
+array data, so stacked entries (leading layer/expert dims) ride through
+``lax.scan`` / ``vmap`` exactly like the base weights they shadow.
+
+Structure contract: the overlay is a nested dict following the params tree
+(``overlay["layers"]["attn"]["wq"] -> OverlayEntry``); entries under scanned
+stacks carry the same leading layer dim as the stacked weight.  Missing keys
+mean "serve this module from the base weight" — ``oget`` resolves both.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OverlayEntry:
+    """One target matrix (stack): packed mask + canonical axis vectors."""
+    packed: jax.Array            # (..., d_out, d_in//8) uint8
+    v_row: jax.Array             # (..., d_out) — zero where col-selected
+    v_col: jax.Array             # (..., d_in) — zero where row-selected
+
+    def nbytes(self) -> int:
+        return (self.packed.size * self.packed.dtype.itemsize
+                + self.v_row.size * self.v_row.dtype.itemsize
+                + self.v_col.size * self.v_col.dtype.itemsize)
+
+
+def from_delta_entry(entry, vec_dtype=jnp.float16) -> OverlayEntry:
+    """Canonicalise a calibration ``DeltaEntry`` for on-the-fly execution.
+
+    Row-selected matrices keep v_row and zero v_col (and vice versa);
+    scalar (BitDelta) entries broadcast the per-matrix scalar into v_row.
+    Vectors are stored fp16 on device (the paper's artifact precision).
+    """
+    packed = entry.packed
+    d_out = packed.shape[-2]
+    lead = packed.shape[:-2]
+    if entry.scalar:
+        v_row = jnp.broadcast_to(
+            entry.v_row.astype(jnp.float32)[..., None], lead + (d_out,))
+        v_col = jnp.zeros(lead + (packed.shape[-1] * 8,), jnp.float32)
+    else:
+        sel = entry.use_row[..., None]
+        v_row = jnp.where(sel, entry.v_row.astype(jnp.float32), 0.0)
+        v_col = jnp.where(sel, 0.0, entry.v_col.astype(jnp.float32))
+    return OverlayEntry(packed=packed, v_row=v_row.astype(vec_dtype),
+                        v_col=v_col.astype(vec_dtype))
+
+
+def insert_entry(tree: dict, path: str, entry: OverlayEntry) -> None:
+    """Insert an entry at a dot-path, mirroring the params tree structure
+    (the single definition of the overlay path scheme)."""
+    node = tree
+    parts = path.split(".")
+    for part in parts[:-1]:
+        node = node.setdefault(part, {})
+    node[parts[-1]] = entry
+
+
+def overlay_from_deltas(deltas: dict, vec_dtype=jnp.float16) -> dict:
+    """{flat path -> DeltaEntry} -> nested overlay tree mirroring params."""
+    tree: dict = {}
+    for path, entry in deltas.items():
+        insert_entry(tree, path, from_delta_entry(entry, vec_dtype=vec_dtype))
+    return tree
+
+
+def oget(overlay, key: str):
+    """Resolve one level of an overlay tree; None/absent/empty -> None."""
+    if not overlay:
+        return None
+    sub = overlay.get(key) if isinstance(overlay, dict) else None
+    if isinstance(sub, dict) and not sub:
+        return None
+    return sub
+
+
+def overlay_nbytes(overlay) -> int:
+    """Device-resident bytes of an overlay tree."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(overlay))

@@ -12,6 +12,26 @@ def cast_to(x: jax.Array, dtype_name: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# shared linear: every family's projection matmul routes through here so a
+# delta overlay entry (models/delta_overlay.py) can swap the dense GEMM for
+# the fused on-the-fly delta GEMM without touching call sites
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w: jax.Array, ov=None) -> jax.Array:
+    """y = x @ Ŵᵀ where Ŵ = w without an overlay entry, else the variant
+    weight v ⊙ unpack(B) + w applied on the fly (never densified)."""
+    if ov is None:
+        return x @ w.T.astype(x.dtype)
+    from repro.kernels import ops as K
+    return K.bitlinear_axes(x, ov.packed, ov.v_row, ov.v_col, w)
+
+
+def _oget(ov, key):
+    from repro.models.delta_overlay import oget
+    return oget(ov, key)
+
+
+# ---------------------------------------------------------------------------
 # RMSNorm (fp32 internally)
 # ---------------------------------------------------------------------------
 
@@ -124,9 +144,10 @@ def mlp_init(key, d: int, d_ff: int) -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
-    h = jax.nn.silu(x @ p["w_gate"].T.astype(x.dtype)) * (x @ p["w_up"].T.astype(x.dtype))
-    return h @ p["w_down"].T.astype(x.dtype)
+def mlp_apply(p: dict, x: jax.Array, ov=None) -> jax.Array:
+    h = (jax.nn.silu(linear(x, p["w_gate"], _oget(ov, "w_gate")))
+         * linear(x, p["w_up"], _oget(ov, "w_up")))
+    return linear(h, p["w_down"], _oget(ov, "w_down"))
 
 
 # ---------------------------------------------------------------------------
@@ -141,5 +162,6 @@ def mlp2_init(key, d: int, d_ff: int) -> dict:
     }
 
 
-def mlp2_apply(p: dict, x: jax.Array) -> jax.Array:
-    return jax.nn.gelu(x @ p["w_in"].T.astype(x.dtype)) @ p["w_out"].T.astype(x.dtype)
+def mlp2_apply(p: dict, x: jax.Array, ov=None) -> jax.Array:
+    return linear(jax.nn.gelu(linear(x, p["w_in"], _oget(ov, "w_in"))),
+                  p["w_out"], _oget(ov, "w_out"))

@@ -31,15 +31,21 @@ class Model:
         return self._mod.init(rng, self.cfg)
 
     # -- compute -----------------------------------------------------------
-    def forward(self, params, batch):
-        return self._mod.forward(params, batch, self.cfg)
+    # ``overlay`` (models/delta_overlay.py) is an optional pytree of packed
+    # per-module deltas riding alongside ``params``: matmuls with an entry
+    # dispatch to the fused on-the-fly delta GEMM (serving a variant with
+    # zero dense reconstruction); None means plain base/materialised params.
+    def forward(self, params, batch, overlay=None):
+        return self._mod.forward(params, batch, self.cfg, overlay=overlay)
 
-    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16,
+                overlay=None):
         return self._mod.prefill(params, batch, self.cfg, max_len,
-                                 cache_dtype=cache_dtype)
+                                 cache_dtype=cache_dtype, overlay=overlay)
 
-    def decode_step(self, params, token, cache):
-        return self._mod.decode_step(params, token, cache, self.cfg)
+    def decode_step(self, params, token, cache, overlay=None):
+        return self._mod.decode_step(params, token, cache, self.cfg,
+                                     overlay=overlay)
 
     # -- caches ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):

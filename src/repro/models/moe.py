@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import logical_constraint
+from repro.models.delta_overlay import oget
+from repro.models.layers import linear
 from repro.models.param import Param, dense_init
 
 
@@ -60,7 +62,18 @@ def _group_tokens(x: jax.Array, target_group: int = 4096
     return x.reshape(g, n, d), (b, s, d)
 
 
-def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+def _expert_mm(xe: jax.Array, w: jax.Array, ent) -> jax.Array:
+    """Per-expert matmul: xe (E, M, D) · w (E, F, D) -> (E, M, F).
+
+    With a delta-overlay entry (stacked over the expert dim) each expert's
+    GEMM runs the fused on-the-fly delta kernel against its base weight."""
+    if ent is None:
+        return jnp.einsum("emd,efd->emf", xe, w.astype(xe.dtype))
+    return jax.vmap(lambda x_, e_, w_: linear(x_, w_, e_))(xe, ent, w)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg, ov=None
+              ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (y, aux_loss)."""
     e, k = cfg.num_experts, cfg.top_k
     xg, orig = _group_tokens(x)
@@ -89,13 +102,23 @@ def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
         xg[:, None, :, :], c_idx[..., None], axis=2)            # (G,E,C,D)
     xd = logical_constraint(xd, "act_groups", "act_experts", None, None)
 
-    # grouped expert GEMMs (gated SwiGLU)
-    wg = p["w_gate"].astype(x.dtype)
-    wu = p["w_up"].astype(x.dtype)
-    wd = p["w_down"].astype(x.dtype)
-    h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xd, wg)) * \
-        jnp.einsum("gecd,efd->gecf", xd, wu)
-    yd = jnp.einsum("gecf,edf->gecd", h, wd)
+    # grouped expert GEMMs (gated SwiGLU); with an overlay the per-expert
+    # matmuls run expert-major (E, G·C, ·) so the fused delta kernel sees
+    # one (M, K) GEMM per expert stack entry
+    if ov is not None and any(oget(ov, k_) is not None
+                              for k_ in ("w_gate", "w_up", "w_down")):
+        xe = xd.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+        he = (jax.nn.silu(_expert_mm(xe, p["w_gate"], oget(ov, "w_gate")))
+              * _expert_mm(xe, p["w_up"], oget(ov, "w_up")))
+        ye = _expert_mm(he, p["w_down"], oget(ov, "w_down"))
+        yd = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+    else:
+        wg = p["w_gate"].astype(x.dtype)
+        wu = p["w_up"].astype(x.dtype)
+        wd = p["w_down"].astype(x.dtype)
+        h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xd, wg)) * \
+            jnp.einsum("gecd,efd->gecf", xd, wu)
+        yd = jnp.einsum("gecf,edf->gecd", h, wd)
     yd = yd * c_val[..., None].astype(x.dtype)                  # combine weight
     # mask out capacity slots that hold zero-score (unrouted) tokens
     yd = jnp.where((c_val > 0)[..., None], yd, 0)
@@ -116,7 +139,7 @@ def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
     # redundant shared-expert FLOPs.
     if "shared" in p:
         from repro.models.layers import mlp_apply
-        y = y + mlp_apply(p["shared"], xg)
+        y = y + mlp_apply(p["shared"], xg, ov=oget(ov, "shared"))
 
     # load-balancing aux loss (Switch-style): f_i · P_i summed over experts
     frac_tokens = jnp.mean(

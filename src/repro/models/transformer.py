@@ -18,8 +18,9 @@ import jax.numpy as jnp
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import attention as A
 from repro.models import moe as MOE
-from repro.models.layers import (cast_to, embed_init, embed_lookup, mlp_apply,
-                                 mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.delta_overlay import oget
+from repro.models.layers import (cast_to, embed_init, embed_lookup, linear,
+                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init)
 from repro.models.param import dense_init, stack_layers
 
 
@@ -90,13 +91,15 @@ def init(rng, cfg) -> dict:
 # ---------------------------------------------------------------------------
 
 def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
-               decode_pos=None, io=None):
+               decode_pos=None, io=None, ov=None):
     """Attention sub-block.  Returns (out, (k, v)) — k/v exported for cache
     building during prefill.  ``io`` (dict or None) collects per-linear
     (input, output) pairs — the functional stand-in for the paper's
-    PyTorch forward hooks (calibration cache, Alg. 3)."""
+    PyTorch forward hooks (calibration cache, Alg. 3).  ``ov`` is the
+    block's delta-overlay subtree (on-the-fly variant execution)."""
+    ov_a = oget(ov, "attn")
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, theta)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, theta, ov=ov_a)
     if kv_override is None:
         o = A.flash_attention(q, k, v, causal=True, window=window)
     else:
@@ -107,7 +110,7 @@ def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
     # constraint forces the row-parallel psum HERE, in bf16 — without it
     # GSPMD defers the reduction into the next op's fp32 domain (rmsnorm
     # upcast), doubling the wire bytes of every TP all-reduce
-    wo_out = lc(o @ p["attn"]["wo"].T.astype(x.dtype),
+    wo_out = lc(linear(o, p["attn"]["wo"], oget(ov_a, "wo")),
                 "act_batch", "act_seq", None)
     if io is not None:
         b, s, _ = x.shape
@@ -118,12 +121,12 @@ def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
     return x + wo_out, (k, v)
 
 
-def _ffn_part(p, x, cfg, io=None):
+def _ffn_part(p, x, cfg, io=None, ov=None):
     h = rmsnorm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
-        y, aux = MOE.moe_apply(p["moe"], h, cfg)
+        y, aux = MOE.moe_apply(p["moe"], h, cfg, ov=oget(ov, "moe"))
     else:
-        y, aux = lc(mlp_apply(p["mlp"], h),
+        y, aux = lc(mlp_apply(p["mlp"], h, ov=oget(ov, "mlp")),
                     "act_batch", "act_seq", None), jnp.float32(0)
         if io is not None:
             gate = h @ p["mlp"]["w_gate"].T.astype(h.dtype)
@@ -135,12 +138,12 @@ def _ffn_part(p, x, cfg, io=None):
     return x + y, aux
 
 
-def block_apply(p, x, cfg, positions, theta, window, io=None):
+def block_apply(p, x, cfg, positions, theta, window, io=None, ov=None):
     # bf16 residual-stream boundary: the block-input cotangent (where the
     # column-parallel backward psum lands) stays bf16
     x = lc(x, "act_batch", "act_seq", None)
-    x, kv = _attn_part(p, x, cfg, positions, theta, window, io=io)
-    x, aux = _ffn_part(p, x, cfg, io=io)
+    x, kv = _attn_part(p, x, cfg, positions, theta, window, io=io, ov=ov)
+    x, aux = _ffn_part(p, x, cfg, io=io, ov=ov)
     return x, kv, aux
 
 
@@ -168,13 +171,15 @@ def _unembed(params, x, cfg):
 # ---------------------------------------------------------------------------
 
 def forward(params, batch, cfg, collect_kv: bool = False,
-            collect_io: bool = False):
+            collect_io: bool = False, overlay=None):
     """-> (logits (B,S,V), aux dict).
 
     aux["kv"] (L,B,S,Hkv,hd)×2 when collect_kv (prefill cache building).
     aux["io"] {proj_name: (X (L,B,S,·), Y (L,B,S,·))} when collect_io — the
     calibration cache stand-in for the paper's forward hooks; stacked over
     scan layers, so one forward yields every layer's linear IO.
+    overlay: optional delta-overlay tree mirroring params — matmuls with an
+    entry run the fused on-the-fly delta GEMM against the base weight.
     """
     x = embed_inputs(params, batch, cfg)
     b, s, _ = x.shape
@@ -186,13 +191,15 @@ def forward(params, batch, cfg, collect_kv: bool = False,
     n_pre = 0
     if "pre_layers" in params:
         pre = params["pre_layers"]
+        ov_pre = oget(overlay, "pre_layers")
         n_pre = jax.tree.leaves(pre)[0].shape[0]
         for i in range(n_pre):
             pi = jax.tree.map(lambda a: a[i], pre)
+            ov_i = jax.tree.map(lambda a: a[i], ov_pre)
             io_i = {} if collect_io else None
             x, kv, aux = block_apply(pi, x, cfg, positions,
                                      cfg.rope_theta, cfg.sliding_window,
-                                     io=io_i)
+                                     io=io_i, ov=ov_i)
             aux_total += aux
             if collect_kv:
                 kv_all.append(kv)
@@ -200,13 +207,14 @@ def forward(params, batch, cfg, collect_kv: bool = False,
                 pre_io.append(io_i)
 
     thetas, windows = scan_layer_meta(cfg, cfg.num_layers - n_pre)
+    ov_layers = oget(overlay, "layers")
 
     def body(carry, xs):
         h, aux_acc = carry
-        lp, theta, window = xs
+        lp, ovl, theta, window = xs
         io_i = {} if collect_io else None
         h, kv, aux = block_apply(lp, h, cfg, positions, theta, window,
-                                 io=io_i)
+                                 io=io_i, ov=ovl)
         ys = (kv if collect_kv else None, io_i if collect_io else None)
         return (h, aux_acc + aux), ys
 
@@ -216,7 +224,8 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             body, policy=jax.checkpoint_policies.nothing_saveable)
 
     (x, aux_total), (kv_scan, io_scan) = jax.lax.scan(
-        body_fn, (x, aux_total), (params["layers"], thetas, windows))
+        body_fn, (x, aux_total), (params["layers"], ov_layers,
+                                  thetas, windows))
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = _unembed(params, x, cfg)
@@ -298,39 +307,43 @@ def cache_pspecs(cfg, long_context: bool,
     return spec
 
 
-def _decode_block(p, x, cfg, layer_cache, pat_entry, pos):
+def _decode_block(p, x, cfg, layer_cache, pat_entry, pos, ov=None):
     """One layer in decode mode; returns (x, updated layer cache)."""
     window = pat_entry["window"]
+    ov_a = oget(ov, "attn")
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"])
+    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"],
+                            ov=ov_a)
     new_cache = A.cache_insert(layer_cache, k, v, pos, ring=window > 0)
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos, window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + o @ p["attn"]["wo"].T.astype(x.dtype)
-    x, _ = _ffn_part(p, x, cfg)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"))
+    x, _ = _ffn_part(p, x, cfg, ov=ov)
     return x, new_cache
 
 
-def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos):
+def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos, ov=None):
     """One layer in decode mode against a STACKED cache carried by the
     scan: inserts one token in place, reads the layer slice for attention.
     Returns (x, updated stacked caches)."""
     window = pat_entry["window"]
+    ov_a = oget(ov, "attn")
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"])
+    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"],
+                            ov=ov_a)
     caches = A.cache_insert_stacked(caches, idx, k, v, pos,
                                     ring=window > 0)
     view = A.cache_layer_view(caches, idx)
     o = A.decode_attention(q, view["k"], view["v"], view["slot_pos"], pos,
                            window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + o @ p["attn"]["wo"].T.astype(x.dtype)
-    x, _ = _ffn_part(p, x, cfg)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"))
+    x, _ = _ffn_part(p, x, cfg, ov=ov)
     return x, caches
 
 
-def decode_step(params, token, cache, cfg):
+def decode_step(params, token, cache, cfg, overlay=None):
     """token (B,) int32 -> (logits (B,V), updated cache)."""
     pos = cache["pos"]
     x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
@@ -340,39 +353,47 @@ def decode_step(params, token, cache, cfg):
     new_cache = {"pos": pos + 1, "slots": None}
     if "pre_layers" in params:
         pre = params["pre_layers"]
+        ov_pre = oget(overlay, "pre_layers")
         n_pre = jax.tree.leaves(pre)[0].shape[0]
         pre_out = []
         for i in range(n_pre):
             pi = jax.tree.map(lambda a: a[i], pre)
+            ov_i = jax.tree.map(lambda a: a[i], ov_pre)
             ci = jax.tree.map(lambda a: a[i], cache["pre"])
             x, ci_new = _decode_block(
-                pi, x, cfg, ci, {"window": 0, "theta": cfg.rope_theta}, pos)
+                pi, x, cfg, ci, {"window": 0, "theta": cfg.rope_theta}, pos,
+                ov=ov_i)
             pre_out.append(ci_new)
         new_cache["pre"] = jax.tree.map(lambda *a: jnp.stack(a), *pre_out)
 
     n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
     n_scan = cfg.num_layers - n_pre
     n_super = n_scan // len(pat)
-    # reshape flat (L, ...) params to (n_super, pattern_len, ...)
+    # reshape flat (L, ...) params to (n_super, pattern_len, ...); the
+    # overlay shadows the params stack, so it reshapes identically
     sup_params = jax.tree.map(
         lambda a: a.reshape(n_super, len(pat), *a.shape[1:]), params["layers"])
+    sup_overlay = jax.tree.map(
+        lambda a: a.reshape(n_super, len(pat), *a.shape[1:]),
+        oget(overlay, "layers"))
 
     # caches ride in the scan CARRY (in-place one-token DUS per layer);
     # passing them as xs/ys would rewrite the full cache every step
     def body(carry, xs):
         h, slots = carry
-        lp, idx = xs
+        lp, ovl, idx = xs
         new_slots = []
         for j, entry in enumerate(pat):
             pj = jax.tree.map(lambda a: a[j], lp)
+            ovj = jax.tree.map(lambda a: a[j], ovl)
             h, cj = _decode_block_stacked(pj, h, cfg, slots[j], idx,
-                                          entry, pos)
+                                          entry, pos, ov=ovj)
             new_slots.append(cj)
         return (h, new_slots), None
 
     (x, new_slots), _ = jax.lax.scan(
         body, (x, list(cache["slots"])),
-        (sup_params, jnp.arange(n_super)))
+        (sup_params, sup_overlay, jnp.arange(n_super)))
     new_cache["slots"] = new_slots
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -384,9 +405,11 @@ def decode_step(params, token, cache, cfg):
 # prefill: full forward + cache build
 # ---------------------------------------------------------------------------
 
-def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
+            overlay=None):
     """Teacher-forced pass over the prompt; returns (last_logits, cache)."""
-    logits, aux = forward(params, batch, cfg, collect_kv=True)
+    logits, aux = forward(params, batch, cfg, collect_kv=True,
+                          overlay=overlay)
     b = batch["tokens"].shape[0]
     s = logits.shape[1]
     cache = init_cache(cfg, b, max_len, cache_dtype)

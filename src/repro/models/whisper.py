@@ -14,9 +14,10 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import attention as A
-from repro.models.layers import (embed_init, embed_lookup, mlp2_apply,
-                                 mlp2_init, rmsnorm, rmsnorm_init,
-                                 sinusoidal_positions)
+from repro.models.delta_overlay import oget
+from repro.models.layers import (embed_init, embed_lookup, linear,
+                                 mlp2_apply, mlp2_init, rmsnorm,
+                                 rmsnorm_init, sinusoidal_positions)
 from repro.models.param import dense_init, stack_layers
 
 
@@ -51,7 +52,7 @@ def dec_block_init(key, cfg) -> dict:
             "mlp": mlp2_init(k3, cfg.d_model, cfg.d_ff)}
 
 
-def _qkv(p, xq, xkv, cfg):
+def _qkv(p, xq, xkv, cfg, ov=None):
     """Whisper has 8 heads vs a 16-way model axis → sequence-TP attention
     (see attention.qkv_project): shard the q sequence over `model`; the
     encoder side (1500 frames, not divisible) falls back to replicated."""
@@ -62,19 +63,20 @@ def _qkv(p, xq, xkv, cfg):
     head_tp = cfg.num_heads % ms == 0
     axes = (("act_batch", "act_seq", "act_heads") if head_tp
             else ("act_batch", "act_seq_tp", None))
-    q = lc(xq @ p["wq"].T.astype(xq.dtype), *axes)
-    k = lc(xkv @ p["wk"].T.astype(xq.dtype), *axes)
-    v = lc(xkv @ p["wv"].T.astype(xq.dtype), *axes)
+    q = lc(linear(xq, p["wq"], oget(ov, "wq")).astype(xq.dtype), *axes)
+    k = lc(linear(xkv, p["wk"], oget(ov, "wk")).astype(xq.dtype), *axes)
+    v = lc(linear(xkv, p["wv"], oget(ov, "wv")).astype(xq.dtype), *axes)
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     return q, k, v
 
 
-def _attn(p, xq, xkv, cfg, causal):
-    q, k, v = _qkv(p, xq, xkv, cfg)
+def _attn(p, xq, xkv, cfg, causal, ov=None):
+    q, k, v = _qkv(p, xq, xkv, cfg, ov=ov)
     o = A.flash_attention(q, k, v, causal=causal)
-    return o.reshape(*xq.shape[:-1], cfg.q_dim) @ p["wo"].T.astype(xq.dtype)
+    return linear(o.reshape(*xq.shape[:-1], cfg.q_dim), p["wo"],
+                  oget(ov, "wo"))
 
 
 # ---------------------------------------------------------------------------
@@ -99,16 +101,19 @@ def _tap_linear(io, name, x_in, w, out):
         io[name] = (x_in, out)
 
 
-def encode(params, frames: jax.Array, cfg, collect_io: bool = False):
+def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
+           overlay=None):
     """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
     x = frames.astype(jnp.dtype(cfg.compute_dtype))
     x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
     x = lc(x, "act_batch", "act_seq", "act_embed")
 
-    def body(h, lp):
+    def body(h, xs):
+        lp, ovl = xs
+        ov_a = oget(ovl, "attn")
         io = {} if collect_io else None
         hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["attn"], hn, hn, cfg)
+        q, k, v = _qkv(lp["attn"], hn, hn, cfg, ov=ov_a)
         b, f, _ = hn.shape
         if io is not None:
             io["attn.wq"] = (hn, q.reshape(b, f, -1))
@@ -116,14 +121,16 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False):
             io["attn.wv"] = (hn, v.reshape(b, f, -1))
         o = A.flash_attention(q, k, v, causal=False
                               ).reshape(b, f, cfg.q_dim)
-        wo_out = o @ lp["attn"]["wo"].T.astype(h.dtype)
+        wo_out = linear(o, lp["attn"]["wo"], oget(ov_a, "wo"))
         _tap_linear(io, "attn.wo", o, None, wo_out)
         h = h + wo_out
+        ov_m = oget(ovl, "mlp")
         hm = rmsnorm(h, lp["ln2"], cfg.norm_eps)
-        mid = jax.nn.gelu(hm @ lp["mlp"]["w_in"].T.astype(h.dtype))
-        out = mid @ lp["mlp"]["w_out"].T.astype(h.dtype)
+        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in")))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"))
         if io is not None:
-            io["mlp.w_in"] = (hm, hm @ lp["mlp"]["w_in"].T.astype(h.dtype))
+            io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
+                                         oget(ov_m, "w_in")))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         return h, io
@@ -132,41 +139,45 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False):
     if cfg.remat and not collect_io:
         body_fn = jax.checkpoint(body,
                                  policy=jax.checkpoint_policies.nothing_saveable)
-    x, enc_io = jax.lax.scan(body_fn, x, params["enc_layers"])
+    x, enc_io = jax.lax.scan(body_fn, x, (params["enc_layers"],
+                                          oget(overlay, "enc_layers")))
     out = rmsnorm(x, params["enc_norm"], cfg.norm_eps)
     return (out, enc_io) if collect_io else (out, None)
 
 
 def forward(params, batch, cfg, collect_kv: bool = False,
-            collect_io: bool = False):
+            collect_io: bool = False, overlay=None):
     """Teacher-forced: batch = {"tokens" (B,S), "frames" (B,F,d)}.
 
     collect_io: per-linear (X, Y) calibration caches as stacked scan
     outputs (aux["enc_io"] / aux["dec_io"]) — Alg. 3's hooks for the
     encoder-decoder family."""
     enc_out, enc_io = encode(params, batch["frames"], cfg,
-                             collect_io=collect_io)
+                             collect_io=collect_io, overlay=overlay)
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
     x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
     x = lc(x, "act_batch", "act_seq", "act_embed")
 
-    def body(h, lp):
+    def body(h, xs):
+        lp, ovl = xs
         io = {} if collect_io else None
+        ov_s = oget(ovl, "self_attn")
         hs = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg)
+        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s)
         if io is not None:
             io["self_attn.wq"] = (hs, q.reshape(b, s, -1))
             io["self_attn.wk"] = (hs, k.reshape(b, s, -1))
             io["self_attn.wv"] = (hs, v.reshape(b, s, -1))
         o = A.flash_attention(q, k, v, causal=True)
         o = o.reshape(b, s, cfg.q_dim)
-        wo_out = o @ lp["self_attn"]["wo"].T.astype(h.dtype)
+        wo_out = linear(o, lp["self_attn"]["wo"], oget(ov_s, "wo"))
         _tap_linear(io, "self_attn.wo", o, None, wo_out)
         h = h + wo_out
+        ov_x = oget(ovl, "cross_attn")
         hx = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
-        qx, kx, vx = _qkv(lp["cross_attn"], hx, enc_out, cfg)
+        qx, kx, vx = _qkv(lp["cross_attn"], hx, enc_out, cfg, ov=ov_x)
         if io is not None:
             f = enc_out.shape[1]
             io["cross_attn.wq"] = (hx, qx.reshape(b, s, -1))
@@ -174,14 +185,16 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             io["cross_attn.wv"] = (enc_out, vx.reshape(b, f, -1))
         ox = A.flash_attention(qx, kx, vx, causal=False
                                ).reshape(b, s, cfg.q_dim)
-        xo_out = ox @ lp["cross_attn"]["wo"].T.astype(h.dtype)
+        xo_out = linear(ox, lp["cross_attn"]["wo"], oget(ov_x, "wo"))
         _tap_linear(io, "cross_attn.wo", ox, None, xo_out)
         h = h + xo_out
+        ov_m = oget(ovl, "mlp")
         hm = rmsnorm(h, lp["ln2"], cfg.norm_eps)
-        mid = jax.nn.gelu(hm @ lp["mlp"]["w_in"].T.astype(h.dtype))
-        out = mid @ lp["mlp"]["w_out"].T.astype(h.dtype)
+        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in")))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"))
         if io is not None:
-            io["mlp.w_in"] = (hm, hm @ lp["mlp"]["w_in"].T.astype(h.dtype))
+            io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
+                                         oget(ov_m, "w_in")))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         ys = (k, v) if collect_kv else None
@@ -191,7 +204,8 @@ def forward(params, batch, cfg, collect_kv: bool = False,
     if cfg.remat and not collect_io:
         body_fn = jax.checkpoint(body,
                                  policy=jax.checkpoint_policies.nothing_saveable)
-    x, (kv, dec_io) = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x, (kv, dec_io) = jax.lax.scan(body_fn, x, (params["dec_layers"],
+                                                oget(overlay, "dec_layers")))
     x = rmsnorm(x, params["dec_norm"], cfg.norm_eps)
     logits = x @ params["embed"].T.astype(x.dtype)  # tied embeddings
     logits = lc(logits, "act_batch", "act_seq", "act_vocab")
@@ -234,8 +248,10 @@ def cache_pspecs(cfg, long_context: bool = False,
     return {"pos": (), "self": kv, "cross_k": cross, "cross_v": cross}
 
 
-def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
-    logits, aux = forward(params, batch, cfg, collect_kv=True)
+def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
+            overlay=None):
+    logits, aux = forward(params, batch, cfg, collect_kv=True,
+                          overlay=overlay)
     b, s = batch["tokens"].shape
     cache = init_cache(cfg, b, max_len, cache_dtype)
     k_all, v_all = aux["kv"]
@@ -243,21 +259,23 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
         cache["self"], k_all, v_all)
     enc_out = aux["enc_out"]
 
-    def cross_kv(lp):
+    def cross_kv(lp, ovl):
         t = enc_out.shape[1]
-        k = (enc_out @ lp["cross_attn"]["wk"].T.astype(enc_out.dtype)
-             ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
-        v = (enc_out @ lp["cross_attn"]["wv"].T.astype(enc_out.dtype)
-             ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        ov_x = oget(ovl, "cross_attn")
+        k = linear(enc_out, lp["cross_attn"]["wk"], oget(ov_x, "wk")
+                   ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        v = linear(enc_out, lp["cross_attn"]["wv"], oget(ov_x, "wv")
+                   ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
         return k.astype(cache_dtype), v.astype(cache_dtype)
 
-    ck, cv = jax.vmap(cross_kv)(params["dec_layers"])
+    ck, cv = jax.vmap(cross_kv)(params["dec_layers"],
+                                oget(overlay, "dec_layers"))
     cache["cross_k"], cache["cross_v"] = ck, cv
     cache["pos"] = jnp.int32(s)
     return logits[:, -1, :], cache
 
 
-def decode_step(params, token, cache, cfg):
+def decode_step(params, token, cache, cfg, overlay=None):
     pos = cache["pos"]
     b = token.shape[0]
     x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
@@ -266,24 +284,29 @@ def decode_step(params, token, cache, cfg):
     frame_pos = jnp.arange(cfg.encoder_frames, dtype=jnp.int32)
 
     def body(h, xs):
-        lp, sc, ck, cv = xs
+        lp, ovl, sc, ck, cv = xs
+        ov_s = oget(ovl, "self_attn")
+        ov_x = oget(ovl, "cross_attn")
         hs = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg)
+        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s)
         sc_new = A.cache_insert(sc, k, v, pos)
         o = A.decode_attention(q, sc_new["k"], sc_new["v"],
                                sc_new["slot_pos"], pos)
-        h = h + o.reshape(b, 1, cfg.q_dim) @ lp["self_attn"]["wo"].T.astype(h.dtype)
+        h = h + linear(o.reshape(b, 1, cfg.q_dim), lp["self_attn"]["wo"],
+                       oget(ov_s, "wo"))
         hx = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
-        qx = (hx @ lp["cross_attn"]["wq"].T.astype(h.dtype)
-              ).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq")
+                    ).reshape(b, 1, cfg.num_heads, cfg.head_dim)
         ox = A.decode_attention(qx, ck, cv, frame_pos, pos + cfg.encoder_frames)
-        h = h + ox.reshape(b, 1, cfg.q_dim) @ lp["cross_attn"]["wo"].T.astype(h.dtype)
-        h = h + mlp2_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+        h = h + linear(ox.reshape(b, 1, cfg.q_dim), lp["cross_attn"]["wo"],
+                       oget(ov_x, "wo"))
+        h = h + mlp2_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                           ov=oget(ovl, "mlp"))
         return h, sc_new
 
     x, self_new = jax.lax.scan(
-        body, x, (params["dec_layers"], cache["self"],
-                  cache["cross_k"], cache["cross_v"]))
+        body, x, (params["dec_layers"], oget(overlay, "dec_layers"),
+                  cache["self"], cache["cross_k"], cache["cross_v"]))
     x = rmsnorm(x, params["dec_norm"], cfg.norm_eps)
     logits = x @ params["embed"].T.astype(x.dtype)
     new_cache = dict(cache, pos=pos + 1, **{"self": self_new})

@@ -18,7 +18,9 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import ssm
-from repro.models.layers import embed_init, embed_lookup, rmsnorm, rmsnorm_init
+from repro.models.delta_overlay import oget
+from repro.models.layers import (embed_init, embed_lookup, linear, rmsnorm,
+                                 rmsnorm_init)
 from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
 
 
@@ -81,30 +83,31 @@ def mlstm_block_state(cfg, batch: int) -> dict:
             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)}
 
 
-def _mlstm_pre(p, x, cfg):
+def _mlstm_pre(p, x, cfg, ov=None):
     """Shared projection work for both seq and step paths (pre-conv)."""
     hcount, hd = _mlstm_heads(cfg)
     xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    xm = xi @ p["w_up"].T.astype(x.dtype)
-    z = xi @ p["w_gate"].T.astype(x.dtype)
+    xm = linear(xi, p["w_up"], oget(ov, "w_up"))
+    z = linear(xi, p["w_gate"], oget(ov, "w_gate"))
     return xm, z
 
 
-def mlstm_block_apply(p, x, cfg, state: dict):
+def mlstm_block_apply(p, x, cfg, state: dict, ov=None):
     """Sequence path: x (B,S,D) -> (y, new state)."""
     b, s, d = x.shape
     hcount, hd = _mlstm_heads(cfg)
-    xm, z = _mlstm_pre(p, x, cfg)
+    xm, z = _mlstm_pre(p, x, cfg, ov=ov)
     xc = jax.nn.silu(causal_conv(xm, p["conv"]))
     xc = lc(xc, "act_batch", "act_seq", "act_ssm")
-    q = (xc @ p["wq"].T.astype(x.dtype)).reshape(b, s, hcount, hd)
-    k = (xc @ p["wk"].T.astype(x.dtype)).reshape(b, s, hcount, hd) * hd ** -0.5
-    v = (xm @ p["wv"].T.astype(x.dtype)).reshape(b, s, hcount, hd)
-    gates = xc @ p["w_if"].T.astype(x.dtype) + p["b_if"].astype(x.dtype)
+    q = linear(xc, p["wq"], oget(ov, "wq")).reshape(b, s, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk")).reshape(b, s, hcount, hd) * hd ** -0.5
+    v = linear(xm, p["wv"], oget(ov, "wv")).reshape(b, s, hcount, hd)
+    gates = linear(xc, p["w_if"], oget(ov, "w_if")) + p["b_if"].astype(x.dtype)
     ig, fg = jnp.split(gates, 2, axis=-1)              # (B,S,H)
     h_seq, cell = ssm.mlstm_chunkwise(q, k, v, ig, fg, state=state["cell"])
     h_seq = rmsnorm(h_seq, p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
-    y = (h_seq.reshape(b, s, 2 * d) * jax.nn.silu(z)) @ p["w_down"].T.astype(x.dtype)
+    y = linear(h_seq.reshape(b, s, 2 * d) * jax.nn.silu(z), p["w_down"],
+               oget(ov, "w_down"))
     # conv window for decode continuation
     di = 2 * d
     tail = jnp.concatenate(
@@ -112,22 +115,24 @@ def mlstm_block_apply(p, x, cfg, state: dict):
     return x + y, {"cell": cell, "conv": tail.astype(jnp.float32)}
 
 
-def mlstm_block_step(p, x, cfg, state: dict):
+def mlstm_block_step(p, x, cfg, state: dict, ov=None):
     """Decode path: x (B,1,D)."""
     b, _, d = x.shape
     hcount, hd = _mlstm_heads(cfg)
-    xm, z = _mlstm_pre(p, x, cfg)
+    xm, z = _mlstm_pre(p, x, cfg, ov=ov)
     conv_win, xc1 = conv_step(state["conv"].astype(xm.dtype), xm[:, 0], p["conv"])
     xc = jax.nn.silu(xc1)[:, None, :]
-    q = (xc @ p["wq"].T.astype(x.dtype)).reshape(b, hcount, hd)
-    k = (xc @ p["wk"].T.astype(x.dtype)).reshape(b, hcount, hd) * hd ** -0.5
-    v = (xm @ p["wv"].T.astype(x.dtype)).reshape(b, hcount, hd)
-    gates = (xc @ p["w_if"].T.astype(x.dtype) + p["b_if"].astype(x.dtype))[:, 0]
+    q = linear(xc, p["wq"], oget(ov, "wq")).reshape(b, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk")).reshape(b, hcount, hd) * hd ** -0.5
+    v = linear(xm, p["wv"], oget(ov, "wv")).reshape(b, hcount, hd)
+    gates = (linear(xc, p["w_if"], oget(ov, "w_if"))
+             + p["b_if"].astype(x.dtype))[:, 0]
     ig, fg = jnp.split(gates, 2, axis=-1)
     cell, h_t = ssm.mlstm_step(state["cell"], q, k, v, ig, fg)
     h_t = rmsnorm(h_t[:, None].reshape(b, 1, hcount, hd),
                   p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
-    y = (h_t.reshape(b, 1, 2 * d) * jax.nn.silu(z)) @ p["w_down"].T.astype(x.dtype)
+    y = linear(h_t.reshape(b, 1, 2 * d) * jax.nn.silu(z), p["w_down"],
+               oget(ov, "w_down"))
     return x + y, {"cell": cell, "conv": conv_win.astype(jnp.float32)}
 
 
@@ -163,50 +168,50 @@ def slstm_block_state(cfg, batch: int) -> dict:
             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_model), jnp.float32)}
 
 
-def _slstm_gate_pre(p, xi, xc, cfg):
+def _slstm_gate_pre(p, xi, xc, cfg, ov=None):
     b = xi.shape[0]
     s = xi.shape[1]
     h = cfg.num_heads
     hd = cfg.d_model // h
-    zo = xi @ p["w_zi"].T.astype(xi.dtype)
-    if_ = xc @ p["w_if"].T.astype(xi.dtype)
+    zo = linear(xi, p["w_zi"], oget(ov, "w_zi"))
+    if_ = linear(xc, p["w_if"], oget(ov, "w_if"))
     zx, ox = jnp.split(zo, 2, axis=-1)
     ix, fx = jnp.split(if_, 2, axis=-1)
     rs = lambda t: t.reshape(b, s, h, hd)
     return rs(zx), rs(ix), rs(fx), rs(ox)
 
 
-def _slstm_post(p, h_seq, x, cfg):
+def _slstm_post(p, h_seq, x, cfg, ov=None):
     b, s = x.shape[:2]
     d = cfg.d_model
     hn = rmsnorm(h_seq.reshape(b, s, d), p["out_norm"], cfg.norm_eps)
-    ff = hn @ p["w_ff1"].T.astype(x.dtype)
+    ff = linear(hn, p["w_ff1"], oget(ov, "w_ff1"))
     gate, up = jnp.split(ff, 2, axis=-1)
-    y = (jax.nn.silu(gate) * up) @ p["w_ff2"].T.astype(x.dtype)
+    y = linear(jax.nn.silu(gate) * up, p["w_ff2"], oget(ov, "w_ff2"))
     return x + y
 
 
-def slstm_block_apply(p, x, cfg, state: dict):
+def slstm_block_apply(p, x, cfg, state: dict, ov=None):
     xi = rmsnorm(x, p["ln"], cfg.norm_eps)
     xc = jax.nn.silu(causal_conv(xi, p["conv"]))
-    pre = _slstm_gate_pre(p, xi, xc, cfg)
+    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov)
     h_seq, cell = ssm.slstm_scan(*pre, p["r_z"], p["r_i"], p["r_f"], p["r_o"],
                                  state=state["cell"])
     tail = jnp.concatenate(
         [state["conv"].astype(xi.dtype), xi], axis=1)[:, -(cfg.ssm_conv - 1):]
-    return _slstm_post(p, h_seq, x, cfg), {"cell": cell,
-                                           "conv": tail.astype(jnp.float32)}
+    return (_slstm_post(p, h_seq, x, cfg, ov=ov),
+            {"cell": cell, "conv": tail.astype(jnp.float32)})
 
 
-def slstm_block_step(p, x, cfg, state: dict):
+def slstm_block_step(p, x, cfg, state: dict, ov=None):
     xi = rmsnorm(x, p["ln"], cfg.norm_eps)
     conv_win, xc1 = conv_step(state["conv"].astype(xi.dtype), xi[:, 0], p["conv"])
     xc = jax.nn.silu(xc1)[:, None, :]
-    pre = _slstm_gate_pre(p, xi, xc, cfg)
+    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov)
     cell, h_t = ssm.slstm_step(state["cell"], *(t[:, 0] for t in pre),
                                p["r_z"], p["r_i"], p["r_f"], p["r_o"])
     h_t = h_t.astype(x.dtype)   # slstm_step computes fp32; keep carry dtype
-    return (_slstm_post(p, h_t[:, None].reshape(x.shape), x, cfg),
+    return (_slstm_post(p, h_t[:, None].reshape(x.shape), x, cfg, ov=ov),
             {"cell": cell, "conv": conv_win.astype(jnp.float32)})
 
 
@@ -257,25 +262,29 @@ def state_pspecs(cfg, long_context: bool = False):
     return {"pos": (), "mlstm": m_axes, "slstm": s_axes}
 
 
-def _run(params, x, cfg, state, step: bool):
+def _run(params, x, cfg, state, step: bool, overlay=None):
     """Shared super-block scan for sequence and decode paths."""
     n_super, n_m = _super_shape(cfg)
     m_params = jax.tree.map(
         lambda a: a.reshape(n_super, n_m, *a.shape[1:]), params["mlstm"])
+    m_overlay = jax.tree.map(
+        lambda a: a.reshape(n_super, n_m, *a.shape[1:]), oget(overlay, "mlstm"))
+    s_overlay = oget(overlay, "slstm")
     m_state = jax.tree.map(
         lambda a: a.reshape(n_super, n_m, *a.shape[1:]), state["mlstm"])
     m_apply = mlstm_block_step if step else mlstm_block_apply
     s_apply = slstm_block_step if step else slstm_block_apply
 
     def body(h, xs):
-        mp, ms, sp, ss = xs
+        mp, mo, ms, sp, so, ss = xs
         new_ms = []
         for j in range(n_m):
             pj = jax.tree.map(lambda a: a[j], mp)
+            oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = m_apply(pj, h, cfg, sj)
+            h, sj_new = m_apply(pj, h, cfg, sj, ov=oj)
             new_ms.append(sj_new)
-        h, ss_new = s_apply(sp, h, cfg, ss)
+        h, ss_new = s_apply(sp, h, cfg, ss, ov=so)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_ms), ss_new)
 
     body_fn = body
@@ -283,7 +292,8 @@ def _run(params, x, cfg, state, step: bool):
         body_fn = jax.checkpoint(body,
                                  policy=jax.checkpoint_policies.nothing_saveable)
     x, (m_new, s_new) = jax.lax.scan(
-        body_fn, x, (m_params, m_state, params["slstm"], state["slstm"]))
+        body_fn, x, (m_params, m_overlay, m_state, params["slstm"],
+                     s_overlay, state["slstm"]))
     new_state = {"pos": state["pos"] + x.shape[1],
                  "mlstm": jax.tree.map(
                      lambda a: a.reshape(n_super * n_m, *a.shape[2:]), m_new),
@@ -291,27 +301,28 @@ def _run(params, x, cfg, state, step: bool):
     return x, new_state
 
 
-def forward(params, batch, cfg, state: dict | None = None):
+def forward(params, batch, cfg, state: dict | None = None, overlay=None):
     tokens = batch["tokens"]
     x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
     x = lc(x, "act_batch", "act_seq", "act_embed")
     if state is None:
         state = init_state(cfg, tokens.shape[0])
-    x, new_state = _run(params, x, cfg, state, step=False)
+    x, new_state = _run(params, x, cfg, state, step=False, overlay=overlay)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = x @ params["unembed"].T.astype(x.dtype)
     logits = lc(logits, "act_batch", "act_seq", "act_vocab")
     return logits, {"moe_aux": jnp.float32(0), "state": new_state}
 
 
-def prefill(params, batch, cfg, max_len: int = 0, cache_dtype=None):
-    logits, aux = forward(params, batch, cfg)
+def prefill(params, batch, cfg, max_len: int = 0, cache_dtype=None,
+            overlay=None):
+    logits, aux = forward(params, batch, cfg, overlay=overlay)
     return logits[:, -1, :], aux["state"]
 
 
-def decode_step(params, token, state, cfg):
+def decode_step(params, token, state, cfg, overlay=None):
     x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
-    x, new_state = _run(params, x, cfg, state, step=True)
+    x, new_state = _run(params, x, cfg, state, step=True, overlay=overlay)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = x @ params["unembed"].T.astype(x.dtype)
     return logits[:, 0, :], new_state

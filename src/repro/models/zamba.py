@@ -18,8 +18,9 @@ import jax.numpy as jnp
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import attention as A
 from repro.models import ssm
-from repro.models.layers import (embed_init, embed_lookup, mlp_apply,
-                                 mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.delta_overlay import oget
+from repro.models.layers import (embed_init, embed_lookup, linear,
+                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init)
 from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
 from repro.models.xlstm import causal_conv, conv_step
 
@@ -71,28 +72,28 @@ def mamba_block_state(cfg, batch: int) -> dict:
                                  jnp.float32)}
 
 
-def _mamba_proj(p, x, cfg):
+def _mamba_proj(p, x, cfg, ov=None):
     di, h, _, n = _dims(cfg)
     xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    z = xi @ p["w_z"].T.astype(x.dtype)
-    xc = xi @ p["w_xc"].T.astype(x.dtype)
-    bc = xi @ p["w_bc"].T.astype(x.dtype)
-    dt_raw = xi @ p["w_dt"].T.astype(x.dtype)
+    z = linear(xi, p["w_z"], oget(ov, "w_z"))
+    xc = linear(xi, p["w_xc"], oget(ov, "w_xc"))
+    bc = linear(xi, p["w_bc"], oget(ov, "w_bc"))
+    dt_raw = linear(xi, p["w_dt"], oget(ov, "w_dt"))
     return z, xc, bc, dt_raw
 
 
-def _mamba_post(p, y, z, x, cfg):
+def _mamba_post(p, y, z, x, cfg, ov=None):
     b, s, _ = x.shape
     di, h, pp, n = _dims(cfg)
     y = y.reshape(b, s, di) * jax.nn.silu(z)
     y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
-    return x + y @ p["w_out"].T.astype(x.dtype)
+    return x + linear(y, p["w_out"], oget(ov, "w_out"))
 
 
-def mamba_block_apply(p, x, cfg, state: dict):
+def mamba_block_apply(p, x, cfg, state: dict, ov=None):
     b, s, d = x.shape
     di, h, pp, n = _dims(cfg)
-    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg)
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov)
     xc = jax.nn.silu(causal_conv(xc_pre, p["conv_xc"]))
     bc = jax.nn.silu(causal_conv(bc_pre, p["conv_bc"]))
     bm, cm = bc[..., :n], bc[..., n:]
@@ -107,15 +108,15 @@ def mamba_block_apply(p, x, cfg, state: dict):
     tail_bc = jnp.concatenate(
         [state["conv_bc"].astype(bc_pre.dtype), bc_pre],
         axis=1)[:, -(cfg.ssm_conv - 1):]
-    return (_mamba_post(p, y, z, x, cfg),
+    return (_mamba_post(p, y, z, x, cfg, ov=ov),
             {"ssm": ssm_state, "conv_xc": tail_xc.astype(jnp.float32),
              "conv_bc": tail_bc.astype(jnp.float32)})
 
 
-def mamba_block_step(p, x, cfg, state: dict):
+def mamba_block_step(p, x, cfg, state: dict, ov=None):
     b, _, d = x.shape
     di, h, pp, n = _dims(cfg)
-    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg)
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov)
     win_xc, xc1 = conv_step(state["conv_xc"].astype(xc_pre.dtype),
                             xc_pre[:, 0], p["conv_xc"])
     win_bc, bc1 = conv_step(state["conv_bc"].astype(bc_pre.dtype),
@@ -127,7 +128,7 @@ def mamba_block_step(p, x, cfg, state: dict):
                          + p["dt_bias"].astype(jnp.float32))
     ssm_state, y = ssm.mamba_step(state["ssm"], xc.reshape(b, h, pp), bm, cm,
                                   dt, p["a_log"], p["d_skip"])
-    return (_mamba_post(p, y[:, None], z, x, cfg),
+    return (_mamba_post(p, y[:, None], z, x, cfg, ov=ov),
             {"ssm": ssm_state, "conv_xc": win_xc.astype(jnp.float32),
              "conv_bc": win_bc.astype(jnp.float32)})
 
@@ -150,35 +151,39 @@ def shared_block_init(key, cfg) -> dict:
     }
 
 
-def _shared_qkv(p, h2, cfg, positions):
+def _shared_qkv(p, h2, cfg, positions, ov=None):
     b, s, _ = h2.shape
     hi = rmsnorm(h2, p["ln1"], cfg.norm_eps)
-    q = (hi @ p["wq"].T.astype(h2.dtype)).reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = (hi @ p["wk"].T.astype(h2.dtype)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = (hi @ p["wv"].T.astype(h2.dtype)).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    q = linear(hi, p["wq"], oget(ov, "wq")).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(hi, p["wk"], oget(ov, "wk")).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(hi, p["wv"], oget(ov, "wv")).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     from repro.models.layers import apply_rope
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
-def shared_block_apply(p, x, x0, cfg, positions):
+def shared_block_apply(p, x, x0, cfg, positions, ov=None):
     h2 = jnp.concatenate([x, x0], axis=-1)
-    q, k, v = _shared_qkv(p, h2, cfg, positions)
+    q, k, v = _shared_qkv(p, h2, cfg, positions, ov=ov)
     o = A.flash_attention(q, k, v, causal=True)
-    x = x + o.reshape(*x.shape[:-1], cfg.q_dim) @ p["wo"].T.astype(x.dtype)
-    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
+                   oget(ov, "wo"))
+    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
+                      ov=oget(ov, "mlp"))
     return x
 
 
-def shared_block_step(p, x, x0, cfg, cache: dict, pos):
+def shared_block_step(p, x, x0, cfg, cache: dict, pos, ov=None):
     h2 = jnp.concatenate([x, x0], axis=-1)
-    q, k, v = _shared_qkv(p, h2, cfg, pos[None])
+    q, k, v = _shared_qkv(p, h2, cfg, pos[None], ov=ov)
     new_cache = A.cache_insert(cache, k, v, pos)
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos)
-    x = x + o.reshape(*x.shape[:-1], cfg.q_dim) @ p["wo"].T.astype(x.dtype)
-    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
+                   oget(ov, "wo"))
+    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
+                      ov=oget(ov, "mlp"))
     return x, new_cache
 
 
@@ -247,7 +252,7 @@ def _split_mamba(tree, cfg):
     return main, rem
 
 
-def forward(params, batch, cfg, state: dict | None = None):
+def forward(params, batch, cfg, state: dict | None = None, overlay=None):
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
@@ -257,32 +262,36 @@ def forward(params, batch, cfg, state: dict | None = None):
     if state is None:
         state = mamba_only_state(cfg, b)
     m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_ov, r_ov = _split_mamba(oget(overlay, "mamba"), cfg)
+    sh_ov = oget(overlay, "shared")
     m_state, r_state = _split_mamba(state["mamba"], cfg)
     n_super, per, n_rem = _layout(cfg)
     shared = params["shared"]
 
     def body(h, xs):
-        mp, ms = xs
+        mp, mo, ms = xs
         new_states = []
         for j in range(per):
             pj = jax.tree.map(lambda a: a[j], mp)
+            oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_apply(pj, h, cfg, sj)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj)
             new_states.append(sj_new)
-        h = shared_block_apply(shared, h, x0, cfg, positions)
+        h = shared_block_apply(shared, h, x0, cfg, positions, ov=sh_ov)
         return h, jax.tree.map(lambda *a: jnp.stack(a), *new_states)
 
     body_fn = body
     if cfg.remat:
         body_fn = jax.checkpoint(body,
                                  policy=jax.checkpoint_policies.nothing_saveable)
-    x, m_new = jax.lax.scan(body_fn, x, (m_params, m_state))
+    x, m_new = jax.lax.scan(body_fn, x, (m_params, m_ov, m_state))
 
     r_new = []
     for j in range(n_rem):
         pj = jax.tree.map(lambda a: a[j], r_params)
+        oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_apply(pj, x, cfg, sj)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj)
         r_new.append(sj_new)
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -298,7 +307,8 @@ def forward(params, batch, cfg, state: dict | None = None):
     return logits, {"moe_aux": jnp.float32(0), "state": new_state}
 
 
-def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
+def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
+            overlay=None):
     """Single pass over the prompt: SSD states carried, shared-block K/V
     captured at every application point to fill the KV caches."""
     b, s = batch["tokens"].shape
@@ -308,28 +318,34 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
     x0 = x
     positions = jnp.arange(s)
     m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_ov, r_ov = _split_mamba(oget(overlay, "mamba"), cfg)
+    sh_ov = oget(overlay, "shared")
     m_state, r_state = _split_mamba(state0["mamba"], cfg)
     n_super, per, n_rem = _layout(cfg)
 
     def body(h, xs):
-        mp, ms = xs
+        mp, mo, ms = xs
         new_states = []
         for j in range(per):
             pj = jax.tree.map(lambda a: a[j], mp)
+            oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_apply(pj, h, cfg, sj)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj)
             new_states.append(sj_new)
         h2 = jnp.concatenate([h, x0], axis=-1)
-        _, k, v = _shared_qkv(params["shared"], h2, cfg, positions)
-        h = shared_block_apply(params["shared"], h, x0, cfg, positions)
+        _, k, v = _shared_qkv(params["shared"], h2, cfg, positions, ov=sh_ov)
+        h = shared_block_apply(params["shared"], h, x0, cfg, positions,
+                               ov=sh_ov)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), k, v)
 
-    x, (m_new, k_all, v_all) = jax.lax.scan(body, x, (m_params, m_state))
+    x, (m_new, k_all, v_all) = jax.lax.scan(body, x,
+                                            (m_params, m_ov, m_state))
     r_new = []
     for j in range(n_rem):
         pj = jax.tree.map(lambda a: a[j], r_params)
+        oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_apply(pj, x, cfg, sj)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj)
         r_new.append(sj_new)
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -346,33 +362,39 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16):
                               "attn_kv": kv}
 
 
-def decode_step(params, token, state, cfg):
+def decode_step(params, token, state, cfg, overlay=None):
     pos = state["pos"]
     b = token.shape[0]
     x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
     x0 = x
     m_params, r_params = _split_mamba(params["mamba"], cfg)
+    m_ov, r_ov = _split_mamba(oget(overlay, "mamba"), cfg)
+    sh_ov = oget(overlay, "shared")
     m_state, r_state = _split_mamba(state["mamba"], cfg)
     n_super, per, n_rem = _layout(cfg)
 
     def body(h, xs):
-        mp, ms, kv = xs
+        mp, mo, ms, kv = xs
         new_states = []
         for j in range(per):
             pj = jax.tree.map(lambda a: a[j], mp)
+            oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_step(pj, h, cfg, sj)
+            h, sj_new = mamba_block_step(pj, h, cfg, sj, ov=oj)
             new_states.append(sj_new)
-        h, kv_new = shared_block_step(params["shared"], h, x0, cfg, kv, pos)
+        h, kv_new = shared_block_step(params["shared"], h, x0, cfg, kv, pos,
+                                      ov=sh_ov)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), kv_new)
 
     x, (m_new, kv_new) = jax.lax.scan(body, x,
-                                      (m_params, m_state, state["attn_kv"]))
+                                      (m_params, m_ov, m_state,
+                                       state["attn_kv"]))
     r_new = []
     for j in range(n_rem):
         pj = jax.tree.map(lambda a: a[j], r_params)
+        oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_step(pj, x, cfg, sj)
+        x, sj_new = mamba_block_step(pj, x, cfg, sj, ov=oj)
         r_new.append(sj_new)
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -6,6 +6,11 @@ variant — same shapes, different params) → prefill fills a fixed-slot KV
 cache → decode steps run round-robin across variant groups → finished
 sequences retire and their slots are reused.
 
+Variants resolve to (params, overlay): dense residents pass a materialised
+copy with overlay None; fused residents pass the shared base params plus a
+packed delta overlay that the model fuses into every GEMM on the fly
+(serving/variants.py — residency modes).
+
 Fault tolerance: a variant whose artifact fails to load has its requests
 re-queued up to ``max_retries`` then failed individually — the engine and
 other tenants keep serving.
@@ -54,13 +59,16 @@ class ServingEngine:
         self._queue: collections.deque[Request] = collections.deque()
         self._done: dict[int, Request] = {}
         self._next_rid = 0
-        cfg = model.cfg
 
-        def prefill_fn(params, batch):
-            return model.prefill(params, batch, max_len)
+        # one compiled pair per overlay STRUCTURE: dense variants trace
+        # with overlay=None, fused variants with their entry tree — the
+        # packed deltas ride in as ordinary jit arguments
+        def prefill_fn(params, overlay, batch):
+            return model.prefill(params, batch, max_len, overlay=overlay)
 
-        def decode_fn(params, token, cache):
-            logits, cache = model.decode_step(params, token, cache)
+        def decode_fn(params, overlay, token, cache):
+            logits, cache = model.decode_step(params, token, cache,
+                                              overlay=overlay)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
         self._prefill = jax.jit(prefill_fn)
@@ -95,18 +103,20 @@ class ServingEngine:
     # -- internals -------------------------------------------------------------
     def _take_group(self) -> list:
         """Pop up to batch_size requests of the same variant (FIFO head
-        decides the variant — simple fairness)."""
+        decides the variant — simple fairness).  Scanning stops as soon as
+        the group is full; skipped requests go back to the front in their
+        original order."""
         if not self._queue:
             return []
         variant = self._queue[0].variant
-        group, rest = [], collections.deque()
-        while self._queue:
+        group, skipped = [], []
+        while self._queue and len(group) < self.batch_size:
             r = self._queue.popleft()
-            if r.variant == variant and len(group) < self.batch_size:
+            if r.variant == variant:
                 group.append(r)
             else:
-                rest.append(r)
-        self._queue = rest
+                skipped.append(r)
+        self._queue.extendleft(reversed(skipped))
         return group
 
     def _serve_one_group(self) -> None:
@@ -115,7 +125,7 @@ class ServingEngine:
             return
         variant = group[0].variant
         try:
-            params = self.registry.params_for(variant)
+            params, overlay = self.registry.resolve(variant)
         except Exception as e:  # artifact failure: re-queue or fail
             for r in group:
                 r.retries += 1
@@ -138,7 +148,7 @@ class ServingEngine:
         batch.update(self._frontend_stub(bs))
 
         t0 = time.perf_counter()
-        last_logits, cache = self._prefill(params, batch)
+        last_logits, cache = self._prefill(params, overlay, batch)
         jax.block_until_ready(last_logits)
         self.metrics["prefill_seconds"] += time.perf_counter() - t0
         self.metrics["prefills"] += 1
@@ -147,11 +157,15 @@ class ServingEngine:
         n_steps = max(r.max_new_tokens for r in group)
         t0 = time.perf_counter()
         for step in range(n_steps):
+            # retired slots (past their own max_new_tokens) still occupy a
+            # batch lane but neither emit tokens nor count toward metrics
+            n_active = 0
             for i, r in enumerate(group):
                 if step < r.max_new_tokens:
                     r.out_tokens.append(int(next_tok[i]))
-            next_tok, cache = self._decode(params, next_tok, cache)
-            self.metrics["tokens_generated"] += len(group)
+                    n_active += 1
+            next_tok, cache = self._decode(params, overlay, next_tok, cache)
+            self.metrics["tokens_generated"] += n_active
         jax.block_until_ready(next_tok)
         self.metrics["decode_seconds"] += time.perf_counter() - t0
 

@@ -2,15 +2,27 @@
 
 The deployment story of the paper: a serving node keeps ONE base model
 resident and a library of compressed delta artifacts on disk; requests
-name a variant; the registry hot-swaps (or serves from an LRU of
-materialised variants).  Swap cost = packed transfer + fused unpack —
-benchmarked against full-checkpoint loads in benchmarks/load_time.py.
+name a variant; the registry serves it under one of two residency modes
+(DESIGN.md §6):
+
+* ``dense`` — swap-then-dense: the artifact is reconstructed into a full
+  materialised copy of the params (``loader.apply_artifact``).  Fastest
+  steady-state matmuls, but each resident variant costs a full model of
+  HBM, so ``max_resident`` stays small.
+* ``fused`` — on-the-fly: the variant stays PACKED on device as a delta
+  overlay (``loader.device_put_overlay``); forward fuses it into each
+  GEMM.  ~1/16 the resident bytes of a dense copy, so ``max_resident``
+  can grow ~10× on the same budget and cold-start skips reconstruction.
+
+``resolve(name)`` returns ``(params, overlay)`` — overlay is None for the
+base and for dense residents.  Modes mix freely in one registry (default
+from the constructor, per-variant override at ``register``).
 """
 from __future__ import annotations
 
 import collections
-import time
-from typing import Callable, Optional
+import dataclasses
+from typing import Optional
 
 import jax
 
@@ -19,51 +31,107 @@ from repro.core import store as S
 from repro.core.calibration import DeltaModel
 
 
+@dataclasses.dataclass
+class _Resident:
+    params: object
+    overlay: Optional[dict]        # None => dense materialisation
+    nbytes: int                    # HBM added on top of the resident base
+
+
 class VariantRegistry:
     def __init__(self, base_params, *, param_shardings=None,
-                 max_resident: int = 2, use_kernel: bool = True):
+                 max_resident: int = 2, use_kernel: bool = True,
+                 mode: str = "dense"):
+        if mode not in ("dense", "fused"):
+            raise ValueError(f"unknown residency mode {mode!r}")
         self.base_params = base_params
         self.param_shardings = param_shardings
         self.use_kernel = use_kernel
         self.max_resident = max_resident
+        self.mode = mode
         self._artifacts: dict[str, object] = {}   # name -> dir or DeltaModel
-        self._resident: "collections.OrderedDict[str, object]" = \
+        self._modes: dict[str, str] = {}          # per-variant override
+        self._resident: "collections.OrderedDict[str, _Resident]" = \
             collections.OrderedDict()
         self.stats = {"swaps": 0, "hits": 0, "swap_seconds": 0.0,
-                      "transferred_bytes": 0, "load_failures": 0}
+                      "transferred_bytes": 0, "load_failures": 0,
+                      "resident_bytes": 0, "evictions": 0}
         self._base_fp = S.base_fingerprint(base_params)
+        self._dense_nbytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(base_params))
 
     # -- registration ------------------------------------------------------
-    def register(self, name: str, artifact) -> None:
-        """artifact: directory path (lazy-loaded) or a DeltaModel."""
+    def register(self, name: str, artifact, mode: Optional[str] = None
+                 ) -> None:
+        """artifact: directory path (lazy-loaded) or a DeltaModel.
+        ``mode`` overrides the registry default for this variant."""
+        if mode is not None and mode not in ("dense", "fused"):
+            raise ValueError(f"unknown residency mode {mode!r}")
         self._artifacts[name] = artifact
+        if mode is not None:
+            self._modes[name] = mode
 
     def registered(self) -> list:
         return ["__base__"] + sorted(self._artifacts)
 
+    def variant_mode(self, name: str) -> str:
+        return self._modes.get(name, self.mode)
+
     # -- resolution --------------------------------------------------------
-    def params_for(self, name: str):
-        """Materialised params for a variant (LRU-cached); '__base__'
-        serves the base model."""
+    def resolve(self, name: str):
+        """(params, overlay) for a variant, LRU-cached on device;
+        '__base__' serves the resident base (overlay None)."""
         if name == "__base__":
-            return self.base_params
+            return self.base_params, None
         if name in self._resident:
             self._resident.move_to_end(name)
             self.stats["hits"] += 1
-            return self._resident[name]
+            r = self._resident[name]
+            return r.params, r.overlay
         if name not in self._artifacts:
             raise KeyError(f"unknown variant {name!r}")
         dm = self._load(name)
-        params, st = L.apply_artifact(
-            self.base_params, dm, param_shardings=self.param_shardings,
-            use_kernel=self.use_kernel)
+        if self.variant_mode(name) == "fused":
+            params, overlay, st = L.device_put_overlay(
+                self.base_params, dm, param_shardings=self.param_shardings)
+            nbytes = L.fused_resident_bytes(self.base_params, params, overlay)
+        else:
+            params, st = L.apply_artifact(
+                self.base_params, dm, param_shardings=self.param_shardings,
+                use_kernel=self.use_kernel)
+            overlay, nbytes = None, self._dense_nbytes
         self.stats["swaps"] += 1
         self.stats["swap_seconds"] += st["seconds"]
         self.stats["transferred_bytes"] += st["transferred_bytes"]
-        self._resident[name] = params
+        resident = _Resident(params, overlay, nbytes)
+        self._resident[name] = resident
+        self.stats["resident_bytes"] += nbytes
         while len(self._resident) > self.max_resident:
-            self._resident.popitem(last=False)   # evict LRU
+            _, evicted = self._resident.popitem(last=False)   # evict LRU
+            self.stats["resident_bytes"] -= evicted.nbytes
+            self.stats["evictions"] += 1
+        # serve from the local handle: max_resident=0 (cache-nothing) may
+        # have evicted the entry we just built
+        return resident.params, resident.overlay
+
+    def params_for(self, name: str):
+        """Back-compat dense accessor: materialised params for a variant.
+        Raises for fused-mode variants — use ``resolve``.  The mode check
+        comes FIRST so the error path neither loads the artifact nor
+        disturbs the LRU/swap stats."""
+        if name != "__base__" and self.variant_mode(name) == "fused":
+            raise ValueError(
+                f"variant {name!r} is fused-mode (packed overlay); "
+                "use resolve() to get (params, overlay)")
+        params, _ = self.resolve(name)
         return params
+
+    def resident(self) -> list:
+        return list(self._resident)
+
+    def resident_nbytes(self, name: str) -> int:
+        return self._resident[name].nbytes
 
     def _load(self, name: str) -> DeltaModel:
         art = self._artifacts[name]
@@ -79,4 +147,7 @@ class VariantRegistry:
             raise
 
     def evict(self, name: str) -> None:
-        self._resident.pop(name, None)
+        r = self._resident.pop(name, None)
+        if r is not None:
+            self.stats["resident_bytes"] -= r.nbytes
+            self.stats["evictions"] += 1

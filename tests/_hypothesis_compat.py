@@ -1,0 +1,31 @@
+"""Optional-dependency shim: run unit tests even without ``hypothesis``.
+
+The property-based tests decorate with @given/@settings and build
+strategies via ``st``; when hypothesis is not installed (the CPU smoke
+container does not ship it) those tests skip cleanly instead of killing
+collection for the whole module.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover - env dependent
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Chain:
+        """Stand-in strategy: every attribute/call returns itself, so
+        module-level strategy expressions still evaluate."""
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _Chain()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

@@ -1,0 +1,191 @@
+"""On-the-fly (fused-overlay) variant execution: parity + residency.
+
+Covers the §4 on-the-fly path end to end: forward/prefill/decode with a
+packed delta overlay must match the dense-reconstruction path within fp16
+tolerance (the overlay stores fp16 vectors/extras), and the registry's
+``fused`` residency mode must keep variants resident at a small fraction
+of a dense copy, evict correctly, and mix with dense residents.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import loader as L
+from repro.models import build_model
+from repro.models.delta_overlay import (overlay_from_deltas, overlay_nbytes,
+                                        oget)
+from repro.models.param import split
+from repro.serving import ServingEngine, VariantRegistry
+from repro.serving.engine import Request
+
+
+def _pair(arch: str, layers: int = 2):
+    """Untrained base + small perturbation fine-tune (enough for parity).
+    ``layers=0`` keeps the reduced default (families with layer-pattern
+    constraints: xlstm super-blocks, zamba attn_every)."""
+    cfg = get_config(arch).reduced()
+    if layers:
+        cfg = dataclasses.replace(cfg, num_layers=layers)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft = jax.tree.map(lambda b, f: b + 0.01 * f, base, pert)
+    return model, base, ft
+
+
+def _batch(model, rng_seed=7, bs=2, s=16):
+    cfg = model.cfg
+    batch = {"tokens": jnp.asarray(np.random.default_rng(rng_seed).integers(
+        1, cfg.vocab_size, size=(bs, s)), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((bs, cfg.encoder_frames, cfg.d_model),
+                                    jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros(
+            (bs, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch,layers", [
+    ("qwen3-8b", 2), ("deepseek-moe-16b", 2),      # transformer + MoE
+    ("whisper-base", 0), ("xlstm-350m", 0), ("zamba2-7b", 0),
+])
+def test_forward_parity_fused_vs_materialized(arch, layers):
+    """forward(base, overlay) ≈ forward(materialised params), fp16 tol —
+    all four family modules (MoE exercises pre_layers, routed expert
+    stacks and shared experts through the fused grouped GEMMs; whisper
+    the enc/dec/cross-attn caches; xlstm/zamba the state-carrying
+    super-block scans)."""
+    model, base, ft = _pair(arch, layers)
+    dm = C.compress(base, ft)
+    dense = C.apply_delta(base, dm)
+    fused_params, overlay, _ = L.device_put_overlay(base, dm)
+
+    batch = _batch(model)
+    ld = jax.jit(lambda p, b: model.forward(p, b)[0])(dense, batch)
+    lf = jax.jit(lambda p, ov, b: model.forward(p, b, overlay=ov)[0])(
+        fused_params, overlay, batch)
+    scale = float(jnp.max(jnp.abs(ld)))
+    tol = 2e-2 * max(scale, 1.0)
+    assert float(jnp.max(jnp.abs(ld - lf))) < tol
+
+    # prefill + a decode step agree too (the serving path)
+    pd, cd = jax.jit(lambda p, b: model.prefill(p, b, 32))(dense, batch)
+    pf, cf = jax.jit(lambda p, ov, b: model.prefill(p, b, 32, overlay=ov))(
+        fused_params, overlay, batch)
+    assert float(jnp.max(jnp.abs(pd - pf))) < tol
+    tok = jnp.argmax(pd, -1).astype(jnp.int32)
+    dd, _ = jax.jit(model.decode_step)(dense, tok, cd)
+    df, _ = jax.jit(lambda p, t, c, ov: model.decode_step(
+        p, t, c, overlay=ov))(fused_params, tok, cf, overlay)
+    assert float(jnp.max(jnp.abs(dd - df))) < tol
+
+
+def test_overlay_canonical_form():
+    """Zero-the-unselected-axis canonicalisation: v_row + v_col broadcast
+    sum reproduces exactly the selected per-axis scale."""
+    model, base, ft = _pair("qwen3-8b")
+    dm = C.compress(base, ft)
+    overlay = overlay_from_deltas(dm.deltas)
+    entry = oget(oget(oget(overlay, "layers"), "attn"), "wq")
+    src = dm.deltas["layers.attn.wq"]
+    v_eff = (entry.v_row.astype(jnp.float32)[..., :, None]
+             + entry.v_col.astype(jnp.float32)[..., None, :])
+    sel = src.use_row[..., None, None]
+    want = jnp.where(sel, src.v_row[..., :, None], src.v_col[..., None, :])
+    assert jnp.allclose(v_eff, want, atol=1e-3)   # fp16 vector rounding
+    assert overlay_nbytes(overlay) > 0
+
+
+def test_fused_resident_bytes_fraction():
+    """A fused resident costs a small fraction of a dense copy; with
+    enough layers (linear stacks dominating extras) it is ≤ 1/8."""
+    model, base, ft = _pair("qwen3-8b", layers=6)
+    dm = C.compress(base, ft)
+    dense, _ = L.apply_artifact(base, dm)
+    dense_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree.leaves(dense))
+    params, overlay, _ = L.device_put_overlay(base, dm)
+    fused_bytes = L.fused_resident_bytes(base, params, overlay)
+    assert fused_bytes <= dense_bytes / 8
+    # the view aliases every untouched base weight (no hidden copies)
+    base_ids = {id(l) for l in jax.tree.leaves(base)}
+    from repro.core.calibration import flatten_params
+    for path, leaf in flatten_params(params).items():
+        if path in dm.deltas:
+            assert id(leaf) in base_ids
+
+
+def test_registry_fused_eviction_and_accounting():
+    model, base, ft = _pair("qwen3-8b")
+    dm = C.compress(base, ft)
+    reg = VariantRegistry(base, max_resident=1, mode="fused")
+    reg.register("a", dm)
+    reg.register("b", dm)
+    _, ov_a = reg.resolve("a")
+    assert ov_a is not None
+    bytes_a = reg.stats["resident_bytes"]
+    assert bytes_a == reg.resident_nbytes("a") > 0
+    reg.resolve("b")                     # evicts "a" (LRU, capacity 1)
+    assert reg.resident() == ["b"]
+    assert reg.stats["evictions"] == 1
+    assert reg.stats["resident_bytes"] == reg.resident_nbytes("b")
+    reg.evict("b")
+    assert reg.resident() == [] and reg.stats["resident_bytes"] == 0
+    # params_for is a dense-only accessor — and its error path must not
+    # load the artifact, admit a resident, or count a swap
+    swaps = reg.stats["swaps"]
+    with pytest.raises(ValueError):
+        reg.params_for("a")
+    assert reg.stats["swaps"] == swaps and reg.resident() == []
+    # max_resident=0 = cache-nothing: still serves, just never retains
+    reg0 = VariantRegistry(base, max_resident=0, mode="fused")
+    reg0.register("a", dm)
+    _, ov = reg0.resolve("a")
+    assert ov is not None and reg0.resident() == []
+    assert reg0.stats["resident_bytes"] == 0 and reg0.stats["evictions"] == 1
+
+
+def test_engine_mixed_dense_fused_residency():
+    """One registry serving base + a dense resident + a fused resident:
+    the same artifact must generate identical greedy tokens either way."""
+    model, base, ft = _pair("deepseek-7b")
+    dm = C.compress(base, ft)
+    reg = VariantRegistry(base, max_resident=4, mode="fused")
+    reg.register("vf", dm)
+    reg.register("vd", dm, mode="dense")
+    eng = ServingEngine(model, reg, batch_size=2, prompt_len=8, max_len=32)
+    rids = {v: eng.submit(np.arange(1, 7), variant=v, max_new_tokens=4)
+            for v in ("__base__", "vf", "vd")}
+    eng.run_until_drained()
+    out = {v: eng.result(r) for v, r in rids.items()}
+    assert all(r.status == "done" for r in out.values())
+    assert out["vf"].out_tokens == out["vd"].out_tokens
+    assert len(out["vf"].out_tokens) == 4
+    # metrics count exactly the emitted tokens (retired slots excluded)
+    assert eng.metrics["tokens_generated"] == 3 * 4
+    # fused resident is much lighter than the dense one
+    assert reg.resident_nbytes("vf") < reg.resident_nbytes("vd") / 4
+
+
+def test_take_group_preserves_queue_order():
+    """_take_group stops scanning at batch_size and puts skipped requests
+    back in their original positions."""
+    model, base, _ = _pair("deepseek-7b")
+    reg = VariantRegistry(base)
+    eng = ServingEngine(model, reg, batch_size=2, prompt_len=8, max_len=32)
+    order = ["a", "b", "a", "c", "a"]
+    for v in order:
+        eng._queue.append(Request(rid=len(eng._queue), tokens=np.arange(3),
+                                  variant=v))
+    group = eng._take_group()
+    # batch_size=2: takes the first two "a"s, scans past b only
+    assert [r.variant for r in group] == ["a", "a"]
+    assert [r.variant for r in eng._queue] == ["b", "c", "a"]
+    assert [r.rid for r in eng._queue] == [1, 3, 4]

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import delta as D
 from repro.kernels import ops as K
@@ -60,6 +60,44 @@ def test_bitlinear_leading_batch_dims():
     assert got.shape == (2, 3, 32)
     want = R.bitlinear_ref(x.reshape(-1, 64), packed, v, wb, "row").reshape(2, 3, 32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 8, 16), (8, 16, 128), (16, 128, 256)])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bitlinear_axes_sweep(shape, mode, dtype):
+    """Dual-axis kernel vs single-mode oracle: zeroing the unselected
+    vector must reduce the v_row+v_col sum to the selected scale."""
+    m, n, k_dim = shape
+    packed, v, wb = _case(jax.random.PRNGKey(hash(shape) % 2**31), n, k_dim,
+                          mode, dtype)
+    if mode == "row":
+        vr, vc = v, jnp.zeros((k_dim,), jnp.float32)
+    elif mode == "col":
+        vr, vc = jnp.zeros((n,), jnp.float32), v
+    else:   # scalar broadcasts into v_row (overlay convention)
+        vr = jnp.broadcast_to(v, (n,))
+        vc = jnp.zeros((k_dim,), jnp.float32)
+    x = (jax.random.normal(jax.random.PRNGKey(9), (m, k_dim)) * 0.5).astype(dtype)
+    got = K.bitlinear_axes(x, packed, vr, vc, wb)
+    want = R.bitlinear_ref(x, packed, v, wb, mode)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_bitlinear_axes_mixed_vectors():
+    """Both vectors non-zero: v_eff[n,k] = v_row[n] + v_col[k]."""
+    n, k_dim, m = 24, 72, 8
+    packed, _, wb = _case(jax.random.PRNGKey(3), n, k_dim, "row", jnp.float32)
+    vr = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (n,)))
+    vc = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (k_dim,)))
+    x = jax.random.normal(jax.random.PRNGKey(6), (m, k_dim))
+    got = K.bitlinear_axes(x, packed, vr, vc, wb)
+    want = R.bitlinear_axes_ref(x, packed, vr, vc, wb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
 
 
 @settings(max_examples=15, deadline=None)
