@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   kernel   Pallas kernel byte accounting + correctness
   serving  multi-tenant hot-swap engine throughput
   fused    on-the-fly (packed-overlay) vs swap-then-dense serving
+  continuous mixed-variant continuous batching vs grouped-by-variant
   roofline dry-run roofline terms per (arch × shape × mesh)
 """
 from __future__ import annotations
@@ -49,9 +50,9 @@ def serving_bench() -> list:
 
 
 def main() -> None:
-    from benchmarks import (axis_stats, fused_serving, kernel_bench,
-                            load_time, roofline, table1_quality,
-                            table2_sizes)
+    from benchmarks import (axis_stats, continuous_batching, fused_serving,
+                            kernel_bench, load_time, roofline,
+                            table1_quality, table2_sizes)
     rows = []
     rows += _section("table2", table2_sizes.run)      # cheap first
     rows += _section("kernel", kernel_bench.run)
@@ -60,6 +61,7 @@ def main() -> None:
     rows += _section("axis_stats", axis_stats.run)
     rows += _section("serving", serving_bench)
     rows += _section("fused", fused_serving.run)
+    rows += _section("continuous_batching", continuous_batching.run)
     rows += _section("roofline", roofline.run)
     print("name,us_per_call,derived")
     print("\n".join(rows))

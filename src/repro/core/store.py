@@ -45,12 +45,15 @@ def base_fingerprint(base_params) -> str:
     return h.hexdigest()[:16]
 
 
+STORE_VERSION = 2   # v2: artifact_bytes + per-file sizes persisted on disk
+
+
 def save_artifact(dm: DeltaModel, out_dir: str, *,
                   base_fp: Optional[str] = None,
                   meta: Optional[dict] = None) -> dict:
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
-    manifest = {"version": 1, "base_fingerprint": base_fp,
+    manifest = {"version": STORE_VERSION, "base_fingerprint": base_fp,
                 "meta": meta or {}, "deltas": {}, "extras": {}}
     dz, ez = {}, {}
     for path, e in dm.deltas.items():
@@ -79,11 +82,15 @@ def save_artifact(dm: DeltaModel, out_dir: str, *,
                                     "sha": _sha(arr)}
     np.savez(out / "deltas.npz", **dz)
     np.savez(out / "extras.npz", **ez)
+    # payload sizes are known once the npz files exist, so artifact_bytes
+    # (and per-file sizes, for truncation detection at load) can be
+    # PERSISTED in manifest.json rather than only returned to the caller
+    manifest["files"] = {f: (out / f).stat().st_size
+                         for f in ("deltas.npz", "extras.npz")}
+    manifest["artifact_bytes"] = sum(manifest["files"].values())
     tmp = out / "manifest.json.tmp"
     tmp.write_text(json.dumps(manifest, indent=2))
     tmp.rename(out / "manifest.json")          # atomic finalize
-    manifest["artifact_bytes"] = sum(
-        f.stat().st_size for f in out.iterdir())
     return manifest
 
 
@@ -96,6 +103,17 @@ def load_artifact(in_dir: str, *, expect_base_fp: Optional[str] = None,
         raise ValueError(
             f"artifact built for base {manifest['base_fingerprint']}, "
             f"got {expect_base_fp}")
+    # truncation sanity check (store v2+): the manifest records each
+    # payload file's byte size — a partial copy/rsync shows up here before
+    # np.load chokes on (or silently accepts) a short file
+    if verify:
+        for fname, nbytes in manifest.get("files", {}).items():
+            actual = (path / fname).stat().st_size \
+                if (path / fname).exists() else -1
+            if actual != nbytes:
+                raise IOError(
+                    f"truncated artifact: {fname} is {actual} bytes, "
+                    f"manifest records {nbytes}")
     dz = np.load(path / "deltas.npz")
     ez = np.load(path / "extras.npz")
     deltas, extras = {}, {}

@@ -73,6 +73,72 @@ def _kernel_axes(x_ref, packed_ref, vr_ref, vc_ref, wb_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _kernel_axes_banked(x_ref, vidx_ref, packed_ref, vr_ref, vc_ref, wb_ref,
+                        out_ref):
+    """Banked variant: overlay operands carry a leading bank axis V and each
+    batch ROW selects its own bank slot via ``variant_idx`` (slot 0 = base,
+    whose packed/vector slots are zero, so v_eff = 0 and Ŵ-row = W_b).
+
+    Mixed-variant decode is a GEMV per row (HBM-bound, M = batch slots), so
+    instead of one MXU dot per variant (V× FLOPs when every row differs) the
+    kernel gathers each row's PACKED tile + axis vectors from the bank in
+    VMEM, unpacks per row, and contracts on the VPU — work is O(M·bn·bk),
+    independent of bank size.  The whole bank block rides in VMEM: packed is
+    1/16 the bytes of the base tile per slot, so even V=16 costs ~2× the
+    base-weight tile footprint.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vidx = vidx_ref[...][:, 0]                              # (bm,)
+    packed = jnp.take(packed_ref[...], vidx, axis=0)        # (bm, bn, bk/8)
+    bm, bn, bkp = packed.shape
+    signs = _unpack_tile(packed.reshape(bm * bn, bkp),
+                         jnp.float32).reshape(bm, bn, bkp * PACK)
+    v = (jnp.take(vr_ref[...], vidx, axis=0).astype(jnp.float32)   # (bm,bn,1)
+         + jnp.take(vc_ref[...], vidx, axis=0).astype(jnp.float32))
+    w_hat = v * signs + wb_ref[...].astype(jnp.float32)[None]      # (bm,bn,bk)
+    x = x_ref[...].astype(jnp.float32)                             # (bm, bk)
+    out_ref[...] += jnp.einsum("mnk,mk->mn", w_hat, x,
+                               preferred_element_type=jnp.float32)
+
+
+def bitlinear_axes_banked_p(x: jax.Array, vidx: jax.Array, packed: jax.Array,
+                            vr2d: jax.Array, vc2d: jax.Array,
+                            w_base: jax.Array, *, block_m: int, block_n: int,
+                            block_k: int, interpret: bool) -> jax.Array:
+    """x (M, K) · vidx (M, 1) int32 · packed (V, N, K/8) · vr2d (V, N, 1) ·
+    vc2d (V, 1, K) · w_base (N, K) -> y (M, N) fp32."""
+    m, k_dim = x.shape
+    n, _ = w_base.shape
+    nbank = packed.shape[0]
+    assert k_dim % PACK == 0 and block_k % PACK == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    assert vidx.shape == (m, 1) and vidx.dtype == jnp.int32
+    assert vr2d.shape == (nbank, n, 1) and vc2d.shape == (nbank, 1, k_dim)
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+
+    return pl.pallas_call(
+        _kernel_axes_banked,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((nbank, block_n, block_k // PACK),
+                         lambda i, j, kk: (0, j, kk)),
+            pl.BlockSpec((nbank, block_n, 1), lambda i, j, kk: (0, j, 0)),
+            pl.BlockSpec((nbank, 1, block_k), lambda i, j, kk: (0, 0, kk)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, vidx, packed, vr2d, vc2d, w_base)
+
+
 def bitlinear_axes_p(x: jax.Array, packed: jax.Array, vr2d: jax.Array,
                      vc2d: jax.Array, w_base: jax.Array, *, block_m: int,
                      block_n: int, block_k: int,

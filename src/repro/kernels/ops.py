@@ -21,6 +21,13 @@ _TILE_M = 256
 _TILE_N = 512
 _TILE_K = 512
 
+# Banked (mixed-variant) kernel: the per-row Ŵ gather materialises a
+# (bm, bn, bk) fp32 block in VMEM, so M stays decode-sized (batch slots)
+# and N/K tiles shrink: 16·256·256·4 B ≈ 4 MiB.
+_TILE_BANKED_M = 16
+_TILE_BANKED_N = 256
+_TILE_BANKED_K = 256
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
@@ -107,6 +114,43 @@ def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
     bk = _pick_block(k_dim, _TILE_K, multiple=PACK)
     y = _bl.bitlinear_axes_p(
         x2, packed, v_row.reshape(n, 1), v_col.reshape(1, k_dim), w_base,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    return y.astype(x.dtype).reshape(*lead, n)
+
+
+@jax.jit
+def bitlinear_axes_banked(x: jax.Array, variant_idx: jax.Array,
+                          packed: jax.Array, v_row: jax.Array,
+                          v_col: jax.Array, w_base: jax.Array) -> jax.Array:
+    """Mixed-variant fused y: row m of x computes against bank slot
+    ``variant_idx[m]`` of a stacked overlay (slot 0 = base, zero delta).
+
+    packed (V, N, K/8) · v_row (V, N) · v_col (V, K) stack the per-variant
+    overlay leaves along a leading bank axis; ``variant_idx`` is int32 with
+    shape x.shape[:-1] or (x.shape[0],) (broadcast over the remaining lead
+    dims — one variant per batch row).  The decode-time GEMV stays
+    HBM-bound: the kernel gathers each row's packed tile + vectors in VMEM,
+    so per-step traffic is base weights + bank bytes, independent of how
+    many distinct variants share the batch (DESIGN.md §9).
+    """
+    *lead, k_dim = x.shape
+    n, _ = w_base.shape
+    nbank = packed.shape[0]
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    if variant_idx.shape == tuple(lead):
+        vidx = variant_idx.reshape(m)
+    else:
+        vidx = jnp.broadcast_to(
+            variant_idx.reshape(variant_idx.shape[0],
+                                *([1] * (len(lead) - 1))),
+            tuple(lead)).reshape(m)
+    bm = _pick_block(m, _TILE_BANKED_M)
+    bn = _pick_block(n, _TILE_BANKED_N)
+    bk = _pick_block(k_dim, _TILE_BANKED_K, multiple=PACK)
+    y = _bl.bitlinear_axes_banked_p(
+        x2, vidx.astype(jnp.int32).reshape(m, 1), packed,
+        v_row.reshape(nbank, n, 1), v_col.reshape(nbank, 1, k_dim), w_base,
         block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
     return y.astype(x.dtype).reshape(*lead, n)
 

@@ -38,3 +38,24 @@ def bitlinear_axes_ref(x: jax.Array, packed: jax.Array, v_row: jax.Array,
          + v_col.astype(jnp.float32)[None, :])
     w_hat = v * signs + w_base.astype(jnp.float32)
     return (x.astype(jnp.float32) @ w_hat.T).astype(x.dtype)
+
+
+def bitlinear_axes_banked_ref(x: jax.Array, variant_idx: jax.Array,
+                              packed: jax.Array, v_row: jax.Array,
+                              v_col: jax.Array, w_base: jax.Array
+                              ) -> jax.Array:
+    """Banked oracle: overlay operands carry a leading bank axis V; each row
+    of x computes against the bank slot named by variant_idx (slot 0 = base:
+    its vectors are zero, so Ŵ[0] = W_b exactly).
+
+    x (M, K) · variant_idx (M,) int32 · packed (V, N, K/8) · v_row (V, N) ·
+    v_col (V, K) · w_base (N, K) -> (M, N).
+    """
+    d_out, d_in = w_base.shape
+    signs = D.unpack_signs(packed, d_in, jnp.float32)        # (V, N, K)
+    v = (v_row.astype(jnp.float32)[:, :, None]
+         + v_col.astype(jnp.float32)[:, None, :])
+    w_hat = v * signs + w_base.astype(jnp.float32)[None]     # (V, N, K)
+    w_sel = jnp.take(w_hat, variant_idx, axis=0)             # (M, N, K)
+    y = jnp.einsum("mnk,mk->mn", w_sel, x.astype(jnp.float32))
+    return y.astype(x.dtype)

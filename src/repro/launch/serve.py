@@ -1,11 +1,13 @@
 """Serving launcher: multi-tenant engine over synthetic delta variants.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-        --variants 3 --requests 12 --mode fused
+        --variants 3 --requests 12 --mode fused --scheduler continuous
 
 --mode fused keeps variants resident as packed delta overlays (on-the-fly
 fused GEMMs, ~1/16 the HBM per variant); --mode dense materialises full
-copies (the classic hot-swap path).
+copies (the classic hot-swap path).  --scheduler continuous serves MIXED
+variants in one decode batch via the overlay bank (requires --mode fused;
+DESIGN.md §9); group batches one variant at a time.
 """
 from __future__ import annotations
 
@@ -21,9 +23,14 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--mode", choices=("dense", "fused"), default="dense")
+    ap.add_argument("--scheduler", choices=("group", "continuous"),
+                    default="group")
     ap.add_argument("--max-resident", type=int, default=0,
                     help="0 -> 2 for dense, 8 for fused")
     args = ap.parse_args()
+    if args.scheduler == "continuous" and args.mode != "fused":
+        ap.error("--scheduler continuous requires --mode fused "
+                 "(mixed batches serve from the packed overlay bank)")
 
     import jax
     import numpy as np
@@ -40,7 +47,8 @@ def main():
     base, _ = split(model.init(jax.random.PRNGKey(0)))
 
     max_resident = args.max_resident or (8 if args.mode == "fused" else 2)
-    reg = VariantRegistry(base, max_resident=max_resident, mode=args.mode)
+    reg = VariantRegistry(base, max_resident=max_resident, mode=args.mode,
+                          bank_size=args.variants + 1)
     for i in range(args.variants):
         key = jax.random.PRNGKey(100 + i)
         leaves, treedef = jax.tree.flatten(base)
@@ -51,7 +59,7 @@ def main():
         reg.register(f"v{i}", C.compress(base, ft))
 
     eng = ServingEngine(model, reg, batch_size=args.batch, prompt_len=16,
-                        max_len=64)
+                        max_len=64, scheduler=args.scheduler)
     rng = np.random.default_rng(0)
     names = reg.registered()
     for i in range(args.requests):

@@ -42,7 +42,8 @@ def attn_init(key, cfg) -> dict:
 
 
 def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
-                theta, ov=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+                theta, ov=None, vidx=None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd), RoPE'd (if theta).
 
     Sharding strategy (picked by divisibility against the live mesh):
@@ -57,12 +58,12 @@ def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
     """
     from repro.distributed.sharding import ctx_axis_size, ctx_forward_only
     from repro.distributed.sharding import logical_constraint as _lc
-    from repro.models.layers import _oget, linear
+    from repro.models.layers import _oget, linear, psel
     b, s, _ = x.shape
     ms = ctx_axis_size("model") or 1
-    q = linear(x, p["wq"], _oget(ov, "wq"))
-    k = linear(x, p["wk"], _oget(ov, "wk"))
-    v = linear(x, p["wv"], _oget(ov, "wv"))
+    q = linear(x, p["wq"], _oget(ov, "wq"), vidx)
+    k = linear(x, p["wk"], _oget(ov, "wk"), vidx)
+    v = linear(x, p["wv"], _oget(ov, "wv"), vidx)
     if cfg.num_heads % ms == 0 and cfg.num_kv_heads % ms == 0:
         # full head-TP
         q = _lc(q, "act_batch", "act_seq", "act_heads")
@@ -98,8 +99,10 @@ def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
     k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
-        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
-        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        q = rmsnorm(q, psel(p["q_norm"], _oget(ov, "q_norm"), vidx, lead=2),
+                    cfg.norm_eps)
+        k = rmsnorm(k, psel(p["k_norm"], _oget(ov, "k_norm"), vidx, lead=2),
+                    cfg.norm_eps)
     if theta is not None:
         q = apply_rope(q, positions, theta)
         k = apply_rope(k, positions, theta)
@@ -284,8 +287,11 @@ def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0, kv_offset=0):
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      slot_pos: jax.Array, pos: jax.Array,
                      window: int = 0) -> jax.Array:
-    """q: (B, 1, Hq, hd); caches (B, T, Hkv, hd); slot_pos (T,) absolute
-    position stored in each cache slot (−1 = empty).
+    """q: (B, 1, Hq, hd); caches (B, T, Hkv, hd); slot_pos — absolute
+    position stored in each cache slot (−1 = empty), shape (T,) shared or
+    (B, T) per batch row; pos — current absolute position, scalar shared or
+    (B,) per row (continuous batching admits slots at different times, so
+    each batch lane carries its own position — DESIGN.md §9).
 
     Cache operands stay in their storage dtype (bf16) — the dots accumulate
     fp32 via preferred_element_type; pre-casting the cache to fp32 doubles
@@ -300,10 +306,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
           .astype(k_cache.dtype).reshape(b, hkv, g, hd))
     logits = jnp.einsum("bkgh,btkh->bkgt", qf, k_cache,
                         preferred_element_type=jnp.float32)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    sp = jnp.broadcast_to(jnp.asarray(slot_pos, jnp.int32), (b, t))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+    valid = (sp >= 0) & (sp <= pos_b)
     if window > 0:
-        valid &= slot_pos > pos - window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid &= sp > pos_b - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     m = jnp.max(logits, axis=-1, keepdims=True)
     p = jnp.exp(logits - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
@@ -319,13 +327,20 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def make_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
                   dtype=jnp.bfloat16) -> dict:
-    """One layer's cache.  ``slot_pos`` records the absolute position held in
-    each slot (supports ring buffers for sliding-window layers)."""
+    """One layer's cache.  ``slot_pos`` records the absolute position held
+    in each slot (supports ring buffers for sliding-window layers), PER
+    BATCH ROW — continuous batching (DESIGN.md §9) admits/retires rows
+    independently, so lanes disagree about which positions are valid."""
     return {
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
         "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
-        "slot_pos": jnp.full((max_len,), -1, jnp.int32),
+        "slot_pos": jnp.full((batch, max_len), -1, jnp.int32),
     }
+
+
+def _row_pos(pos, b: int) -> jax.Array:
+    """Normalise a scalar-or-(B,) position to (B,) int32."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
 
 def cache_insert(cache: dict, k_new: jax.Array, v_new: jax.Array,
@@ -333,44 +348,46 @@ def cache_insert(cache: dict, k_new: jax.Array, v_new: jax.Array,
     """Insert (B, n, Hkv, hd) at absolute position(s) starting at ``pos``.
 
     ring=True wraps writes modulo the cache length (sliding-window layers).
+    ``pos`` may be scalar (all rows aligned — prefill) or (B,) per row
+    (continuous decode, lanes at different depths).
     """
-    t = cache["k"].shape[1]
+    b, t = cache["k"].shape[:2]
     n = k_new.shape[1]
     dtype = cache["k"].dtype
     if not ring and n > 1:
         # prefill path: contiguous write at static offset 0 expected
         k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(dtype), (0, pos, 0, 0))
         v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(dtype), (0, pos, 0, 0))
-        sp = jax.lax.dynamic_update_slice(
-            cache["slot_pos"], pos + jnp.arange(n, dtype=jnp.int32), (pos,))
+        sp_rows = jnp.broadcast_to(pos + jnp.arange(n, dtype=jnp.int32),
+                                   (b, n))
+        sp = jax.lax.dynamic_update_slice(cache["slot_pos"], sp_rows, (0, pos))
         return {"k": k, "v": v, "slot_pos": sp}
-    # single-token (or ring) writes
-    idx = (pos % t) if ring else pos
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(dtype), (0, idx, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(dtype), (0, idx, 0, 0))
-    sp = jax.lax.dynamic_update_slice(
-        cache["slot_pos"], pos[None].astype(jnp.int32) + jnp.arange(n, dtype=jnp.int32), (idx,))
+    # single-token (or ring) writes; per-row positions scatter per lane
+    pos_b = _row_pos(pos, b)
+    idx = (pos_b % t) if ring else jnp.clip(pos_b, 0, t - 1)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, idx].set(k_new[:, 0].astype(dtype))
+    v = cache["v"].at[rows, idx].set(v_new[:, 0].astype(dtype))
+    sp = cache["slot_pos"].at[rows, idx].set(pos_b)
     return {"k": k, "v": v, "slot_pos": sp}
 
 
 def cache_insert_stacked(caches: dict, layer_idx, k_new: jax.Array,
                          v_new: jax.Array, pos, ring: bool = False) -> dict:
     """In-place-style single-token insert into a STACKED (L, B, T, H, hd)
-    cache at (layer_idx, :, pos).  Used by the decode scan, which carries
-    the whole stacked cache: the DUS update is one token (KB), so XLA
-    aliases the carry buffer instead of copying the cache every layer
-    (scan-ys stacking rewrites the full cache per step — measured as the
-    dominant decode byte term before this change)."""
-    t = caches["k"].shape[2]
-    idx = (pos % t) if ring else pos
+    cache at (layer_idx, b, pos_b).  Used by the decode scan, which carries
+    the whole stacked cache: the scatter update is one token per lane (KB),
+    so XLA aliases the carry buffer instead of copying the cache every
+    layer (scan-ys stacking rewrites the full cache per step — measured as
+    the dominant decode byte term before this change)."""
+    b, t = caches["k"].shape[1:3]
+    pos_b = _row_pos(pos, b)
+    idx = (pos_b % t) if ring else jnp.clip(pos_b, 0, t - 1)
     dtype = caches["k"].dtype
-    k = jax.lax.dynamic_update_slice(
-        caches["k"], k_new.astype(dtype)[None], (layer_idx, 0, idx, 0, 0))
-    v = jax.lax.dynamic_update_slice(
-        caches["v"], v_new.astype(dtype)[None], (layer_idx, 0, idx, 0, 0))
-    sp = jax.lax.dynamic_update_slice(
-        caches["slot_pos"], pos[None, None].astype(jnp.int32),
-        (layer_idx, idx))
+    rows = jnp.arange(b)
+    k = caches["k"].at[layer_idx, rows, idx].set(k_new[:, 0].astype(dtype))
+    v = caches["v"].at[layer_idx, rows, idx].set(v_new[:, 0].astype(dtype))
+    sp = caches["slot_pos"].at[layer_idx, rows, idx].set(pos_b)
     return {"k": k, "v": v, "slot_pos": sp}
 
 
@@ -382,7 +399,7 @@ def cache_layer_view(caches: dict, layer_idx) -> dict:
     v = jax.lax.dynamic_slice(
         caches["v"], (layer_idx, 0, 0, 0, 0), (1,) + lk[1:])[0]
     sp = jax.lax.dynamic_slice(
-        caches["slot_pos"], (layer_idx, 0), (1, lk[2]))[0]
+        caches["slot_pos"], (layer_idx, 0, 0), (1, lk[1], lk[2]))[0]
     return {"k": k, "v": v, "slot_pos": sp}
 
 
@@ -400,5 +417,5 @@ def prefill_ring(cache: dict, k_all: jax.Array, v_all: jax.Array,
     slots = positions % w
     k = cache["k"].at[:, slots].set(k_tail.astype(cache["k"].dtype))
     v = cache["v"].at[:, slots].set(v_tail.astype(cache["v"].dtype))
-    sp = cache["slot_pos"].at[slots].set(positions)
+    sp = cache["slot_pos"].at[:, slots].set(positions)
     return {"k": k, "v": v, "slot_pos": sp}

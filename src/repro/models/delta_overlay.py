@@ -97,3 +97,77 @@ def overlay_nbytes(overlay) -> int:
     """Device-resident bytes of an overlay tree."""
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree.leaves(overlay))
+
+
+# ---------------------------------------------------------------------------
+# banked overlays (mixed-variant batches — DESIGN.md §9)
+#
+# A BANKED overlay tree mirrors the params tree like a single-variant
+# overlay, but every leaf is stacked along a bank axis of ``bank_size``
+# slots.  Slot 0 is the base: zero vectors (zero delta) for OverlayEntry
+# leaves, the base leaf value for extras leaves.  Model forwards take a
+# per-batch-row ``variant_idx`` selecting the slot each row fuses.
+#
+# Bank-axis placement: leaves under a scanned layer stack keep the stack
+# dim leading (lax.scan slices axis 0), so the bank axis sits at position 1
+# there and at position 0 everywhere else — the same convention by which
+# DeltaEntry/OverlayEntry leaves carry leading layer/expert dims.
+# ---------------------------------------------------------------------------
+
+STACKED_TOP_KEYS = frozenset({"layers", "pre_layers", "enc_layers",
+                              "dec_layers", "mlstm", "slstm", "mamba"})
+
+
+def bank_axis(path: str) -> int:
+    """Bank-axis position for a dot-path: after the scan-stack dim if the
+    leaf lives under a stacked top-level group, else leading."""
+    return 1 if path.split(".")[0] in STACKED_TOP_KEYS else 0
+
+
+def entry_slot(entry, v: int):
+    """One bank slot of a banked OverlayEntry whose bank axis has become
+    leading (after scan/stack slicing) — the per-variant entry shape."""
+    if entry is None:
+        return None
+    return OverlayEntry(packed=entry.packed[v], v_row=entry.v_row[v],
+                        v_col=entry.v_col[v])
+
+
+def _with_bank_dim(a: jax.Array, axis: int, size: int) -> tuple:
+    return a.shape[:axis] + (size,) + a.shape[axis:]
+
+
+def _bank_slot_index(axis: int, slot: int) -> tuple:
+    return (slice(None),) * axis + (slot,)
+
+
+def bank_zeros(path: str, entry: OverlayEntry, size: int) -> OverlayEntry:
+    """All-slots-zero banked entry shaped after one variant's entry (slot 0
+    = base stays all-zero forever: zero vectors mean Ŵ = W_b exactly)."""
+    ax = bank_axis(path)
+    z = lambda a: jnp.zeros(_with_bank_dim(a, ax, size), a.dtype)
+    return OverlayEntry(packed=z(entry.packed), v_row=z(entry.v_row),
+                        v_col=z(entry.v_col))
+
+
+def bank_extra_base(path: str, base_leaf: jax.Array, size: int) -> jax.Array:
+    """Banked extras leaf with every slot holding the base value (so
+    unassigned slots serve base semantics)."""
+    ax = bank_axis(path)
+    return jnp.broadcast_to(jnp.expand_dims(base_leaf, ax),
+                            _with_bank_dim(base_leaf, ax, size)) + 0
+
+
+def bank_clear_entry(path: str, bank: OverlayEntry, slot: int
+                     ) -> OverlayEntry:
+    idx = _bank_slot_index(bank_axis(path), slot)
+    return OverlayEntry(
+        packed=bank.packed.at[idx].set(jnp.zeros_like(bank.packed[idx])),
+        v_row=bank.v_row.at[idx].set(0),
+        v_col=bank.v_col.at[idx].set(0))
+
+
+def bank_set_extra_base(path: str, bank: jax.Array, slot: int,
+                        base_leaf: jax.Array) -> jax.Array:
+    idx = _bank_slot_index(bank_axis(path), slot)
+    return bank.at[idx].set(base_leaf.astype(bank.dtype))

@@ -17,13 +17,34 @@ def cast_to(x: jax.Array, dtype_name: str) -> jax.Array:
 # the fused on-the-fly delta GEMM without touching call sites
 # ---------------------------------------------------------------------------
 
-def linear(x: jax.Array, w: jax.Array, ov=None) -> jax.Array:
+def linear(x: jax.Array, w: jax.Array, ov=None, vidx=None) -> jax.Array:
     """y = x @ Ŵᵀ where Ŵ = w without an overlay entry, else the variant
-    weight v ⊙ unpack(B) + w applied on the fly (never densified)."""
+    weight v ⊙ unpack(B) + w applied on the fly (never densified).
+
+    With ``vidx`` (per-batch-row int32 variant indices, 0 = base) the
+    overlay entry is BANKED — leaves carry a leading bank axis and every
+    row fuses its own variant's delta in one mixed-variant GEMM
+    (DESIGN.md §9)."""
     if ov is None:
         return x @ w.T.astype(x.dtype)
     from repro.kernels import ops as K
-    return K.bitlinear_axes(x, ov.packed, ov.v_row, ov.v_col, w)
+    if vidx is None:
+        return K.bitlinear_axes(x, ov.packed, ov.v_row, ov.v_col, w)
+    return K.bitlinear_axes_banked(x, vidx, ov.packed, ov.v_row, ov.v_col, w)
+
+
+def psel(w: jax.Array, bank, vidx, *, lead: int = 1) -> jax.Array:
+    """Per-row parameter select for BANKED extras (norm scales, biases,
+    convs — fine-tuned leaves that are not delta targets).
+
+    ``bank`` is (V, *w.shape) with slot 0 holding the base value; returns
+    ``w`` untouched when unbanked, else ``bank[vidx]`` with ``lead``
+    singleton axes inserted after the batch dim so the result broadcasts
+    against (B, S, ...) activations."""
+    if bank is None or vidx is None:
+        return w
+    sel = jnp.take(bank, vidx, axis=0)
+    return sel.reshape(sel.shape[0], *([1] * lead), *sel.shape[1:])
 
 
 def _oget(ov, key):
@@ -127,8 +148,34 @@ def embed_init(key, vocab: int, d: int) -> Param:
     return dense_init(key, (vocab, d), ("vocab", "embed"), scale=1.0)
 
 
-def embed_lookup(table: jax.Array, tokens: jax.Array, dtype: str) -> jax.Array:
-    return cast_to(jnp.take(table, tokens, axis=0), dtype)
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype: str,
+                 bank=None, vidx=None) -> jax.Array:
+    """Token embedding; with a banked extras table (V, vocab, d) and per-row
+    variant indices, each batch row looks up its own variant's table."""
+    if bank is None or vidx is None:
+        return cast_to(jnp.take(table, tokens, axis=0), dtype)
+    idx = vidx.reshape(vidx.shape[0], *([1] * (tokens.ndim - 1)))
+    return cast_to(bank[idx, tokens], dtype)
+
+
+def unembed_logits(x: jax.Array, table: jax.Array, bank=None,
+                   vidx=None) -> jax.Array:
+    """logits = x @ tableᵀ; with a banked table each row contracts against
+    its own variant's (fine-tuned, fp16-rounded) unembedding.
+
+    Banked path is a masked select over the V bank slots (same pattern as
+    the banked MoE router): the table is read at most V times per step —
+    never gathered per ROW, which would cost B copies of (vocab, d) and
+    break the traffic-independent-of-batch-mix invariant (DESIGN.md §9) —
+    and each row's logits come from the identical matmul the per-variant
+    path runs, so greedy tokens match it exactly."""
+    if bank is None or vidx is None:
+        return x @ table.T.astype(x.dtype)
+    logits = x @ bank[0].T.astype(x.dtype)               # slot 0 = base
+    for v in range(1, bank.shape[0]):
+        lv = x @ bank[v].T.astype(x.dtype)
+        logits = jnp.where((vidx == v)[:, None, None], lv, logits)
+    return logits
 
 
 # ---------------------------------------------------------------------------
@@ -144,10 +191,10 @@ def mlp_init(key, d: int, d_ff: int) -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jax.Array, ov=None) -> jax.Array:
-    h = (jax.nn.silu(linear(x, p["w_gate"], _oget(ov, "w_gate")))
-         * linear(x, p["w_up"], _oget(ov, "w_up")))
-    return linear(h, p["w_down"], _oget(ov, "w_down"))
+def mlp_apply(p: dict, x: jax.Array, ov=None, vidx=None) -> jax.Array:
+    h = (jax.nn.silu(linear(x, p["w_gate"], _oget(ov, "w_gate"), vidx))
+         * linear(x, p["w_up"], _oget(ov, "w_up"), vidx))
+    return linear(h, p["w_down"], _oget(ov, "w_down"), vidx)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +209,6 @@ def mlp2_init(key, d: int, d_ff: int) -> dict:
     }
 
 
-def mlp2_apply(p: dict, x: jax.Array, ov=None) -> jax.Array:
-    return linear(jax.nn.gelu(linear(x, p["w_in"], _oget(ov, "w_in"))),
-                  p["w_out"], _oget(ov, "w_out"))
+def mlp2_apply(p: dict, x: jax.Array, ov=None, vidx=None) -> jax.Array:
+    return linear(jax.nn.gelu(linear(x, p["w_in"], _oget(ov, "w_in"), vidx)),
+                  p["w_out"], _oget(ov, "w_out"), vidx)

@@ -35,17 +35,25 @@ class Model:
     # per-module deltas riding alongside ``params``: matmuls with an entry
     # dispatch to the fused on-the-fly delta GEMM (serving a variant with
     # zero dense reconstruction); None means plain base/materialised params.
-    def forward(self, params, batch, overlay=None):
-        return self._mod.forward(params, batch, self.cfg, overlay=overlay)
+    # ``variant_idx`` (B,) int32 marks the overlay as BANKED (leading bank
+    # axis on every leaf, slot 0 = base): each batch row fuses its own
+    # variant's delta — one jitted call serves a mixed-variant batch
+    # (DESIGN.md §9).
+    def forward(self, params, batch, overlay=None, variant_idx=None):
+        return self._mod.forward(params, batch, self.cfg, overlay=overlay,
+                                 variant_idx=variant_idx)
 
     def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16,
-                overlay=None):
+                overlay=None, variant_idx=None):
         return self._mod.prefill(params, batch, self.cfg, max_len,
-                                 cache_dtype=cache_dtype, overlay=overlay)
+                                 cache_dtype=cache_dtype, overlay=overlay,
+                                 variant_idx=variant_idx)
 
-    def decode_step(self, params, token, cache, overlay=None):
+    def decode_step(self, params, token, cache, overlay=None,
+                    variant_idx=None):
         return self._mod.decode_step(params, token, cache, self.cfg,
-                                     overlay=overlay)
+                                     overlay=overlay,
+                                     variant_idx=variant_idx)
 
     # -- caches ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):

@@ -72,17 +72,41 @@ def _expert_mm(xe: jax.Array, w: jax.Array, ent) -> jax.Array:
     return jax.vmap(lambda x_, e_, w_: linear(x_, w_, e_))(xe, ent, w)
 
 
-def moe_apply(p: dict, x: jax.Array, cfg, ov=None
+def moe_apply(p: dict, x: jax.Array, cfg, ov=None, vidx=None
               ) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (y, aux_loss)."""
+    """x: (B, S, D) -> (y, aux_loss).
+
+    ``vidx`` (B,) enables mixed-variant batches over a BANKED overlay: the
+    router (an uncompressed extra) is applied per token by masked select
+    over the bank, and the grouped expert GEMMs fall back to masked
+    per-variant application (DESIGN.md §9) — V fused passes with
+    non-matching rows zeroed, jittable and exact per row.  Note capacity
+    dispatch couples rows: a token's survival can depend on which other
+    variants share its group, exactly as it depends on batch composition
+    in single-variant serving.
+    """
+    b, s, _ = x.shape
     e, k = cfg.num_experts, cfg.top_k
     xg, orig = _group_tokens(x)
     g, n, d = xg.shape
     cap = max(1, int(n * k / e * cfg.capacity_factor))
     cap = min(cap, n)
+    # per-token variant indices in group layout (tokens are row-major)
+    vidx_gn = (None if vidx is None
+               else jnp.broadcast_to(vidx[:, None], (b, s)).reshape(g, n))
 
     xg = logical_constraint(xg, "act_groups", None, None)
-    logits = (xg @ p["router"].T.astype(x.dtype)).astype(jnp.float32)  # (G,N,E)
+    rb = oget(ov, "router")
+    if rb is None or vidx_gn is None:
+        logits = (xg @ p["router"].T.astype(x.dtype)).astype(jnp.float32)
+    else:
+        # banked router: identical matmul per bank slot, rows select their
+        # own variant's routing scores (slot 0 = base)
+        logits = xg @ rb[0].T.astype(x.dtype)
+        for vi in range(1, rb.shape[0]):
+            lv = xg @ rb[vi].T.astype(x.dtype)
+            logits = jnp.where((vidx_gn == vi)[..., None], lv, logits)
+        logits = logits.astype(jnp.float32)                         # (G,N,E)
     probs = jax.nn.softmax(logits, axis=-1)
 
     # shard-local top_k: XLA's sort partitioning otherwise all-gathers the
@@ -105,8 +129,32 @@ def moe_apply(p: dict, x: jax.Array, cfg, ov=None
     # grouped expert GEMMs (gated SwiGLU); with an overlay the per-expert
     # matmuls run expert-major (E, G·C, ·) so the fused delta kernel sees
     # one (M, K) GEMM per expert stack entry
-    if ov is not None and any(oget(ov, k_) is not None
-                              for k_ in ("w_gate", "w_up", "w_down")):
+    has_delta = ov is not None and any(oget(ov, k_) is not None
+                                       for k_ in ("w_gate", "w_up", "w_down"))
+    if has_delta and vidx_gn is not None:
+        # mixed-variant banked overlay: masked per-variant application —
+        # banking the per-row gather inside the grouped (E, M, ·) GEMMs is
+        # awkward (rows are dispatch slots, not batch lanes), so run the
+        # existing per-variant fused pass once per bank slot with
+        # non-matching rows zeroed and select (slot 0 = base weights)
+        from repro.models.delta_overlay import entry_slot
+        xe = xd.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+        vd = jnp.take_along_axis(vidx_gn[:, None, :], c_idx, axis=2)  # (G,E,C)
+        vidx_e = vd.transpose(1, 0, 2).reshape(e, g * cap)
+        ents = {k_: oget(ov, k_) for k_ in ("w_gate", "w_up", "w_down")}
+        nbank = next(v.packed.shape[0] for v in ents.values()
+                     if v is not None)
+        ye = jnp.zeros((e, g * cap, d), x.dtype)
+        for vi in range(nbank):
+            mask = (vidx_e == vi)[..., None]
+            xv = jnp.where(mask, xe, 0)
+            sl = {k_: entry_slot(v, vi) for k_, v in ents.items()}
+            hv = (jax.nn.silu(_expert_mm(xv, p["w_gate"], sl["w_gate"]))
+                  * _expert_mm(xv, p["w_up"], sl["w_up"]))
+            yv = _expert_mm(hv, p["w_down"], sl["w_down"])
+            ye = jnp.where(mask, yv, ye)
+        yd = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+    elif has_delta:
         xe = xd.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
         he = (jax.nn.silu(_expert_mm(xe, p["w_gate"], oget(ov, "w_gate")))
               * _expert_mm(xe, p["w_up"], oget(ov, "w_up")))
@@ -139,7 +187,8 @@ def moe_apply(p: dict, x: jax.Array, cfg, ov=None
     # redundant shared-expert FLOPs.
     if "shared" in p:
         from repro.models.layers import mlp_apply
-        y = y + mlp_apply(p["shared"], xg, ov=oget(ov, "shared"))
+        y = y + mlp_apply(p["shared"], xg, ov=oget(ov, "shared"),
+                          vidx=vidx_gn)
 
     # load-balancing aux loss (Switch-style): f_i · P_i summed over experts
     frac_tokens = jnp.mean(

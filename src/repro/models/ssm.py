@@ -144,10 +144,15 @@ def slstm_step(state: dict, zx, ix, fx, ox, r_z, r_i, r_f, r_o
     """One sLSTM step with per-head recurrent weights.
 
     zx/ix/fx/ox: (B,H,hd) input-projected pre-activations;
-    r_*: (H, hd, hd) block-diagonal recurrent weights acting on h_{t-1}.
+    r_*: (H, hd, hd) block-diagonal recurrent weights acting on h_{t-1},
+    or (B, H, hd, hd) per-row (banked mixed-variant serving).
     """
     hp = state["h"]
-    rec = lambda r: jnp.einsum("bhd,hde->bhe", hp, r)
+
+    def rec(r):
+        if r.ndim == 4:
+            return jnp.einsum("bhd,bhde->bhe", hp, r)
+        return jnp.einsum("bhd,hde->bhe", hp, r)
     z = jnp.tanh(zx.astype(jnp.float32) + rec(r_z))
     li = ix.astype(jnp.float32) + rec(r_i)
     lf = jax.nn.log_sigmoid(fx.astype(jnp.float32) + rec(r_f))
@@ -187,15 +192,16 @@ def mamba_init_state(b: int, h: int, p: int, n: int) -> jax.Array:
 def mamba_step(state: jax.Array, x, bm, cm, dt, a_log, d_skip
                ) -> tuple[jax.Array, jax.Array]:
     """One SSD step.  x: (B,H,P); bm/cm: (B,N); dt: (B,H);
-    a_log (H,), d_skip (H,)."""
+    a_log (H,) or (B,H), d_skip (H,) or (B,H) (banked per-row)."""
     xf = x.astype(jnp.float32)
-    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,) negative
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)|(B,H) neg
     da = jnp.exp(dt.astype(jnp.float32) * a)              # (B,H)
     upd = dt.astype(jnp.float32)[..., None, None] * (
         xf[..., :, None] * bm.astype(jnp.float32)[:, None, None, :])
     s_new = da[..., None, None] * state + upd
     y = jnp.einsum("bhpn,bn->bhp", s_new, cm.astype(jnp.float32))
-    y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    ds = d_skip.astype(jnp.float32)
+    y = y + (ds[None, :, None] if ds.ndim == 1 else ds[:, :, None]) * xf
     return s_new, y.astype(x.dtype)
 
 
@@ -205,7 +211,8 @@ def mamba_chunkwise(x, bm, cm, dt, a_log, d_skip,
     """Chunkwise-parallel SSD.
 
     x: (B,S,H,P); bm/cm: (B,S,N) (single B/C group shared over heads);
-    dt: (B,S,H) post-softplus; a_log/d_skip: (H,).
+    dt: (B,S,H) post-softplus; a_log/d_skip: (H,) or (B,H) per-row (banked
+    mixed-variant serving).
     Returns (y (B,S,H,P), final state (B,H,P,N)).
     """
     b, s, h, p = x.shape
@@ -215,7 +222,10 @@ def mamba_chunkwise(x, bm, cm, dt, a_log, d_skip,
     if state is None:
         state = mamba_init_state(b, h, p, n)
 
-    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)|(B,H)
+    a_c = a[None, :] if a.ndim == 1 else a[:, None, :]    # vs dtk (B,c,H)
+    ds = d_skip.astype(jnp.float32)
+    ds_c = ds[None, None, :, None] if ds.ndim == 1 else ds[:, None, :, None]
 
     def to_chunks(t):
         return t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
@@ -233,7 +243,7 @@ def mamba_chunkwise(x, bm, cm, dt, a_log, d_skip,
 
     def chunk_step(s_p, inp):
         xk, bk, ck, dtk = inp
-        ldak = dtk * a                                    # (B,c,H) log dA ≤ 0
+        ldak = dtk * a_c                                  # (B,c,H) log dA ≤ 0
         lcum = jnp.cumsum(ldak, axis=1)                   # inclusive
         # intra: M_{is} = (C_i·B_s)·exp(L_i − L_s)·dt_s for s ≤ i
         cb = jnp.einsum("bin,bsn->bis", ck.astype(lp_dtype),
@@ -247,7 +257,7 @@ def mamba_chunkwise(x, bm, cm, dt, a_log, d_skip,
         # inter: exp(L_i)·C_i·S_prev
         y = y + jnp.exp(lcum)[..., None] * jnp.einsum(
             "bhpn,bin->bihp", s_p, ck)
-        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xk
+        y = y + ds_c * xk
         # carry: S_next = exp(L_c)·S_prev + Σ_s exp(L_c − L_s)·dt_s·x_s ⊗ B_s
         l_tot = lcum[:, -1, :]                            # (B,H)
         w = jnp.exp(l_tot[:, None, :] - lcum) * dtk       # (B,s,H)

@@ -20,7 +20,8 @@ from repro.models import attention as A
 from repro.models import moe as MOE
 from repro.models.delta_overlay import oget
 from repro.models.layers import (cast_to, embed_init, embed_lookup, linear,
-                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init)
+                                 mlp_apply, mlp_init, psel, rmsnorm,
+                                 rmsnorm_init, unembed_logits)
 from repro.models.param import dense_init, stack_layers
 
 
@@ -91,15 +92,18 @@ def init(rng, cfg) -> dict:
 # ---------------------------------------------------------------------------
 
 def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
-               decode_pos=None, io=None, ov=None):
+               decode_pos=None, io=None, ov=None, vidx=None):
     """Attention sub-block.  Returns (out, (k, v)) — k/v exported for cache
     building during prefill.  ``io`` (dict or None) collects per-linear
     (input, output) pairs — the functional stand-in for the paper's
     PyTorch forward hooks (calibration cache, Alg. 3).  ``ov`` is the
-    block's delta-overlay subtree (on-the-fly variant execution)."""
+    block's delta-overlay subtree (on-the-fly variant execution); with
+    ``vidx`` the subtree is BANKED and every batch row fuses its own
+    variant (DESIGN.md §9)."""
     ov_a = oget(ov, "attn")
-    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, theta, ov=ov_a)
+    h = rmsnorm(x, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, theta, ov=ov_a,
+                            vidx=vidx)
     if kv_override is None:
         o = A.flash_attention(q, k, v, causal=True, window=window)
     else:
@@ -110,7 +114,7 @@ def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
     # constraint forces the row-parallel psum HERE, in bf16 — without it
     # GSPMD defers the reduction into the next op's fp32 domain (rmsnorm
     # upcast), doubling the wire bytes of every TP all-reduce
-    wo_out = lc(linear(o, p["attn"]["wo"], oget(ov_a, "wo")),
+    wo_out = lc(linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx),
                 "act_batch", "act_seq", None)
     if io is not None:
         b, s, _ = x.shape
@@ -121,12 +125,13 @@ def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
     return x + wo_out, (k, v)
 
 
-def _ffn_part(p, x, cfg, io=None, ov=None):
-    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+def _ffn_part(p, x, cfg, io=None, ov=None, vidx=None):
+    h = rmsnorm(x, psel(p["ln2"], oget(ov, "ln2"), vidx), cfg.norm_eps)
     if "moe" in p:
-        y, aux = MOE.moe_apply(p["moe"], h, cfg, ov=oget(ov, "moe"))
+        y, aux = MOE.moe_apply(p["moe"], h, cfg, ov=oget(ov, "moe"),
+                               vidx=vidx)
     else:
-        y, aux = lc(mlp_apply(p["mlp"], h, ov=oget(ov, "mlp")),
+        y, aux = lc(mlp_apply(p["mlp"], h, ov=oget(ov, "mlp"), vidx=vidx),
                     "act_batch", "act_seq", None), jnp.float32(0)
         if io is not None:
             gate = h @ p["mlp"]["w_gate"].T.astype(h.dtype)
@@ -138,12 +143,14 @@ def _ffn_part(p, x, cfg, io=None, ov=None):
     return x + y, aux
 
 
-def block_apply(p, x, cfg, positions, theta, window, io=None, ov=None):
+def block_apply(p, x, cfg, positions, theta, window, io=None, ov=None,
+                vidx=None):
     # bf16 residual-stream boundary: the block-input cotangent (where the
     # column-parallel backward psum lands) stays bf16
     x = lc(x, "act_batch", "act_seq", None)
-    x, kv = _attn_part(p, x, cfg, positions, theta, window, io=io, ov=ov)
-    x, aux = _ffn_part(p, x, cfg, io=io, ov=ov)
+    x, kv = _attn_part(p, x, cfg, positions, theta, window, io=io, ov=ov,
+                       vidx=vidx)
+    x, aux = _ffn_part(p, x, cfg, io=io, ov=ov, vidx=vidx)
     return x, kv, aux
 
 
@@ -151,18 +158,19 @@ def block_apply(p, x, cfg, positions, theta, window, io=None, ov=None):
 # embedding front (handles vlm prefix)
 # ---------------------------------------------------------------------------
 
-def embed_inputs(params, batch, cfg) -> jax.Array:
+def embed_inputs(params, batch, cfg, ov=None, vidx=None) -> jax.Array:
     """params is the plain-array tree (post param.split)."""
-    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype,
+                     bank=oget(ov, "embed"), vidx=vidx)
     if cfg.family == "vlm" and "image_embeds" in batch:
         img = cast_to(batch["image_embeds"], cfg.compute_dtype)
         x = jnp.concatenate([img, x], axis=1)
     return lc(x, "act_batch", "act_seq", "act_embed")
 
 
-def _unembed(params, x, cfg):
-    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = x @ table.T.astype(x.dtype)
+def _unembed(params, x, cfg, ov=None, vidx=None):
+    key = "embed" if cfg.tie_embeddings else "unembed"
+    logits = unembed_logits(x, params[key], bank=oget(ov, key), vidx=vidx)
     return lc(logits, "act_batch", "act_seq", "act_vocab")
 
 
@@ -171,7 +179,7 @@ def _unembed(params, x, cfg):
 # ---------------------------------------------------------------------------
 
 def forward(params, batch, cfg, collect_kv: bool = False,
-            collect_io: bool = False, overlay=None):
+            collect_io: bool = False, overlay=None, variant_idx=None):
     """-> (logits (B,S,V), aux dict).
 
     aux["kv"] (L,B,S,Hkv,hd)×2 when collect_kv (prefill cache building).
@@ -180,8 +188,12 @@ def forward(params, batch, cfg, collect_kv: bool = False,
     scan layers, so one forward yields every layer's linear IO.
     overlay: optional delta-overlay tree mirroring params — matmuls with an
     entry run the fused on-the-fly delta GEMM against the base weight.
+    variant_idx: optional (B,) int32 — overlay leaves are then BANKED
+    (leading bank axis; extras included) and every batch row serves its own
+    variant, slot 0 meaning base (DESIGN.md §9).
     """
-    x = embed_inputs(params, batch, cfg)
+    vidx = variant_idx
+    x = embed_inputs(params, batch, cfg, ov=overlay, vidx=vidx)
     b, s, _ = x.shape
     positions = jnp.arange(s)
     aux_total = jnp.float32(0)
@@ -199,7 +211,7 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             io_i = {} if collect_io else None
             x, kv, aux = block_apply(pi, x, cfg, positions,
                                      cfg.rope_theta, cfg.sliding_window,
-                                     io=io_i, ov=ov_i)
+                                     io=io_i, ov=ov_i, vidx=vidx)
             aux_total += aux
             if collect_kv:
                 kv_all.append(kv)
@@ -214,7 +226,7 @@ def forward(params, batch, cfg, collect_kv: bool = False,
         lp, ovl, theta, window = xs
         io_i = {} if collect_io else None
         h, kv, aux = block_apply(lp, h, cfg, positions, theta, window,
-                                 io=io_i, ov=ovl)
+                                 io=io_i, ov=ovl, vidx=vidx)
         ys = (kv if collect_kv else None, io_i if collect_io else None)
         return (h, aux_acc + aux), ys
 
@@ -227,8 +239,9 @@ def forward(params, batch, cfg, collect_kv: bool = False,
         body_fn, (x, aux_total), (params["layers"], ov_layers,
                                   thetas, windows))
 
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = _unembed(params, x, cfg)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = _unembed(params, x, cfg, ov=overlay, vidx=vidx)
     aux = {"moe_aux": aux_total}
     if collect_kv:
         if kv_all:
@@ -267,7 +280,9 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_stack,) + a.shape).copy(), one)
 
-    cache = {"pos": jnp.int32(0),
+    # pos is PER BATCH ROW: continuous batching admits/retires lanes
+    # independently, so each lane carries its own decode position
+    cache = {"pos": jnp.zeros((batch,), jnp.int32),
              "slots": [stack_caches(n_super, sz) for sz in sizes]}
     if n_pre:
         cache["pre"] = stack_caches(n_pre, max_len)
@@ -293,60 +308,73 @@ def cache_pspecs(cfg, long_context: bool,
     hd_ax = None if kv_seq_shard else "act_hd"
     kv_axes = {"k": (None, "act_batch", seq_ax, kv_heads_ax, hd_ax),
                "v": (None, "act_batch", seq_ax, kv_heads_ax, hd_ax),
-               "slot_pos": (None, seq_ax)}
+               "slot_pos": (None, "act_batch", seq_ax)}
     # ring (windowed) caches are small: never sequence-sharded
     ring_axes = {"k": (None, "act_batch", None, "act_kv", "act_hd"),
                  "v": (None, "act_batch", None, "act_kv", "act_hd"),
-                 "slot_pos": (None, None)}
+                 "slot_pos": (None, "act_batch", None)}
     pat = layer_pattern(cfg)
-    spec = {"pos": (), "slots": [ring_axes if e["window"] > 0 else kv_axes
-                                 for e in pat]}
+    spec = {"pos": ("act_batch",),
+            "slots": [ring_axes if e["window"] > 0 else kv_axes
+                      for e in pat]}
     n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
     if n_pre:
         spec["pre"] = kv_axes
     return spec
 
 
-def _decode_block(p, x, cfg, layer_cache, pat_entry, pos, ov=None):
-    """One layer in decode mode; returns (x, updated layer cache)."""
+def _decode_pos_q(pos) -> jax.Array:
+    """Per-row decode positions (B,) -> RoPE positions (B, 1)."""
+    return jnp.asarray(pos, jnp.int32)[:, None]
+
+
+def _decode_block(p, x, cfg, layer_cache, pat_entry, pos, ov=None,
+                  vidx=None):
+    """One layer in decode mode; returns (x, updated layer cache).
+    ``pos`` is per batch row (B,) — lanes may sit at different depths."""
     window = pat_entry["window"]
     ov_a = oget(ov, "attn")
-    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"],
-                            ov=ov_a)
+    h = rmsnorm(x, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, _decode_pos_q(pos),
+                            pat_entry["theta"], ov=ov_a, vidx=vidx)
     new_cache = A.cache_insert(layer_cache, k, v, pos, ring=window > 0)
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos, window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"))
-    x, _ = _ffn_part(p, x, cfg, ov=ov)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx)
+    x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
     return x, new_cache
 
 
-def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos, ov=None):
+def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos, ov=None,
+                          vidx=None):
     """One layer in decode mode against a STACKED cache carried by the
     scan: inserts one token in place, reads the layer slice for attention.
     Returns (x, updated stacked caches)."""
     window = pat_entry["window"]
     ov_a = oget(ov, "attn")
-    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = A.qkv_project(p["attn"], h, cfg, pos[None], pat_entry["theta"],
-                            ov=ov_a)
+    h = rmsnorm(x, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, _decode_pos_q(pos),
+                            pat_entry["theta"], ov=ov_a, vidx=vidx)
     caches = A.cache_insert_stacked(caches, idx, k, v, pos,
                                     ring=window > 0)
     view = A.cache_layer_view(caches, idx)
     o = A.decode_attention(q, view["k"], view["v"], view["slot_pos"], pos,
                            window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"))
-    x, _ = _ffn_part(p, x, cfg, ov=ov)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx)
+    x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
     return x, caches
 
 
-def decode_step(params, token, cache, cfg, overlay=None):
-    """token (B,) int32 -> (logits (B,V), updated cache)."""
+def decode_step(params, token, cache, cfg, overlay=None, variant_idx=None):
+    """token (B,) int32 -> (logits (B,V), updated cache).
+
+    cache["pos"] is (B,) — per-lane positions (continuous batching)."""
+    vidx = variant_idx
     pos = cache["pos"]
-    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x = lc(x, "act_batch", None, "act_embed")
     pat = layer_pattern(cfg)
 
@@ -362,7 +390,7 @@ def decode_step(params, token, cache, cfg, overlay=None):
             ci = jax.tree.map(lambda a: a[i], cache["pre"])
             x, ci_new = _decode_block(
                 pi, x, cfg, ci, {"window": 0, "theta": cfg.rope_theta}, pos,
-                ov=ov_i)
+                ov=ov_i, vidx=vidx)
             pre_out.append(ci_new)
         new_cache["pre"] = jax.tree.map(lambda *a: jnp.stack(a), *pre_out)
 
@@ -387,7 +415,7 @@ def decode_step(params, token, cache, cfg, overlay=None):
             pj = jax.tree.map(lambda a: a[j], lp)
             ovj = jax.tree.map(lambda a: a[j], ovl)
             h, cj = _decode_block_stacked(pj, h, cfg, slots[j], idx,
-                                          entry, pos, ov=ovj)
+                                          entry, pos, ov=ovj, vidx=vidx)
             new_slots.append(cj)
         return (h, new_slots), None
 
@@ -396,8 +424,9 @@ def decode_step(params, token, cache, cfg, overlay=None):
         (sup_params, sup_overlay, jnp.arange(n_super)))
     new_cache["slots"] = new_slots
 
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = _unembed(params, x, cfg)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = _unembed(params, x, cfg, ov=overlay, vidx=vidx)
     return logits[:, 0, :], new_cache
 
 
@@ -406,10 +435,10 @@ def decode_step(params, token, cache, cfg, overlay=None):
 # ---------------------------------------------------------------------------
 
 def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
-            overlay=None):
+            overlay=None, variant_idx=None):
     """Teacher-forced pass over the prompt; returns (last_logits, cache)."""
     logits, aux = forward(params, batch, cfg, collect_kv=True,
-                          overlay=overlay)
+                          overlay=overlay, variant_idx=variant_idx)
     b = batch["tokens"].shape[0]
     s = logits.shape[1]
     cache = init_cache(cfg, b, max_len, cache_dtype)
@@ -435,5 +464,5 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
         pk, pv = aux["pre_kv"]
         cache["pre"] = jax.vmap(lambda c, kk, vv: A.cache_insert(c, kk, vv, 0))(
             cache["pre"], pk, pv)
-    cache["pos"] = jnp.int32(s)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
     return logits[:, -1, :], cache

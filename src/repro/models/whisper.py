@@ -16,8 +16,9 @@ from repro.distributed.sharding import logical_constraint as lc
 from repro.models import attention as A
 from repro.models.delta_overlay import oget
 from repro.models.layers import (embed_init, embed_lookup, linear,
-                                 mlp2_apply, mlp2_init, rmsnorm,
-                                 rmsnorm_init, sinusoidal_positions)
+                                 mlp2_apply, mlp2_init, psel, rmsnorm,
+                                 rmsnorm_init, sinusoidal_positions,
+                                 unembed_logits)
 from repro.models.param import dense_init, stack_layers
 
 
@@ -52,7 +53,7 @@ def dec_block_init(key, cfg) -> dict:
             "mlp": mlp2_init(k3, cfg.d_model, cfg.d_ff)}
 
 
-def _qkv(p, xq, xkv, cfg, ov=None):
+def _qkv(p, xq, xkv, cfg, ov=None, vidx=None):
     """Whisper has 8 heads vs a 16-way model axis → sequence-TP attention
     (see attention.qkv_project): shard the q sequence over `model`; the
     encoder side (1500 frames, not divisible) falls back to replicated."""
@@ -63,20 +64,20 @@ def _qkv(p, xq, xkv, cfg, ov=None):
     head_tp = cfg.num_heads % ms == 0
     axes = (("act_batch", "act_seq", "act_heads") if head_tp
             else ("act_batch", "act_seq_tp", None))
-    q = lc(linear(xq, p["wq"], oget(ov, "wq")).astype(xq.dtype), *axes)
-    k = lc(linear(xkv, p["wk"], oget(ov, "wk")).astype(xq.dtype), *axes)
-    v = lc(linear(xkv, p["wv"], oget(ov, "wv")).astype(xq.dtype), *axes)
+    q = lc(linear(xq, p["wq"], oget(ov, "wq"), vidx).astype(xq.dtype), *axes)
+    k = lc(linear(xkv, p["wk"], oget(ov, "wk"), vidx).astype(xq.dtype), *axes)
+    v = lc(linear(xkv, p["wv"], oget(ov, "wv"), vidx).astype(xq.dtype), *axes)
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     return q, k, v
 
 
-def _attn(p, xq, xkv, cfg, causal, ov=None):
-    q, k, v = _qkv(p, xq, xkv, cfg, ov=ov)
+def _attn(p, xq, xkv, cfg, causal, ov=None, vidx=None):
+    q, k, v = _qkv(p, xq, xkv, cfg, ov=ov, vidx=vidx)
     o = A.flash_attention(q, k, v, causal=causal)
     return linear(o.reshape(*xq.shape[:-1], cfg.q_dim), p["wo"],
-                  oget(ov, "wo"))
+                  oget(ov, "wo"), vidx)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +103,7 @@ def _tap_linear(io, name, x_in, w, out):
 
 
 def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
-           overlay=None):
+           overlay=None, vidx=None):
     """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
     x = frames.astype(jnp.dtype(cfg.compute_dtype))
     x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
@@ -112,8 +113,9 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
         lp, ovl = xs
         ov_a = oget(ovl, "attn")
         io = {} if collect_io else None
-        hn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["attn"], hn, hn, cfg, ov=ov_a)
+        hn = rmsnorm(h, psel(lp["ln1"], oget(ovl, "ln1"), vidx),
+                     cfg.norm_eps)
+        q, k, v = _qkv(lp["attn"], hn, hn, cfg, ov=ov_a, vidx=vidx)
         b, f, _ = hn.shape
         if io is not None:
             io["attn.wq"] = (hn, q.reshape(b, f, -1))
@@ -121,16 +123,18 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
             io["attn.wv"] = (hn, v.reshape(b, f, -1))
         o = A.flash_attention(q, k, v, causal=False
                               ).reshape(b, f, cfg.q_dim)
-        wo_out = linear(o, lp["attn"]["wo"], oget(ov_a, "wo"))
+        wo_out = linear(o, lp["attn"]["wo"], oget(ov_a, "wo"), vidx)
         _tap_linear(io, "attn.wo", o, None, wo_out)
         h = h + wo_out
         ov_m = oget(ovl, "mlp")
-        hm = rmsnorm(h, lp["ln2"], cfg.norm_eps)
-        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in")))
-        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"))
+        hm = rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"), vidx),
+                     cfg.norm_eps)
+        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in"),
+                                 vidx))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx)
         if io is not None:
             io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
-                                         oget(ov_m, "w_in")))
+                                         oget(ov_m, "w_in"), vidx))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         return h, io
@@ -141,22 +145,26 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
                                  policy=jax.checkpoint_policies.nothing_saveable)
     x, enc_io = jax.lax.scan(body_fn, x, (params["enc_layers"],
                                           oget(overlay, "enc_layers")))
-    out = rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+    out = rmsnorm(x, psel(params["enc_norm"], oget(overlay, "enc_norm"),
+                          vidx), cfg.norm_eps)
     return (out, enc_io) if collect_io else (out, None)
 
 
 def forward(params, batch, cfg, collect_kv: bool = False,
-            collect_io: bool = False, overlay=None):
+            collect_io: bool = False, overlay=None, variant_idx=None):
     """Teacher-forced: batch = {"tokens" (B,S), "frames" (B,F,d)}.
 
     collect_io: per-linear (X, Y) calibration caches as stacked scan
     outputs (aux["enc_io"] / aux["dec_io"]) — Alg. 3's hooks for the
     encoder-decoder family."""
+    vidx = variant_idx
     enc_out, enc_io = encode(params, batch["frames"], cfg,
-                             collect_io=collect_io, overlay=overlay)
+                             collect_io=collect_io, overlay=overlay,
+                             vidx=vidx)
     tokens = batch["tokens"]
     b, s = tokens.shape
-    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x = x + sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
     x = lc(x, "act_batch", "act_seq", "act_embed")
 
@@ -164,20 +172,23 @@ def forward(params, batch, cfg, collect_kv: bool = False,
         lp, ovl = xs
         io = {} if collect_io else None
         ov_s = oget(ovl, "self_attn")
-        hs = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s)
+        hs = rmsnorm(h, psel(lp["ln1"], oget(ovl, "ln1"), vidx),
+                     cfg.norm_eps)
+        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s, vidx=vidx)
         if io is not None:
             io["self_attn.wq"] = (hs, q.reshape(b, s, -1))
             io["self_attn.wk"] = (hs, k.reshape(b, s, -1))
             io["self_attn.wv"] = (hs, v.reshape(b, s, -1))
         o = A.flash_attention(q, k, v, causal=True)
         o = o.reshape(b, s, cfg.q_dim)
-        wo_out = linear(o, lp["self_attn"]["wo"], oget(ov_s, "wo"))
+        wo_out = linear(o, lp["self_attn"]["wo"], oget(ov_s, "wo"), vidx)
         _tap_linear(io, "self_attn.wo", o, None, wo_out)
         h = h + wo_out
         ov_x = oget(ovl, "cross_attn")
-        hx = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
-        qx, kx, vx = _qkv(lp["cross_attn"], hx, enc_out, cfg, ov=ov_x)
+        hx = rmsnorm(h, psel(lp["ln_x"], oget(ovl, "ln_x"), vidx),
+                     cfg.norm_eps)
+        qx, kx, vx = _qkv(lp["cross_attn"], hx, enc_out, cfg, ov=ov_x,
+                          vidx=vidx)
         if io is not None:
             f = enc_out.shape[1]
             io["cross_attn.wq"] = (hx, qx.reshape(b, s, -1))
@@ -185,16 +196,18 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             io["cross_attn.wv"] = (enc_out, vx.reshape(b, f, -1))
         ox = A.flash_attention(qx, kx, vx, causal=False
                                ).reshape(b, s, cfg.q_dim)
-        xo_out = linear(ox, lp["cross_attn"]["wo"], oget(ov_x, "wo"))
+        xo_out = linear(ox, lp["cross_attn"]["wo"], oget(ov_x, "wo"), vidx)
         _tap_linear(io, "cross_attn.wo", ox, None, xo_out)
         h = h + xo_out
         ov_m = oget(ovl, "mlp")
-        hm = rmsnorm(h, lp["ln2"], cfg.norm_eps)
-        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in")))
-        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"))
+        hm = rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"), vidx),
+                     cfg.norm_eps)
+        mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in"),
+                                 vidx))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx)
         if io is not None:
             io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
-                                         oget(ov_m, "w_in")))
+                                         oget(ov_m, "w_in"), vidx))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         ys = (k, v) if collect_kv else None
@@ -206,8 +219,10 @@ def forward(params, batch, cfg, collect_kv: bool = False,
                                  policy=jax.checkpoint_policies.nothing_saveable)
     x, (kv, dec_io) = jax.lax.scan(body_fn, x, (params["dec_layers"],
                                                 oget(overlay, "dec_layers")))
-    x = rmsnorm(x, params["dec_norm"], cfg.norm_eps)
-    logits = x @ params["embed"].T.astype(x.dtype)  # tied embeddings
+    x = rmsnorm(x, psel(params["dec_norm"], oget(overlay, "dec_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["embed"],            # tied embeddings
+                            bank=oget(overlay, "embed"), vidx=vidx)
     logits = lc(logits, "act_batch", "act_seq", "act_vocab")
     aux = {"moe_aux": jnp.float32(0), "enc_out": enc_out}
     if collect_kv:
@@ -226,7 +241,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     rep = lambda tree: jax.tree.map(
         lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), tree)
     return {
-        "pos": jnp.int32(0),
+        "pos": jnp.zeros((batch,), jnp.int32),
         "self": rep(A.make_kv_cache(batch, max_len, cfg.num_kv_heads,
                                     cfg.head_dim, dtype)),
         "cross_k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_frames,
@@ -243,15 +258,17 @@ def cache_pspecs(cfg, long_context: bool = False,
     d_ax = None if kv_seq_shard else "act_hd"
     kv = {"k": (None, "act_batch", seq_ax, h_ax, d_ax),
           "v": (None, "act_batch", seq_ax, h_ax, d_ax),
-          "slot_pos": (None, seq_ax)}
+          "slot_pos": (None, "act_batch", seq_ax)}
     cross = (None, "act_batch", None, h_ax, d_ax)
-    return {"pos": (), "self": kv, "cross_k": cross, "cross_v": cross}
+    return {"pos": ("act_batch",), "self": kv,
+            "cross_k": cross, "cross_v": cross}
 
 
 def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
-            overlay=None):
+            overlay=None, variant_idx=None):
+    vidx = variant_idx
     logits, aux = forward(params, batch, cfg, collect_kv=True,
-                          overlay=overlay)
+                          overlay=overlay, variant_idx=vidx)
     b, s = batch["tokens"].shape
     cache = init_cache(cfg, b, max_len, cache_dtype)
     k_all, v_all = aux["kv"]
@@ -262,52 +279,60 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
     def cross_kv(lp, ovl):
         t = enc_out.shape[1]
         ov_x = oget(ovl, "cross_attn")
-        k = linear(enc_out, lp["cross_attn"]["wk"], oget(ov_x, "wk")
+        k = linear(enc_out, lp["cross_attn"]["wk"], oget(ov_x, "wk"), vidx
                    ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
-        v = linear(enc_out, lp["cross_attn"]["wv"], oget(ov_x, "wv")
+        v = linear(enc_out, lp["cross_attn"]["wv"], oget(ov_x, "wv"), vidx
                    ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
         return k.astype(cache_dtype), v.astype(cache_dtype)
 
     ck, cv = jax.vmap(cross_kv)(params["dec_layers"],
                                 oget(overlay, "dec_layers"))
     cache["cross_k"], cache["cross_v"] = ck, cv
-    cache["pos"] = jnp.int32(s)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
     return logits[:, -1, :], cache
 
 
-def decode_step(params, token, cache, cfg, overlay=None):
-    pos = cache["pos"]
+def decode_step(params, token, cache, cfg, overlay=None, variant_idx=None):
+    vidx = variant_idx
+    pos = cache["pos"]                      # (B,) per-lane positions
     b = token.shape[0]
-    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     pos_table = sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
-    x = x + jnp.take(pos_table, pos[None], axis=0).astype(x.dtype)
+    x = x + jnp.take(pos_table, pos, axis=0)[:, None, :].astype(x.dtype)
     frame_pos = jnp.arange(cfg.encoder_frames, dtype=jnp.int32)
 
     def body(h, xs):
         lp, ovl, sc, ck, cv = xs
         ov_s = oget(ovl, "self_attn")
         ov_x = oget(ovl, "cross_attn")
-        hs = rmsnorm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s)
+        hs = rmsnorm(h, psel(lp["ln1"], oget(ovl, "ln1"), vidx),
+                     cfg.norm_eps)
+        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s, vidx=vidx)
         sc_new = A.cache_insert(sc, k, v, pos)
         o = A.decode_attention(q, sc_new["k"], sc_new["v"],
                                sc_new["slot_pos"], pos)
         h = h + linear(o.reshape(b, 1, cfg.q_dim), lp["self_attn"]["wo"],
-                       oget(ov_s, "wo"))
-        hx = rmsnorm(h, lp["ln_x"], cfg.norm_eps)
-        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq")
+                       oget(ov_s, "wo"), vidx)
+        hx = rmsnorm(h, psel(lp["ln_x"], oget(ovl, "ln_x"), vidx),
+                     cfg.norm_eps)
+        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq"), vidx
                     ).reshape(b, 1, cfg.num_heads, cfg.head_dim)
         ox = A.decode_attention(qx, ck, cv, frame_pos, pos + cfg.encoder_frames)
         h = h + linear(ox.reshape(b, 1, cfg.q_dim), lp["cross_attn"]["wo"],
-                       oget(ov_x, "wo"))
-        h = h + mlp2_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
-                           ov=oget(ovl, "mlp"))
+                       oget(ov_x, "wo"), vidx)
+        h = h + mlp2_apply(lp["mlp"],
+                           rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"),
+                                           vidx), cfg.norm_eps),
+                           ov=oget(ovl, "mlp"), vidx=vidx)
         return h, sc_new
 
     x, self_new = jax.lax.scan(
         body, x, (params["dec_layers"], oget(overlay, "dec_layers"),
                   cache["self"], cache["cross_k"], cache["cross_v"]))
-    x = rmsnorm(x, params["dec_norm"], cfg.norm_eps)
-    logits = x @ params["embed"].T.astype(x.dtype)
+    x = rmsnorm(x, psel(params["dec_norm"], oget(overlay, "dec_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["embed"],
+                            bank=oget(overlay, "embed"), vidx=vidx)
     new_cache = dict(cache, pos=pos + 1, **{"self": self_new})
     return logits[:, 0, :], new_cache

@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from repro.distributed.sharding import logical_constraint as lc
 from repro.models import ssm
 from repro.models.delta_overlay import oget
-from repro.models.layers import (embed_init, embed_lookup, linear, rmsnorm,
-                                 rmsnorm_init)
+from repro.models.layers import (embed_init, embed_lookup, linear, psel,
+                                 rmsnorm, rmsnorm_init, unembed_logits)
 from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
 
 
@@ -29,21 +29,31 @@ from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
 # ---------------------------------------------------------------------------
 
 def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x (B,S,C), w (K,C) depthwise; left-padded causal."""
-    k = w.shape[0]
+    """x (B,S,C), w (K,C) depthwise; left-padded causal.  w may also be
+    (B,K,C) — per-row banked conv weights (mixed-variant batches)."""
+    k = w.shape[-2]
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     s = x.shape[1]
-    y = sum(xp[:, j:j + s] * w[j][None, None, :].astype(x.dtype)
-            for j in range(k))
+    if w.ndim == 2:
+        y = sum(xp[:, j:j + s] * w[j][None, None, :].astype(x.dtype)
+                for j in range(k))
+    else:
+        y = sum(xp[:, j:j + s] * w[:, j][:, None, :].astype(x.dtype)
+                for j in range(k))
     return y
 
 
 def conv_step(window: jax.Array, x_new: jax.Array, w: jax.Array
               ) -> tuple[jax.Array, jax.Array]:
-    """window (B,K-1,C) past inputs; returns (new window, conv output (B,C))."""
-    k = w.shape[0]
+    """window (B,K-1,C) past inputs; returns (new window, conv output (B,C)).
+    w (K,C) shared or (B,K,C) per row (banked)."""
+    k = w.shape[-2]
     full = jnp.concatenate([window, x_new[:, None, :]], axis=1)  # (B,K,C)
-    y = jnp.einsum("bkc,kc->bc", full, w.astype(x_new.dtype))
+    wf = w.astype(x_new.dtype)
+    if w.ndim == 2:
+        y = jnp.einsum("bkc,kc->bc", full, wf)
+    else:
+        y = jnp.einsum("bkc,bkc->bc", full, wf)
     return full[:, 1:], y
 
 
@@ -83,31 +93,46 @@ def mlstm_block_state(cfg, batch: int) -> dict:
             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.float32)}
 
 
-def _mlstm_pre(p, x, cfg, ov=None):
+def _mlstm_pre(p, x, cfg, ov=None, vidx=None):
     """Shared projection work for both seq and step paths (pre-conv)."""
     hcount, hd = _mlstm_heads(cfg)
-    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    xm = linear(xi, p["w_up"], oget(ov, "w_up"))
-    z = linear(xi, p["w_gate"], oget(ov, "w_gate"))
+    xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
+    xm = linear(xi, p["w_up"], oget(ov, "w_up"), vidx)
+    z = linear(xi, p["w_gate"], oget(ov, "w_gate"), vidx)
     return xm, z
 
 
-def mlstm_block_apply(p, x, cfg, state: dict, ov=None):
+def _conv_w(p, key, ov, vidx):
+    """Conv weight, per-row (B,K,C) when banked."""
+    return psel(p[key], oget(ov, key), vidx, lead=0)
+
+
+def _out_norm_scale(p, ov, vidx, b, hcount, hd):
+    on = oget(ov, "out_norm")
+    if on is None or vidx is None:
+        return p["out_norm"].reshape(hcount, hd)
+    return jnp.take(on, vidx, axis=0).reshape(b, 1, hcount, hd)
+
+
+def mlstm_block_apply(p, x, cfg, state: dict, ov=None, vidx=None):
     """Sequence path: x (B,S,D) -> (y, new state)."""
     b, s, d = x.shape
     hcount, hd = _mlstm_heads(cfg)
-    xm, z = _mlstm_pre(p, x, cfg, ov=ov)
-    xc = jax.nn.silu(causal_conv(xm, p["conv"]))
+    xm, z = _mlstm_pre(p, x, cfg, ov=ov, vidx=vidx)
+    xc = jax.nn.silu(causal_conv(xm, _conv_w(p, "conv", ov, vidx)))
     xc = lc(xc, "act_batch", "act_seq", "act_ssm")
-    q = linear(xc, p["wq"], oget(ov, "wq")).reshape(b, s, hcount, hd)
-    k = linear(xc, p["wk"], oget(ov, "wk")).reshape(b, s, hcount, hd) * hd ** -0.5
-    v = linear(xm, p["wv"], oget(ov, "wv")).reshape(b, s, hcount, hd)
-    gates = linear(xc, p["w_if"], oget(ov, "w_if")) + p["b_if"].astype(x.dtype)
+    q = linear(xc, p["wq"], oget(ov, "wq"), vidx).reshape(b, s, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk"), vidx
+               ).reshape(b, s, hcount, hd) * hd ** -0.5
+    v = linear(xm, p["wv"], oget(ov, "wv"), vidx).reshape(b, s, hcount, hd)
+    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
+             + psel(p["b_if"], oget(ov, "b_if"), vidx).astype(x.dtype))
     ig, fg = jnp.split(gates, 2, axis=-1)              # (B,S,H)
     h_seq, cell = ssm.mlstm_chunkwise(q, k, v, ig, fg, state=state["cell"])
-    h_seq = rmsnorm(h_seq, p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
+    h_seq = rmsnorm(h_seq, _out_norm_scale(p, ov, vidx, b, hcount, hd),
+                    cfg.norm_eps)
     y = linear(h_seq.reshape(b, s, 2 * d) * jax.nn.silu(z), p["w_down"],
-               oget(ov, "w_down"))
+               oget(ov, "w_down"), vidx)
     # conv window for decode continuation
     di = 2 * d
     tail = jnp.concatenate(
@@ -115,24 +140,26 @@ def mlstm_block_apply(p, x, cfg, state: dict, ov=None):
     return x + y, {"cell": cell, "conv": tail.astype(jnp.float32)}
 
 
-def mlstm_block_step(p, x, cfg, state: dict, ov=None):
+def mlstm_block_step(p, x, cfg, state: dict, ov=None, vidx=None):
     """Decode path: x (B,1,D)."""
     b, _, d = x.shape
     hcount, hd = _mlstm_heads(cfg)
-    xm, z = _mlstm_pre(p, x, cfg, ov=ov)
-    conv_win, xc1 = conv_step(state["conv"].astype(xm.dtype), xm[:, 0], p["conv"])
+    xm, z = _mlstm_pre(p, x, cfg, ov=ov, vidx=vidx)
+    conv_win, xc1 = conv_step(state["conv"].astype(xm.dtype), xm[:, 0],
+                              _conv_w(p, "conv", ov, vidx))
     xc = jax.nn.silu(xc1)[:, None, :]
-    q = linear(xc, p["wq"], oget(ov, "wq")).reshape(b, hcount, hd)
-    k = linear(xc, p["wk"], oget(ov, "wk")).reshape(b, hcount, hd) * hd ** -0.5
-    v = linear(xm, p["wv"], oget(ov, "wv")).reshape(b, hcount, hd)
-    gates = (linear(xc, p["w_if"], oget(ov, "w_if"))
-             + p["b_if"].astype(x.dtype))[:, 0]
+    q = linear(xc, p["wq"], oget(ov, "wq"), vidx).reshape(b, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk"), vidx
+               ).reshape(b, hcount, hd) * hd ** -0.5
+    v = linear(xm, p["wv"], oget(ov, "wv"), vidx).reshape(b, hcount, hd)
+    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
+             + psel(p["b_if"], oget(ov, "b_if"), vidx).astype(x.dtype))[:, 0]
     ig, fg = jnp.split(gates, 2, axis=-1)
     cell, h_t = ssm.mlstm_step(state["cell"], q, k, v, ig, fg)
     h_t = rmsnorm(h_t[:, None].reshape(b, 1, hcount, hd),
-                  p["out_norm"].reshape(hcount, hd), cfg.norm_eps)
+                  _out_norm_scale(p, ov, vidx, b, hcount, hd), cfg.norm_eps)
     y = linear(h_t.reshape(b, 1, 2 * d) * jax.nn.silu(z), p["w_down"],
-               oget(ov, "w_down"))
+               oget(ov, "w_down"), vidx)
     return x + y, {"cell": cell, "conv": conv_win.astype(jnp.float32)}
 
 
@@ -168,50 +195,60 @@ def slstm_block_state(cfg, batch: int) -> dict:
             "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_model), jnp.float32)}
 
 
-def _slstm_gate_pre(p, xi, xc, cfg, ov=None):
+def _slstm_gate_pre(p, xi, xc, cfg, ov=None, vidx=None):
     b = xi.shape[0]
     s = xi.shape[1]
     h = cfg.num_heads
     hd = cfg.d_model // h
-    zo = linear(xi, p["w_zi"], oget(ov, "w_zi"))
-    if_ = linear(xc, p["w_if"], oget(ov, "w_if"))
+    zo = linear(xi, p["w_zi"], oget(ov, "w_zi"), vidx)
+    if_ = linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
     zx, ox = jnp.split(zo, 2, axis=-1)
     ix, fx = jnp.split(if_, 2, axis=-1)
     rs = lambda t: t.reshape(b, s, h, hd)
     return rs(zx), rs(ix), rs(fx), rs(ox)
 
 
-def _slstm_post(p, h_seq, x, cfg, ov=None):
+def _slstm_rec(p, ov, vidx):
+    """Recurrent weights r_z/r_i/r_f/r_o — per-row (B,H,hd,hd) banked."""
+    return tuple(psel(p[k], oget(ov, k), vidx, lead=0)
+                 for k in ("r_z", "r_i", "r_f", "r_o"))
+
+
+def _slstm_post(p, h_seq, x, cfg, ov=None, vidx=None):
     b, s = x.shape[:2]
     d = cfg.d_model
-    hn = rmsnorm(h_seq.reshape(b, s, d), p["out_norm"], cfg.norm_eps)
-    ff = linear(hn, p["w_ff1"], oget(ov, "w_ff1"))
+    hn = rmsnorm(h_seq.reshape(b, s, d),
+                 psel(p["out_norm"], oget(ov, "out_norm"), vidx),
+                 cfg.norm_eps)
+    ff = linear(hn, p["w_ff1"], oget(ov, "w_ff1"), vidx)
     gate, up = jnp.split(ff, 2, axis=-1)
-    y = linear(jax.nn.silu(gate) * up, p["w_ff2"], oget(ov, "w_ff2"))
+    y = linear(jax.nn.silu(gate) * up, p["w_ff2"], oget(ov, "w_ff2"), vidx)
     return x + y
 
 
-def slstm_block_apply(p, x, cfg, state: dict, ov=None):
-    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    xc = jax.nn.silu(causal_conv(xi, p["conv"]))
-    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov)
-    h_seq, cell = ssm.slstm_scan(*pre, p["r_z"], p["r_i"], p["r_f"], p["r_o"],
+def slstm_block_apply(p, x, cfg, state: dict, ov=None, vidx=None):
+    xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
+    xc = jax.nn.silu(causal_conv(xi, _conv_w(p, "conv", ov, vidx)))
+    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov, vidx=vidx)
+    h_seq, cell = ssm.slstm_scan(*pre, *_slstm_rec(p, ov, vidx),
                                  state=state["cell"])
     tail = jnp.concatenate(
         [state["conv"].astype(xi.dtype), xi], axis=1)[:, -(cfg.ssm_conv - 1):]
-    return (_slstm_post(p, h_seq, x, cfg, ov=ov),
+    return (_slstm_post(p, h_seq, x, cfg, ov=ov, vidx=vidx),
             {"cell": cell, "conv": tail.astype(jnp.float32)})
 
 
-def slstm_block_step(p, x, cfg, state: dict, ov=None):
-    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    conv_win, xc1 = conv_step(state["conv"].astype(xi.dtype), xi[:, 0], p["conv"])
+def slstm_block_step(p, x, cfg, state: dict, ov=None, vidx=None):
+    xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
+    conv_win, xc1 = conv_step(state["conv"].astype(xi.dtype), xi[:, 0],
+                              _conv_w(p, "conv", ov, vidx))
     xc = jax.nn.silu(xc1)[:, None, :]
-    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov)
+    pre = _slstm_gate_pre(p, xi, xc, cfg, ov=ov, vidx=vidx)
     cell, h_t = ssm.slstm_step(state["cell"], *(t[:, 0] for t in pre),
-                               p["r_z"], p["r_i"], p["r_f"], p["r_o"])
+                               *_slstm_rec(p, ov, vidx))
     h_t = h_t.astype(x.dtype)   # slstm_step computes fp32; keep carry dtype
-    return (_slstm_post(p, h_t[:, None].reshape(x.shape), x, cfg, ov=ov),
+    return (_slstm_post(p, h_t[:, None].reshape(x.shape), x, cfg, ov=ov,
+                        vidx=vidx),
             {"cell": cell, "conv": conv_win.astype(jnp.float32)})
 
 
@@ -245,7 +282,7 @@ def init_state(cfg, batch: int) -> dict:
     def rep(tree, n):
         return jax.tree.map(lambda a: jnp.broadcast_to(
             a, (n,) + a.shape).copy(), tree)
-    return {"pos": jnp.int32(0),
+    return {"pos": jnp.zeros((batch,), jnp.int32),
             "mlstm": rep(mlstm_block_state(cfg, batch), n_super * n_m),
             "slstm": rep(slstm_block_state(cfg, batch), n_super)}
 
@@ -259,10 +296,10 @@ def state_pspecs(cfg, long_context: bool = False):
     s_axes = {"cell": {k: (None, "act_batch", None, None) for k in
                        ("c", "n", "h", "m")},
               "conv": (None, "act_batch", None, "act_ssm")}
-    return {"pos": (), "mlstm": m_axes, "slstm": s_axes}
+    return {"pos": ("act_batch",), "mlstm": m_axes, "slstm": s_axes}
 
 
-def _run(params, x, cfg, state, step: bool, overlay=None):
+def _run(params, x, cfg, state, step: bool, overlay=None, vidx=None):
     """Shared super-block scan for sequence and decode paths."""
     n_super, n_m = _super_shape(cfg)
     m_params = jax.tree.map(
@@ -282,9 +319,9 @@ def _run(params, x, cfg, state, step: bool, overlay=None):
             pj = jax.tree.map(lambda a: a[j], mp)
             oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = m_apply(pj, h, cfg, sj, ov=oj)
+            h, sj_new = m_apply(pj, h, cfg, sj, ov=oj, vidx=vidx)
             new_ms.append(sj_new)
-        h, ss_new = s_apply(sp, h, cfg, ss, ov=so)
+        h, ss_new = s_apply(sp, h, cfg, ss, ov=so, vidx=vidx)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_ms), ss_new)
 
     body_fn = body
@@ -301,28 +338,40 @@ def _run(params, x, cfg, state, step: bool, overlay=None):
     return x, new_state
 
 
-def forward(params, batch, cfg, state: dict | None = None, overlay=None):
+def forward(params, batch, cfg, state: dict | None = None, overlay=None,
+            variant_idx=None):
+    vidx = variant_idx
     tokens = batch["tokens"]
-    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x = lc(x, "act_batch", "act_seq", "act_embed")
     if state is None:
         state = init_state(cfg, tokens.shape[0])
-    x, new_state = _run(params, x, cfg, state, step=False, overlay=overlay)
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["unembed"].T.astype(x.dtype)
+    x, new_state = _run(params, x, cfg, state, step=False, overlay=overlay,
+                        vidx=vidx)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["unembed"],
+                            bank=oget(overlay, "unembed"), vidx=vidx)
     logits = lc(logits, "act_batch", "act_seq", "act_vocab")
     return logits, {"moe_aux": jnp.float32(0), "state": new_state}
 
 
 def prefill(params, batch, cfg, max_len: int = 0, cache_dtype=None,
-            overlay=None):
-    logits, aux = forward(params, batch, cfg, overlay=overlay)
+            overlay=None, variant_idx=None):
+    logits, aux = forward(params, batch, cfg, overlay=overlay,
+                          variant_idx=variant_idx)
     return logits[:, -1, :], aux["state"]
 
 
-def decode_step(params, token, state, cfg, overlay=None):
-    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
-    x, new_state = _run(params, x, cfg, state, step=True, overlay=overlay)
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["unembed"].T.astype(x.dtype)
+def decode_step(params, token, state, cfg, overlay=None, variant_idx=None):
+    vidx = variant_idx
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
+    x, new_state = _run(params, x, cfg, state, step=True, overlay=overlay,
+                        vidx=vidx)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["unembed"],
+                            bank=oget(overlay, "unembed"), vidx=vidx)
     return logits[:, 0, :], new_state

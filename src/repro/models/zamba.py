@@ -20,7 +20,8 @@ from repro.models import attention as A
 from repro.models import ssm
 from repro.models.delta_overlay import oget
 from repro.models.layers import (embed_init, embed_lookup, linear,
-                                 mlp_apply, mlp_init, rmsnorm, rmsnorm_init)
+                                 mlp_apply, mlp_init, psel, rmsnorm,
+                                 rmsnorm_init, unembed_logits)
 from repro.models.param import dense_init, ones_init, stack_layers, zeros_init
 from repro.models.xlstm import causal_conv, conv_step
 
@@ -72,63 +73,74 @@ def mamba_block_state(cfg, batch: int) -> dict:
                                  jnp.float32)}
 
 
-def _mamba_proj(p, x, cfg, ov=None):
+def _hsel(p, key, ov, vidx):
+    """Banked per-row select for a non-broadcast param (SSD (H,) vectors,
+    (K,C) conv kernels): p[key], or bank[vidx] prepending a batch dim."""
+    return psel(p[key], oget(ov, key), vidx, lead=0)
+
+
+def _mamba_proj(p, x, cfg, ov=None, vidx=None):
     di, h, _, n = _dims(cfg)
-    xi = rmsnorm(x, p["ln"], cfg.norm_eps)
-    z = linear(xi, p["w_z"], oget(ov, "w_z"))
-    xc = linear(xi, p["w_xc"], oget(ov, "w_xc"))
-    bc = linear(xi, p["w_bc"], oget(ov, "w_bc"))
-    dt_raw = linear(xi, p["w_dt"], oget(ov, "w_dt"))
+    xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
+    z = linear(xi, p["w_z"], oget(ov, "w_z"), vidx)
+    xc = linear(xi, p["w_xc"], oget(ov, "w_xc"), vidx)
+    bc = linear(xi, p["w_bc"], oget(ov, "w_bc"), vidx)
+    dt_raw = linear(xi, p["w_dt"], oget(ov, "w_dt"), vidx)
     return z, xc, bc, dt_raw
 
 
-def _mamba_post(p, y, z, x, cfg, ov=None):
+def _mamba_post(p, y, z, x, cfg, ov=None, vidx=None):
     b, s, _ = x.shape
     di, h, pp, n = _dims(cfg)
     y = y.reshape(b, s, di) * jax.nn.silu(z)
-    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
-    return x + linear(y, p["w_out"], oget(ov, "w_out"))
+    y = rmsnorm(y, psel(p["gate_norm"], oget(ov, "gate_norm"), vidx),
+                cfg.norm_eps)
+    return x + linear(y, p["w_out"], oget(ov, "w_out"), vidx)
 
 
-def mamba_block_apply(p, x, cfg, state: dict, ov=None):
+def mamba_block_apply(p, x, cfg, state: dict, ov=None, vidx=None):
     b, s, d = x.shape
     di, h, pp, n = _dims(cfg)
-    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov)
-    xc = jax.nn.silu(causal_conv(xc_pre, p["conv_xc"]))
-    bc = jax.nn.silu(causal_conv(bc_pre, p["conv_bc"]))
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov, vidx=vidx)
+    xc = jax.nn.silu(causal_conv(xc_pre, _hsel(p, "conv_xc", ov, vidx)))
+    bc = jax.nn.silu(causal_conv(bc_pre, _hsel(p, "conv_bc", ov, vidx)))
     bm, cm = bc[..., :n], bc[..., n:]
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
-                         + p["dt_bias"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32)
+        + psel(p["dt_bias"], oget(ov, "dt_bias"), vidx).astype(jnp.float32))
     x_heads = lc(xc.reshape(b, s, h, pp), "act_batch", "act_seq", "act_ssm", None)
     y, ssm_state = ssm.mamba_chunkwise(
-        x_heads, bm, cm, dt, p["a_log"], p["d_skip"], state=state["ssm"])
+        x_heads, bm, cm, dt, _hsel(p, "a_log", ov, vidx),
+        _hsel(p, "d_skip", ov, vidx), state=state["ssm"])
     tail_xc = jnp.concatenate(
         [state["conv_xc"].astype(xc_pre.dtype), xc_pre],
         axis=1)[:, -(cfg.ssm_conv - 1):]
     tail_bc = jnp.concatenate(
         [state["conv_bc"].astype(bc_pre.dtype), bc_pre],
         axis=1)[:, -(cfg.ssm_conv - 1):]
-    return (_mamba_post(p, y, z, x, cfg, ov=ov),
+    return (_mamba_post(p, y, z, x, cfg, ov=ov, vidx=vidx),
             {"ssm": ssm_state, "conv_xc": tail_xc.astype(jnp.float32),
              "conv_bc": tail_bc.astype(jnp.float32)})
 
 
-def mamba_block_step(p, x, cfg, state: dict, ov=None):
+def mamba_block_step(p, x, cfg, state: dict, ov=None, vidx=None):
     b, _, d = x.shape
     di, h, pp, n = _dims(cfg)
-    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov)
+    z, xc_pre, bc_pre, dt_raw = _mamba_proj(p, x, cfg, ov=ov, vidx=vidx)
     win_xc, xc1 = conv_step(state["conv_xc"].astype(xc_pre.dtype),
-                            xc_pre[:, 0], p["conv_xc"])
+                            xc_pre[:, 0], _hsel(p, "conv_xc", ov, vidx))
     win_bc, bc1 = conv_step(state["conv_bc"].astype(bc_pre.dtype),
-                            bc_pre[:, 0], p["conv_bc"])
+                            bc_pre[:, 0], _hsel(p, "conv_bc", ov, vidx))
     xc = jax.nn.silu(xc1)
     bc = jax.nn.silu(bc1)
     bm, cm = bc[..., :n], bc[..., n:]
+    dtb = psel(p["dt_bias"], oget(ov, "dt_bias"), vidx, lead=0)
     dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
-                         + p["dt_bias"].astype(jnp.float32))
+                         + dtb.astype(jnp.float32))
     ssm_state, y = ssm.mamba_step(state["ssm"], xc.reshape(b, h, pp), bm, cm,
-                                  dt, p["a_log"], p["d_skip"])
-    return (_mamba_post(p, y[:, None], z, x, cfg, ov=ov),
+                                  dt, _hsel(p, "a_log", ov, vidx),
+                                  _hsel(p, "d_skip", ov, vidx))
+    return (_mamba_post(p, y[:, None], z, x, cfg, ov=ov, vidx=vidx),
             {"ssm": ssm_state, "conv_xc": win_xc.astype(jnp.float32),
              "conv_bc": win_bc.astype(jnp.float32)})
 
@@ -151,39 +163,45 @@ def shared_block_init(key, cfg) -> dict:
     }
 
 
-def _shared_qkv(p, h2, cfg, positions, ov=None):
+def _shared_qkv(p, h2, cfg, positions, ov=None, vidx=None):
     b, s, _ = h2.shape
-    hi = rmsnorm(h2, p["ln1"], cfg.norm_eps)
-    q = linear(hi, p["wq"], oget(ov, "wq")).reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = linear(hi, p["wk"], oget(ov, "wk")).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = linear(hi, p["wv"], oget(ov, "wv")).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    hi = rmsnorm(h2, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    q = linear(hi, p["wq"], oget(ov, "wq"), vidx).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(hi, p["wk"], oget(ov, "wk"), vidx).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(hi, p["wv"], oget(ov, "wv"), vidx).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     from repro.models.layers import apply_rope
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
-def shared_block_apply(p, x, x0, cfg, positions, ov=None):
+def shared_block_apply(p, x, x0, cfg, positions, ov=None, vidx=None):
     h2 = jnp.concatenate([x, x0], axis=-1)
-    q, k, v = _shared_qkv(p, h2, cfg, positions, ov=ov)
+    q, k, v = _shared_qkv(p, h2, cfg, positions, ov=ov, vidx=vidx)
     o = A.flash_attention(q, k, v, causal=True)
     x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
-                   oget(ov, "wo"))
-    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
-                      ov=oget(ov, "mlp"))
+                   oget(ov, "wo"), vidx)
+    x = x + mlp_apply(p["mlp"],
+                      rmsnorm(x, psel(p["ln2"], oget(ov, "ln2"), vidx),
+                              cfg.norm_eps),
+                      ov=oget(ov, "mlp"), vidx=vidx)
     return x
 
 
-def shared_block_step(p, x, x0, cfg, cache: dict, pos, ov=None):
+def shared_block_step(p, x, x0, cfg, cache: dict, pos, ov=None, vidx=None):
+    """``pos`` is (B,) — per-lane decode positions."""
     h2 = jnp.concatenate([x, x0], axis=-1)
-    q, k, v = _shared_qkv(p, h2, cfg, pos[None], ov=ov)
+    q, k, v = _shared_qkv(p, h2, cfg, jnp.asarray(pos, jnp.int32)[:, None],
+                          ov=ov, vidx=vidx)
     new_cache = A.cache_insert(cache, k, v, pos)
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos)
     x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
-                   oget(ov, "wo"))
-    x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
-                      ov=oget(ov, "mlp"))
+                   oget(ov, "wo"), vidx)
+    x = x + mlp_apply(p["mlp"],
+                      rmsnorm(x, psel(p["ln2"], oget(ov, "ln2"), vidx),
+                              cfg.norm_eps),
+                      ov=oget(ov, "mlp"), vidx=vidx)
     return x, new_cache
 
 
@@ -218,7 +236,7 @@ def _rep(tree, n):
 
 def mamba_only_state(cfg, batch: int) -> dict:
     """Training-path state: SSD carries only, no KV caches allocated."""
-    return {"pos": jnp.int32(0),
+    return {"pos": jnp.zeros((batch,), jnp.int32),
             "mamba": _rep(mamba_block_state(cfg, batch), cfg.num_layers),
             "attn_kv": None}
 
@@ -234,13 +252,13 @@ def init_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
 def state_pspecs(cfg, long_context: bool = False):
     seq_ax = "act_seq" if long_context else None
     return {
-        "pos": (),
+        "pos": ("act_batch",),
         "mamba": {"ssm": (None, "act_batch", "act_ssm", None, None),
                   "conv_xc": (None, "act_batch", None, "act_ssm"),
                   "conv_bc": (None, "act_batch", None, None)},
         "attn_kv": {"k": (None, "act_batch", seq_ax, "act_kv", "act_hd"),
                     "v": (None, "act_batch", seq_ax, "act_kv", "act_hd"),
-                    "slot_pos": (None, seq_ax)},
+                    "slot_pos": (None, "act_batch", seq_ax)},
     }
 
 
@@ -252,10 +270,13 @@ def _split_mamba(tree, cfg):
     return main, rem
 
 
-def forward(params, batch, cfg, state: dict | None = None, overlay=None):
+def forward(params, batch, cfg, state: dict | None = None, overlay=None,
+            variant_idx=None):
+    vidx = variant_idx
     tokens = batch["tokens"]
     b, s = tokens.shape
-    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x = lc(x, "act_batch", "act_seq", "act_embed")
     x0 = x
     positions = jnp.arange(s)
@@ -275,9 +296,10 @@ def forward(params, batch, cfg, state: dict | None = None, overlay=None):
             pj = jax.tree.map(lambda a: a[j], mp)
             oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj, vidx=vidx)
             new_states.append(sj_new)
-        h = shared_block_apply(shared, h, x0, cfg, positions, ov=sh_ov)
+        h = shared_block_apply(shared, h, x0, cfg, positions, ov=sh_ov,
+                               vidx=vidx)
         return h, jax.tree.map(lambda *a: jnp.stack(a), *new_states)
 
     body_fn = body
@@ -291,11 +313,13 @@ def forward(params, batch, cfg, state: dict | None = None, overlay=None):
         pj = jax.tree.map(lambda a: a[j], r_params)
         oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj, vidx=vidx)
         r_new.append(sj_new)
 
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["unembed"].T.astype(x.dtype)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["unembed"],
+                            bank=oget(overlay, "unembed"), vidx=vidx)
     logits = lc(logits, "act_batch", "act_seq", "act_vocab")
     flat_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), m_new)
     if r_new:
@@ -308,12 +332,14 @@ def forward(params, batch, cfg, state: dict | None = None, overlay=None):
 
 
 def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
-            overlay=None):
+            overlay=None, variant_idx=None):
     """Single pass over the prompt: SSD states carried, shared-block K/V
     captured at every application point to fill the KV caches."""
+    vidx = variant_idx
     b, s = batch["tokens"].shape
     state0 = init_state(cfg, b, max_len, cache_dtype)
-    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x = lc(x, "act_batch", "act_seq", "act_embed")
     x0 = x
     positions = jnp.arange(s)
@@ -330,12 +356,13 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
             pj = jax.tree.map(lambda a: a[j], mp)
             oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj)
+            h, sj_new = mamba_block_apply(pj, h, cfg, sj, ov=oj, vidx=vidx)
             new_states.append(sj_new)
         h2 = jnp.concatenate([h, x0], axis=-1)
-        _, k, v = _shared_qkv(params["shared"], h2, cfg, positions, ov=sh_ov)
+        _, k, v = _shared_qkv(params["shared"], h2, cfg, positions, ov=sh_ov,
+                              vidx=vidx)
         h = shared_block_apply(params["shared"], h, x0, cfg, positions,
-                               ov=sh_ov)
+                               ov=sh_ov, vidx=vidx)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), k, v)
 
     x, (m_new, k_all, v_all) = jax.lax.scan(body, x,
@@ -345,11 +372,13 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
         pj = jax.tree.map(lambda a: a[j], r_params)
         oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj)
+        x, sj_new = mamba_block_apply(pj, x, cfg, sj, ov=oj, vidx=vidx)
         r_new.append(sj_new)
 
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["unembed"].T.astype(x.dtype)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["unembed"],
+                            bank=oget(overlay, "unembed"), vidx=vidx)
 
     kv = jax.vmap(lambda c, kk, vv: A.cache_insert(c, kk, vv, 0))(
         state0["attn_kv"], k_all, v_all)
@@ -358,14 +387,16 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
         r_stack = jax.tree.map(lambda *a: jnp.stack(a), *r_new)
         flat_m = jax.tree.map(lambda a, b2: jnp.concatenate([a, b2]),
                               flat_m, r_stack)
-    return logits[:, -1, :], {"pos": jnp.int32(s), "mamba": flat_m,
-                              "attn_kv": kv}
+    return logits[:, -1, :], {"pos": jnp.full((b,), s, jnp.int32),
+                              "mamba": flat_m, "attn_kv": kv}
 
 
-def decode_step(params, token, state, cfg, overlay=None):
-    pos = state["pos"]
+def decode_step(params, token, state, cfg, overlay=None, variant_idx=None):
+    vidx = variant_idx
+    pos = state["pos"]                      # (B,) per-lane positions
     b = token.shape[0]
-    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype)
+    x = embed_lookup(params["embed"], token[:, None], cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
     x0 = x
     m_params, r_params = _split_mamba(params["mamba"], cfg)
     m_ov, r_ov = _split_mamba(oget(overlay, "mamba"), cfg)
@@ -380,10 +411,10 @@ def decode_step(params, token, state, cfg, overlay=None):
             pj = jax.tree.map(lambda a: a[j], mp)
             oj = jax.tree.map(lambda a: a[j], mo)
             sj = jax.tree.map(lambda a: a[j], ms)
-            h, sj_new = mamba_block_step(pj, h, cfg, sj, ov=oj)
+            h, sj_new = mamba_block_step(pj, h, cfg, sj, ov=oj, vidx=vidx)
             new_states.append(sj_new)
         h, kv_new = shared_block_step(params["shared"], h, x0, cfg, kv, pos,
-                                      ov=sh_ov)
+                                      ov=sh_ov, vidx=vidx)
         return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_states), kv_new)
 
     x, (m_new, kv_new) = jax.lax.scan(body, x,
@@ -394,11 +425,13 @@ def decode_step(params, token, state, cfg, overlay=None):
         pj = jax.tree.map(lambda a: a[j], r_params)
         oj = jax.tree.map(lambda a: a[j], r_ov)
         sj = jax.tree.map(lambda a: a[j], r_state)
-        x, sj_new = mamba_block_step(pj, x, cfg, sj, ov=oj)
+        x, sj_new = mamba_block_step(pj, x, cfg, sj, ov=oj, vidx=vidx)
         r_new.append(sj_new)
 
-    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = x @ params["unembed"].T.astype(x.dtype)
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["unembed"],
+                            bank=oget(overlay, "unembed"), vidx=vidx)
     flat_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), m_new)
     if r_new:
         r_stack = jax.tree.map(lambda *a: jnp.stack(a), *r_new)

@@ -1,15 +1,25 @@
-"""Serving engine: batched prefill+decode over hot-swappable variants.
+"""Serving engine: slot-scheduled continuous batching over packed deltas.
 
-Request lifecycle: submit(prompt tokens, variant) → queued → engine groups
-pending requests BY VARIANT (one compiled prefill/decode pair serves every
-variant — same shapes, different params) → prefill fills a fixed-slot KV
-cache → decode steps run round-robin across variant groups → finished
-sequences retire and their slots are reused.
+Two schedulers (DESIGN.md §9):
 
-Variants resolve to (params, overlay): dense residents pass a materialised
-copy with overlay None; fused residents pass the shared base params plus a
-packed delta overlay that the model fuses into every GEMM on the fly
-(serving/variants.py — residency modes).
+* ``continuous`` (mixed-variant slot scheduler) — the engine keeps ONE
+  persistent decode batch of ``batch_size`` SLOTS.  Each slot carries its
+  own request, variant index (into the registry's OverlayBank — slot 0 =
+  base), decode position and token budget.  Every step: free slots admit
+  queued requests (prefill-on-admit, cache rows merged in), every active
+  slot appends its pending token (one host sync per step), exhausted slots
+  retire IMMEDIATELY and free their lane, and one jitted decode serves the
+  whole heterogeneous batch through the banked fused delta GEMMs.  Requires
+  fused (packed-overlay) residency for every variant.
+
+* ``group`` (compatibility mode, dense residency path) — pending requests
+  are grouped BY VARIANT (FIFO head decides), one prefill/decode pair per
+  overlay structure; a group decodes to the max budget in the group.
+
+Variants resolve to (params, overlay) in group mode: dense residents pass a
+materialised copy with overlay None; fused residents pass the shared base
+params plus a packed delta overlay fused into every GEMM on the fly
+(serving/variants.py — residency modes and the OverlayBank).
 
 Fault tolerance: a variant whose artifact fails to load has its requests
 re-queued up to ``max_retries`` then failed individually — the engine and
@@ -42,20 +52,35 @@ class Request:
     error: Optional[str] = None
 
 
+@dataclasses.dataclass
+class _Slot:
+    """One lane of the persistent continuous-batching decode batch."""
+    request: Request
+    variant_slot: int             # bank slot index (0 = base)
+    remaining: int                # tokens still owed
+
+
 class ServingEngine:
     """Fixed-shape batched serving: batch slots of ``batch_size``, prompts
-    padded to ``prompt_len``, KV capacity ``max_len``."""
+    padded to ``prompt_len``, KV capacity ``max_len``.
+
+    scheduler: "continuous" (mixed-variant slot scheduler over the overlay
+    bank) or "group" (grouped-by-variant compatibility mode — required for
+    dense residency)."""
 
     def __init__(self, model: Model, registry: VariantRegistry, *,
                  batch_size: int = 4, prompt_len: int = 32,
                  max_len: int = 128, max_retries: int = 1,
-                 greedy: bool = True):
+                 greedy: bool = True, scheduler: str = "group"):
+        if scheduler not in ("group", "continuous"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.model = model
         self.registry = registry
         self.batch_size = batch_size
         self.prompt_len = prompt_len
         self.max_len = max_len
         self.max_retries = max_retries
+        self.scheduler = scheduler
         self._queue: collections.deque[Request] = collections.deque()
         self._done: dict[int, Request] = {}
         self._next_rid = 0
@@ -71,10 +96,34 @@ class ServingEngine:
                                               overlay=overlay)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+        # banked pair: ONE compiled prefill/decode serves every mix of
+        # resident variants — the bank tree and per-row variant_idx are
+        # plain jit arguments, so admissions/evictions never recompile
+        def prefill_banked_fn(params, bank, vidx, batch):
+            return model.prefill(params, batch, max_len, overlay=bank,
+                                 variant_idx=vidx)
+
+        def decode_banked_fn(params, bank, vidx, token, cache):
+            logits, cache = model.decode_step(params, token, cache,
+                                              overlay=bank,
+                                              variant_idx=vidx)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
+        self._prefill_banked = jax.jit(prefill_banked_fn)
+        self._decode_banked = jax.jit(decode_banked_fn)
+        # continuous-scheduler state (persists across run_until_drained
+        # calls: the decode batch is a long-lived object)
+        self._slots: list[Optional[_Slot]] = [None] * batch_size
+        self._cache = None
+        self._next_tok = None
+        self._variant_idx = np.zeros(batch_size, np.int32)
+        self._variant_idx_dev = None     # device copy, rebuilt on change
+        self._merge_jit = None           # built on first admission merge
         self.metrics = {"batches": 0, "tokens_generated": 0,
-                        "prefills": 0, "failed": 0,
+                        "prefills": 0, "failed": 0, "admitted": 0,
+                        "retired": 0, "decode_steps": 0,
                         "prefill_seconds": 0.0, "decode_seconds": 0.0}
 
     # -- API -----------------------------------------------------------------
@@ -90,10 +139,28 @@ class ServingEngine:
     def result(self, rid: int) -> Request:
         return self._done[rid]
 
+    def status(self, rid: int) -> str:
+        """queued | running | done | failed | unknown — never raises."""
+        if rid in self._done:
+            return self._done[rid].status
+        for s in self._slots:
+            if s is not None and s.request.rid == rid:
+                return "running"
+        for r in self._queue:
+            if r.rid == rid:
+                return "queued"
+        return "unknown"
+
     def pending(self) -> int:
         return len(self._queue)
 
+    def active(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
     def run_until_drained(self, max_rounds: int = 1000) -> dict:
+        if self.scheduler == "continuous":
+            self._serve_continuous(max_rounds)
+            return self.metrics
         rounds = 0
         while self._queue and rounds < max_rounds:
             self._serve_one_group()
@@ -137,15 +204,8 @@ class ServingEngine:
                     self._queue.append(r)
             return
 
-        bs = self.batch_size
-        toks = np.zeros((bs, self.prompt_len), np.int32)
-        lengths = np.zeros(bs, np.int32)
-        for i, r in enumerate(group):
-            p = r.tokens[-self.prompt_len:]
-            toks[i, :len(p)] = p
-            lengths[i] = len(p)
-        batch = {"tokens": jnp.asarray(toks)}
-        batch.update(self._frontend_stub(bs))
+        batch = self._prompt_batch(
+            {i: r for i, r in enumerate(group)})
 
         t0 = time.perf_counter()
         last_logits, cache = self._prefill(params, overlay, batch)
@@ -157,15 +217,22 @@ class ServingEngine:
         n_steps = max(r.max_new_tokens for r in group)
         t0 = time.perf_counter()
         for step in range(n_steps):
-            # retired slots (past their own max_new_tokens) still occupy a
-            # batch lane but neither emit tokens nor count toward metrics
+            # ONE host sync per step: per-slot int(next_tok[i]) forces a
+            # device round-trip per slot per token — pull the whole token
+            # vector once and append from the host buffer
+            host_tok = np.asarray(next_tok)
             n_active = 0
             for i, r in enumerate(group):
+                # retired slots (past their own max_new_tokens) still
+                # occupy a batch lane but neither emit nor count
                 if step < r.max_new_tokens:
-                    r.out_tokens.append(int(next_tok[i]))
+                    r.out_tokens.append(int(host_tok[i]))
                     n_active += 1
-            next_tok, cache = self._decode(params, overlay, next_tok, cache)
             self.metrics["tokens_generated"] += n_active
+            if step + 1 >= n_steps:
+                break   # every slot has its full budget: skip the decode
+                        # whose output nobody would consume
+            next_tok, cache = self._decode(params, overlay, next_tok, cache)
         jax.block_until_ready(next_tok)
         self.metrics["decode_seconds"] += time.perf_counter() - t0
 
@@ -173,6 +240,175 @@ class ServingEngine:
             r.status = "done"
             self._done[r.rid] = r
         self.metrics["batches"] += 1
+
+    # -- continuous slot scheduler (mixed-variant batches) -------------------
+    def _merge_admitted(self, old, fresh, admit_rows: list):
+        """Merge freshly prefilled cache rows into the persistent batch
+        cache.  The batch axis of every cache leaf is located via the
+        model's cache_pspecs ("act_batch" logical axis) — per-row slot_pos
+        and pos make every leaf row-separable, so admission is a pure
+        select along that axis.  One jitted call per admission wave."""
+        if old is None:
+            return fresh
+        mask = np.zeros(self.batch_size, bool)
+        mask[admit_rows] = True
+        if self._merge_jit is None:
+            bs = self.batch_size
+            specs = jax.tree.leaves(self.model.cache_pspecs(),
+                                    is_leaf=lambda x: isinstance(x, tuple))
+
+            @jax.jit
+            def merge(old, fresh, mask):
+                old_leaves, treedef = jax.tree_util.tree_flatten(old)
+                fresh_leaves, _ = jax.tree_util.tree_flatten(fresh)
+                assert len(specs) == len(old_leaves) == len(fresh_leaves), \
+                    "cache_pspecs out of sync with the cache structure"
+                out = []
+                for o, f, sp in zip(old_leaves, fresh_leaves, specs):
+                    shape = [1] * o.ndim
+                    shape[sp.index("act_batch")] = bs
+                    out.append(jnp.where(mask.reshape(shape), f, o))
+                return jax.tree_util.tree_unflatten(treedef, out)
+
+            self._merge_jit = merge
+        return self._merge_jit(old, fresh, jnp.asarray(mask))
+
+    def _admit_free_slots(self) -> list:
+        """Pop queued requests into free lanes: resolve each variant to a
+        bank slot (loading + admitting the artifact on a miss) and pin it
+        for the request's lifetime.  Artifact failures re-queue up to
+        max_retries then fail; a fully-pinned bank re-queues the head and
+        waits for retirements."""
+        newly: list = []
+        free = [i for i in range(self.batch_size) if self._slots[i] is None]
+        while free and self._queue:
+            r = self._queue.popleft()
+            try:
+                vslot = self.registry.bank_resolve(r.variant)
+            except RuntimeError:
+                # every bank slot pinned by in-flight requests: transient
+                # capacity pressure — retry after retirements free pins
+                self._queue.appendleft(r)
+                break
+            except Exception as e:
+                r.retries += 1
+                if r.retries > self.max_retries:
+                    r.status, r.error = "failed", str(e)
+                    self._done[r.rid] = r
+                    self.metrics["failed"] += 1
+                else:
+                    self._queue.append(r)
+                continue
+            i = free.pop(0)
+            self.registry.bank_pin(r.variant)
+            self._slots[i] = _Slot(request=r, variant_slot=vslot,
+                                   remaining=r.max_new_tokens)
+            self._variant_idx[i] = vslot
+            self._variant_idx_dev = None
+            r.status = "running"
+            newly.append(i)
+            self.metrics["admitted"] += 1
+        return newly
+
+    def _prefill_admitted(self, newly: list) -> None:
+        """Prefill-on-admit: one fixed-shape (batch_size, prompt_len)
+        prefill per admission wave; only the newly admitted rows of the
+        resulting cache/logits are merged into the persistent batch."""
+        bs = self.batch_size
+        pvidx = np.zeros(bs, np.int32)
+        for i in newly:
+            pvidx[i] = self._slots[i].variant_slot
+        batch = self._prompt_batch(
+            {i: self._slots[i].request for i in newly})
+        bank = self.registry.bank.tree if self.registry.bank else None
+        t0 = time.perf_counter()
+        last_logits, fresh = self._prefill_banked(
+            self.registry.base_params, bank, jnp.asarray(pvidx), batch)
+        jax.block_until_ready(last_logits)
+        self.metrics["prefill_seconds"] += time.perf_counter() - t0
+        self.metrics["prefills"] += 1
+        first_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        if self._next_tok is None:
+            self._next_tok = first_tok
+            self._cache = fresh
+            return
+        mask = np.zeros(bs, bool)
+        mask[newly] = True
+        self._next_tok = jnp.where(jnp.asarray(mask), first_tok,
+                                   self._next_tok)
+        self._cache = self._merge_admitted(self._cache, fresh, newly)
+
+    def _serve_continuous(self, max_rounds: int) -> None:
+        # max_rounds bounds STALLED rounds (no admission, no token, no
+        # failure), not decode steps — productive rounds are already
+        # bounded by the submitted token budgets, so a large workload
+        # drains fully instead of stranding requests mid-flight
+        stalls = 0
+        while (self._queue or self.active()) and stalls < max_rounds:
+            failed0 = self.metrics["failed"]
+            newly = self._admit_free_slots()
+            if newly:
+                self._prefill_admitted(newly)
+            if not self.active():
+                if not self._queue:
+                    break
+                # admissions failed this round; retry (counts as a stall
+                # unless requests were failed — retries terminate)
+                stalls = 0 if self.metrics["failed"] > failed0 else stalls + 1
+                continue
+            stalls = 0
+            # ONE host sync per step: every active slot has exactly one
+            # pending token in next_tok — append from the host buffer
+            host_tok = np.asarray(self._next_tok)
+            retired = []
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                s.request.out_tokens.append(int(host_tok[i]))
+                s.remaining -= 1
+                self.metrics["tokens_generated"] += 1
+                if s.remaining <= 0:
+                    retired.append(i)
+            # retire exhausted slots IMMEDIATELY — their lanes are free for
+            # the next admission wave instead of padding to the batch max
+            for i in retired:
+                s = self._slots[i]
+                s.request.status = "done"
+                self._done[s.request.rid] = s.request
+                self.registry.bank_unpin(s.request.variant)
+                self._slots[i] = None
+                self._variant_idx[i] = 0
+                self._variant_idx_dev = None
+                self.metrics["retired"] += 1
+            if not (self.active() or self._queue):
+                break           # drained: skip the dangling decode
+            if not self.active():
+                continue        # lanes empty but queue pending: admit next
+            bank = self.registry.bank.tree if self.registry.bank else None
+            if self._variant_idx_dev is None:
+                self._variant_idx_dev = jnp.asarray(self._variant_idx)
+            t0 = time.perf_counter()
+            self._next_tok, self._cache = self._decode_banked(
+                self.registry.base_params, bank,
+                self._variant_idx_dev, self._next_tok, self._cache)
+            jax.block_until_ready(self._next_tok)
+            self.metrics["decode_seconds"] += time.perf_counter() - t0
+            self.metrics["decode_steps"] += 1
+        self.metrics["batches"] += 1
+
+    def _prompt_batch(self, requests: dict) -> dict:
+        """Fixed-shape (batch_size, prompt_len) prefill batch: row i holds
+        requests[i]'s prompt tail, zero-padded; unmapped rows stay zero.
+        The ONE place prompt padding happens — both schedulers must build
+        bit-identical batches or their tokens diverge."""
+        bs = self.batch_size
+        toks = np.zeros((bs, self.prompt_len), np.int32)
+        for i, r in requests.items():
+            p = r.tokens[-self.prompt_len:]
+            toks[i, :len(p)] = p
+        batch = {"tokens": jnp.asarray(toks)}
+        batch.update(self._frontend_stub(bs))
+        return batch
 
     def _frontend_stub(self, bs: int) -> dict:
         cfg = self.model.cfg

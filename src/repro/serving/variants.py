@@ -17,18 +17,211 @@ name a variant; the registry serves it under one of two residency modes
 ``resolve(name)`` returns ``(params, overlay)`` — overlay is None for the
 base and for dense residents.  Modes mix freely in one registry (default
 from the constructor, per-variant override at ``register``).
+
+For MIXED-VARIANT batches (the continuous-batching scheduler,
+serving/engine.py) the registry additionally maintains an
+:class:`OverlayBank`: fused residents stacked along a leading bank axis,
+slot 0 reserved for the base, with pin/unpin guarding in-flight variants
+and slot reuse on eviction.  ``bank_resolve(name)`` admits a variant and
+returns its slot index — the per-batch-row ``variant_idx`` the banked
+kernels consume (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
+import time
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import loader as L
 from repro.core import store as S
-from repro.core.calibration import DeltaModel
+from repro.core.calibration import DeltaModel, flatten_params
+from repro.models import delta_overlay as DO
+
+
+@functools.partial(jax.jit, static_argnames=("vec_dtype",))
+def _bank_write(flat: dict, deltas: dict, extras: dict, slot, *,
+                vec_dtype) -> dict:
+    """Write one variant into bank slot ``slot`` as a SINGLE compiled
+    update: canonicalise every DeltaEntry (fp16 axis vectors, zeroed
+    unselected axis), fp16-round every extras leaf, and scatter them at
+    the slot index.  One dispatch per admission instead of a few hundred
+    eager ``.at[].set`` calls — cold-admit latency is part of TTFT."""
+    out = dict(flat)
+    for path, e in deltas.items():
+        ent = DO.from_delta_entry(e, vec_dtype=vec_dtype)
+        bank = flat[path]
+        idx = (slice(None),) * DO.bank_axis(path) + (slot,)
+        out[path] = DO.OverlayEntry(
+            packed=bank.packed.at[idx].set(ent.packed),
+            v_row=bank.v_row.at[idx].set(ent.v_row.astype(bank.v_row.dtype)),
+            v_col=bank.v_col.at[idx].set(ent.v_col.astype(bank.v_col.dtype)))
+    for path, v in extras.items():
+        bank = flat[path]
+        idx = (slice(None),) * DO.bank_axis(path) + (slot,)
+        out[path] = bank.at[idx].set(
+            v.astype(jnp.float16).astype(bank.dtype))
+    return out
+
+
+class OverlayBank:
+    """Stacked fused residents: one banked overlay tree whose leaves carry a
+    leading bank axis of ``size`` slots (DESIGN.md §9).
+
+    * slot 0 is the BASE: zero delta vectors (Ŵ = W_b exactly) and base
+      extras — ``variant_idx == 0`` means "serve this row from the base";
+    * slots 1..size-1 hold fused variants (packed masks, fp16 axis vectors,
+      fp16-rounded extras), admitted/evicted with slot reuse;
+    * pinned variants (in-flight requests) are never evicted — ``evict``
+      raises and LRU pressure skips them.
+
+    The bank is allocated at full size on first admit; resident-byte
+    accounting is therefore per-bank, not per-variant — ``nbytes()`` is the
+    device footprint the registry reports.
+    """
+
+    def __init__(self, base_params, size: int, *, vec_dtype=jnp.float16):
+        if size < 2:
+            raise ValueError("bank needs >= 2 slots (base + 1 variant)")
+        self.size = size
+        self.vec_dtype = vec_dtype
+        self._base_flat = flatten_params(base_params)
+        self._flat: Optional[dict] = None   # path -> banked leaf
+        self.tree: Optional[dict] = None    # nested view of _flat
+        self._slots: dict[str, int] = {}
+        self._pins: dict[str, int] = {}
+        self._lru: "collections.OrderedDict[str, None]" = \
+            collections.OrderedDict()
+        self._free = list(range(size - 1, 0, -1))   # pop() -> lowest slot
+        self.stats = {"admits": 0, "evictions": 0}
+
+    # -- structure ---------------------------------------------------------
+    def _ensure_tree(self, dm: DeltaModel) -> None:
+        if self._flat is not None:
+            if set(dm.deltas) != self._template_deltas or \
+                    set(dm.extras) != self._template_extras:
+                raise ValueError(
+                    "variant structure differs from the bank template "
+                    "(all banked variants must share one calibration "
+                    "recipe)")
+            return
+        flat = {}
+        for path, e in dm.deltas.items():
+            ent = DO.from_delta_entry(e, vec_dtype=self.vec_dtype)
+            flat[path] = DO.bank_zeros(path, ent, self.size)
+        for path in dm.extras:
+            flat[path] = DO.bank_extra_base(path, self._base_flat[path],
+                                            self.size)
+        self._flat = flat
+        self._template_deltas = set(dm.deltas)
+        self._template_extras = set(dm.extras)
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        tree: dict = {}
+        for path, leaf in self._flat.items():
+            DO.insert_entry(tree, path, leaf)
+        self.tree = tree
+
+    # -- lifecycle ---------------------------------------------------------
+    def slot_of(self, name: str) -> int:
+        if name == "__base__":
+            return 0
+        return self._slots[name]
+
+    def resident(self) -> list:
+        return list(self._lru)
+
+    def has_capacity(self) -> bool:
+        """A new variant can be admitted: a free slot exists or some
+        resident is unpinned (evictable).  Lets callers refuse BEFORE
+        paying the artifact load."""
+        return bool(self._free) or any(self._pins.get(c, 0) == 0
+                                       for c in self._lru)
+
+    def admit(self, name: str, dm: DeltaModel) -> tuple[int, int]:
+        """Place ``dm`` into a slot (reusing evicted slots, evicting the
+        LRU unpinned resident when full).  Returns (slot, payload_bytes)."""
+        if name == "__base__":
+            return 0, 0
+        if name in self._slots:
+            self._lru.move_to_end(name)
+            return self._slots[name], 0
+        self._ensure_tree(dm)
+        if not self._free:
+            for cand in self._lru:
+                if self._pins.get(cand, 0) == 0:
+                    # slot is reassigned immediately: skip the device-side
+                    # clear (admit overwrites every leaf of the slot)
+                    self._release(cand, clear=False)
+                    break
+            else:
+                raise RuntimeError(
+                    "overlay bank full: every resident is pinned by an "
+                    "in-flight request")
+        slot = self._free.pop()
+        payload = sum(int(e.packed.size) + 2 * int(e.v_row.size)
+                      + 2 * int(e.v_col.size) for e in dm.deltas.values())
+        payload += sum(2 * int(v.size) for v in dm.extras.values())
+        self._flat = _bank_write(self._flat, dict(dm.deltas),
+                                 dict(dm.extras), jnp.int32(slot),
+                                 vec_dtype=self.vec_dtype)
+        self._slots[name] = slot
+        self._lru[name] = None
+        self.stats["admits"] += 1
+        self._rebuild()
+        return slot, payload
+
+    def pin(self, name: str) -> None:
+        if name != "__base__":
+            self._pins[name] = self._pins.get(name, 0) + 1
+
+    def unpin(self, name: str) -> None:
+        if name != "__base__" and name in self._pins:
+            self._pins[name] = max(0, self._pins[name] - 1)
+
+    def pinned(self, name: str) -> bool:
+        return self._pins.get(name, 0) > 0
+
+    def evict(self, name: str) -> None:
+        """Free a slot for reuse; refuses while the variant is pinned
+        (mid-flight requests reference its slot index)."""
+        if name not in self._slots:
+            return
+        if self.pinned(name):
+            raise RuntimeError(
+                f"variant {name!r} is pinned by in-flight requests; "
+                "retire them before evicting")
+        self._release(name, clear=True)
+
+    def _release(self, name: str, *, clear: bool) -> None:
+        """Drop a resident and recycle its slot.  ``clear=False`` skips
+        the device-side zeroing — correct when the slot is reassigned in
+        the same admit (every leaf overwritten), and it keeps the
+        eviction-under-pressure path off the eager per-leaf updates
+        ``_bank_write`` exists to avoid."""
+        slot = self._slots.pop(name)
+        self._lru.pop(name, None)
+        self._pins.pop(name, None)
+        if clear:
+            for path in self._template_deltas:
+                self._flat[path] = DO.bank_clear_entry(
+                    path, self._flat[path], slot)
+            for path in self._template_extras:
+                self._flat[path] = DO.bank_set_extra_base(
+                    path, self._flat[path], slot, self._base_flat[path])
+            self._rebuild()
+        self._free.append(slot)
+        self.stats["evictions"] += 1
+
+    def nbytes(self) -> int:
+        if self._flat is None:
+            return 0
+        return DO.overlay_nbytes(self._flat)
 
 
 @dataclasses.dataclass
@@ -41,7 +234,7 @@ class _Resident:
 class VariantRegistry:
     def __init__(self, base_params, *, param_shardings=None,
                  max_resident: int = 2, use_kernel: bool = True,
-                 mode: str = "dense"):
+                 mode: str = "dense", bank_size: int = 8):
         if mode not in ("dense", "fused"):
             raise ValueError(f"unknown residency mode {mode!r}")
         self.base_params = base_params
@@ -49,6 +242,9 @@ class VariantRegistry:
         self.use_kernel = use_kernel
         self.max_resident = max_resident
         self.mode = mode
+        self.bank_size = bank_size
+        self.bank: Optional[OverlayBank] = None   # created on first use
+        self._bank_evictions_seen = 0
         self._artifacts: dict[str, object] = {}   # name -> dir or DeltaModel
         self._modes: dict[str, str] = {}          # per-variant override
         self._resident: "collections.OrderedDict[str, _Resident]" = \
@@ -127,6 +323,51 @@ class VariantRegistry:
         params, _ = self.resolve(name)
         return params
 
+    # -- banked resolution (mixed-variant batches) -------------------------
+    def bank_resolve(self, name: str) -> int:
+        """Admit ``name`` into the overlay bank (created on demand) and
+        return its bank slot index — the per-row ``variant_idx`` value.
+        '__base__' is always slot 0.  Swap/residency stats migrate to the
+        bank: ``resident_bytes`` tracks the bank allocation (charged when
+        the bank grows, not per admitted variant)."""
+        if self.bank is None:
+            self.bank = OverlayBank(self.base_params, self.bank_size)
+        if name == "__base__":
+            return 0
+        if name in self.bank._slots:
+            self.stats["hits"] += 1
+            return self.bank.admit(name, None)[0]   # LRU touch, no payload
+        if name not in self._artifacts:
+            raise KeyError(f"unknown variant {name!r}")
+        if self.bank.tree is not None and not self.bank.has_capacity():
+            # refuse BEFORE the disk load: a fully-pinned bank would
+            # otherwise re-read + re-verify the artifact every scheduler
+            # step while waiting for a retirement to free a pin
+            raise RuntimeError(
+                "overlay bank full: every resident is pinned by an "
+                "in-flight request")
+        dm = self._load(name)
+        before = self.bank.nbytes()
+        t0 = time.perf_counter()
+        slot, payload = self.bank.admit(name, dm)
+        jax.block_until_ready(jax.tree.leaves(self.bank.tree)[0])
+        self.stats["swaps"] += 1
+        self.stats["swap_seconds"] += time.perf_counter() - t0
+        self.stats["transferred_bytes"] += payload
+        self.stats["resident_bytes"] += self.bank.nbytes() - before
+        self.stats["evictions"] += (self.bank.stats["evictions"]
+                                    - self._bank_evictions_seen)
+        self._bank_evictions_seen = self.bank.stats["evictions"]
+        return slot
+
+    def bank_pin(self, name: str) -> None:
+        if self.bank is not None:
+            self.bank.pin(name)
+
+    def bank_unpin(self, name: str) -> None:
+        if self.bank is not None:
+            self.bank.unpin(name)
+
     def resident(self) -> list:
         return list(self._resident)
 
@@ -147,7 +388,18 @@ class VariantRegistry:
             raise
 
     def evict(self, name: str) -> None:
+        # pin check FIRST: refusing a pinned (mid-flight) banked variant
+        # must not half-evict — the dense resident and stats stay intact
+        if self.bank is not None and self.bank.pinned(name):
+            raise RuntimeError(
+                f"variant {name!r} is pinned by in-flight requests; "
+                "retire them before evicting")
         r = self._resident.pop(name, None)
         if r is not None:
             self.stats["resident_bytes"] -= r.nbytes
             self.stats["evictions"] += 1
+        if self.bank is not None and name in self.bank._slots:
+            # bank bytes stay allocated — the slot is reusable, not freed
+            self.bank.evict(name)
+            self.stats["evictions"] += 1
+            self._bank_evictions_seen = self.bank.stats["evictions"]

@@ -71,6 +71,25 @@ def test_corruption_detected(pair, tmp_path):
         S.load_artifact(tmp_path / "v1")
 
 
+def test_manifest_persists_sizes_and_detects_truncation(pair, tmp_path):
+    """artifact_bytes + per-file sizes live in the on-disk manifest (store
+    v2), and load_artifact refuses a truncated payload file."""
+    import json
+    model, base, ft = pair
+    dm = C.compress(base, ft)
+    returned = S.save_artifact(dm, tmp_path / "v1")
+    on_disk = json.loads((tmp_path / "v1" / "manifest.json").read_text())
+    assert on_disk["version"] == S.STORE_VERSION
+    assert on_disk["artifact_bytes"] == returned["artifact_bytes"] > 0
+    assert set(on_disk["files"]) == {"deltas.npz", "extras.npz"}
+    # truncate the deltas payload: a partial copy must be caught before
+    # (or instead of) np.load misbehaving
+    f = tmp_path / "v1" / "deltas.npz"
+    f.write_bytes(f.read_bytes()[:-64])
+    with pytest.raises(IOError):
+        S.load_artifact(tmp_path / "v1")
+
+
 def test_loader_kernel_path_matches_reference(pair):
     model, base, ft = pair
     dm = C.compress(base, ft)
