@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   serving  multi-tenant hot-swap engine throughput
   fused    on-the-fly (packed-overlay) vs swap-then-dense serving
   continuous mixed-variant continuous batching vs grouped-by-variant
+  update_latency incremental publish_update + hot-swap vs full republish
   roofline dry-run roofline terms per (arch × shape × mesh)
 """
 from __future__ import annotations
@@ -52,7 +53,7 @@ def serving_bench() -> list:
 def main() -> None:
     from benchmarks import (axis_stats, continuous_batching, fused_serving,
                             kernel_bench, load_time, roofline,
-                            table1_quality, table2_sizes)
+                            table1_quality, table2_sizes, update_latency)
     rows = []
     rows += _section("table2", table2_sizes.run)      # cheap first
     rows += _section("kernel", kernel_bench.run)
@@ -62,6 +63,7 @@ def main() -> None:
     rows += _section("serving", serving_bench)
     rows += _section("fused", fused_serving.run)
     rows += _section("continuous_batching", continuous_batching.run)
+    rows += _section("update_latency", update_latency.run)
     rows += _section("roofline", roofline.run)
     print("name,us_per_call,derived")
     print("\n".join(rows))

@@ -1,0 +1,149 @@
+"""Incremental version update + hot-swap vs full republish (DESIGN.md §10).
+
+The paper's claim is cheap FREQUENT updates; this bench measures the
+version-to-version path that makes them frequent in practice:
+
+* artifact bytes — a ``publish_update`` patch (XOR'd packed sign planes +
+  zero-run-suppressed fp16 diffs) against a full publish of the same
+  weights.  Acceptance: patch < 0.35x full;
+* hot-swap latency — wall time from ``update()`` returning to the first
+  post-swap request drained, on a deployment whose variant is RESIDENT
+  (bank-admitted) at the old version;
+* parity — the patch-materialised version must be BIT-IDENTICAL in the
+  wire domain to a fresh full publish of the same weights, greedy tokens
+  served after the hot-swap must exactly equal a fresh deployment that
+  full-published them, and tokens after ``rollback`` must exactly equal
+  the pre-update serving;
+* rollback latency — a constant-time pointer move, no artifact IO.
+
+Uses random-init weights (not the trained tiny_pair): a barely-trained
+toy LM greedily collapses to one token, which would make token parity
+trivially true — random-init logits are diverse and weight-sensitive, so
+the update visibly CHANGES the served tokens and parity is a real check.
+The "incremental" fine-tune continues the first one: a fraction of the
+rows move (the BitDelta successive-fine-tune regime), so most packed
+bytes XOR to zero and most fp16 wire values are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+PROMPT = np.arange(1, 9)
+NEW_TOKENS = 12
+
+
+def _incremental_ft(ft, base, rows_frac: float = 0.125,
+                    scale: float = 2.0):
+    """Continue a fine-tune: the leading ``rows_frac`` rows of every
+    matrix move by ``scale`` of their existing delta; the rest is
+    untouched (sparse version-to-version residual)."""
+
+    def upd(l1, lb):
+        if l1.ndim < 2:
+            return l1
+        n = max(1, int(l1.shape[-2] * rows_frac))
+        return l1.at[..., :n, :].add(
+            scale * (l1[..., :n, :] - lb[..., :n, :]))
+
+    return jax.tree.map(upd, ft, base)
+
+
+def _deployment(model, base, root=None):
+    from repro.serving import Deployment
+    return Deployment(model, base, root_dir=root, batch_size=4,
+                      prompt_len=16, max_len=64, bank_size=4)
+
+
+def _serve(dep, variant: str) -> list:
+    rid = dep.submit(PROMPT, variant=variant, max_new_tokens=NEW_TOKENS)
+    dep.drain()
+    assert dep.result(rid).status == "done"
+    return dep.result(rid).out_tokens
+
+
+def _wire_exact(dm_a, dm_b) -> bool:
+    """Bit-equality of two DeltaModels in the wire domain (packed planes,
+    fp16 vectors/extras, selectors)."""
+    for k, ea in dm_a.deltas.items():
+        eb = dm_b.deltas[k]
+        if not (np.array_equal(np.asarray(ea.packed), np.asarray(eb.packed))
+                and np.array_equal(np.asarray(ea.v_row, np.float16),
+                                   np.asarray(eb.v_row, np.float16))
+                and np.array_equal(np.asarray(ea.v_col, np.float16),
+                                   np.asarray(eb.v_col, np.float16))
+                and np.array_equal(np.asarray(ea.use_row),
+                                   np.asarray(eb.use_row))):
+            return False
+    return all(np.array_equal(np.asarray(va, np.float16),
+                              np.asarray(dm_b.extras[k], np.float16))
+               for k, va in dm_a.extras.items())
+
+
+def run() -> list:
+    from benchmarks.common import row
+    from repro.configs import get_config
+    from repro.core import calibration as C
+    from repro.models import build_model
+    from repro.models.param import split
+
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft = jax.tree.map(lambda b, p: b + 0.05 * p, base, pert)
+    dm1 = C.compress(base, ft)
+    ft2 = _incremental_ft(ft, base)
+    dm2 = C.compress(base, ft2)
+
+    tmp = pathlib.Path(tempfile.mkdtemp())
+    dep = _deployment(model, base, tmp / "store")
+    v1 = dep.publish("prod", dm1)
+    tokens_v1 = _serve(dep, "prod")      # warm: compiled paths + resident
+
+    # -- incremental publish + hot-swap of the resident variant ------------
+    t0 = time.perf_counter()
+    v2 = dep.update("prod", dm2)
+    publish_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tokens_v2 = _serve(dep, "prod")
+    swap_serve_s = time.perf_counter() - t0
+
+    full_bytes = dep.store.artifact_bytes("prod", v1)
+    patch_bytes = dep.store.artifact_bytes("prod", v2)
+    ratio = patch_bytes / full_bytes
+    out = [row("update_latency/bytes", publish_s * 1e6,
+               f"full={full_bytes};patch={patch_bytes};ratio={ratio:.3f};"
+               f"pass_bytes_lt_0_35={ratio < 0.35}")]
+
+    # -- parity vs a fresh full publish of the same new weights ------------
+    fresh = _deployment(model, base)
+    fresh.publish("prod", dm2)
+    parity = _wire_exact(dep.store.load("prod", v2), dm2) and \
+        tokens_v2 == _serve(fresh, "prod")
+    out.append(row("update_latency/hot_swap", swap_serve_s * 1e6,
+                   f"publish_s={publish_s:.3f};"
+                   f"first_drain_s={swap_serve_s:.3f};"
+                   f"token_parity={parity};"
+                   f"update_changed_tokens={tokens_v2 != tokens_v1}"))
+
+    # -- rollback: constant-time pointer move, exact old tokens ------------
+    t0 = time.perf_counter()
+    v_back = dep.rollback("prod")
+    rollback_s = time.perf_counter() - t0
+    rb_parity = _serve(dep, "prod") == tokens_v1
+    out.append(row("update_latency/rollback", rollback_s * 1e6,
+                   f"to_version={v_back};rollback_s={rollback_s:.5f};"
+                   f"rollback_parity={rb_parity}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

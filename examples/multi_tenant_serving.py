@@ -1,5 +1,7 @@
 """End-to-end driver: serve a small model with batched requests across
-multiple hot-swapped fine-tuned variants (the paper's deployment story).
+multiple fine-tuned variants through the versioned lifecycle control
+plane — publish, serve, incremental update + hot-swap, rollback
+(the paper's frequent-model-updates deployment story).
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -12,10 +14,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import calibration as C
-from repro.core import store as S
 from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
-from repro.serving import ServingEngine, VariantRegistry
+from repro.serving import Deployment
 from repro.train.step import init_train_state, make_train_step
 
 
@@ -32,47 +33,71 @@ def main():
         state, _ = step(state, src.lm_batch(i, 4, 32))
     base = state.params
 
+    # one deployment = store + registry + engine behind publish/update/
+    # rollback/submit/drain/status; tenants stay resident as PACKED
+    # overlays (mode="fused" — on-the-fly delta GEMMs, ~1/16 the HBM of a
+    # dense copy per tenant, so all three fit where one dense copy would)
     tmp = pathlib.Path(tempfile.mkdtemp())
-    fp = S.base_fingerprint(base)
-    variants = {}
+    dep = Deployment(model, base, root_dir=tmp / "variants", mode="fused",
+                     scheduler="continuous", batch_size=4, prompt_len=16,
+                     max_len=64, bank_size=6)
+
+    states = {}
     for name, seed in [("code", 11), ("chat", 22), ("math", 33)]:
         st = dataclasses.replace(state, params=base)
         ft_src = SyntheticLM(cfg.vocab_size, seed=seed)
         for i in range(10):
             st, _ = step(st, ft_src.lm_batch(i, 4, 32))
-        dm = C.compress(base, st.params)
-        S.save_artifact(dm, tmp / name, base_fp=fp)
-        variants[name] = tmp / name
-        print(f"variant {name!r}: artifact "
-              f"{sum(f.stat().st_size for f in (tmp/name).iterdir())/1e6:.2f} MB")
-
-    # serving: one resident base, three tenants kept resident as PACKED
-    # overlays (mode="fused" — on-the-fly delta GEMMs, ~1/16 the HBM of a
-    # dense copy per tenant, so all three fit where one dense copy would)
-    reg = VariantRegistry(base, max_resident=8, mode="fused")
-    for name, path in variants.items():
-        reg.register(name, path)
-    eng = ServingEngine(model, reg, batch_size=4, prompt_len=16, max_len=64)
+        states[name] = st
+        v = dep.publish(name, C.compress(base, st.params))
+        print(f"published {name!r} v{v}: "
+              f"{dep.store.artifact_bytes(name, v)/1e6:.2f} MB")
 
     rng = np.random.default_rng(0)
     rids = []
     for i in range(16):
         prompt = rng.integers(1, cfg.vocab_size, size=8)
         variant = ["code", "chat", "math", "__base__"][i % 4]
-        rids.append((eng.submit(prompt, variant=variant, max_new_tokens=8),
+        rids.append((dep.submit(prompt, variant=variant, max_new_tokens=8),
                      variant))
-    eng.run_until_drained()
+    dep.drain()
 
-    done = sum(1 for rid, _ in rids if eng.result(rid).status == "done")
+    # frequent updates: 'code' gets an attention-only refresh (continued
+    # training, shipped for just the attention projections — the localized
+    # regime where an incremental patch beats a full republish: untouched
+    # modules cost nothing on the wire); hot-swap it, then roll back with
+    # a constant-time pointer move
+    st = states["code"]
+    ft_src = SyntheticLM(cfg.vocab_size, seed=11)
+    for i in range(10, 14):
+        st, _ = step(st, ft_src.lm_batch(i, 4, 32))
+    old_flat = C.flatten_params(states["code"].params)
+    new_flat = C.flatten_params(st.params)
+    refreshed = C.unflatten_like(base, {
+        p: new_flat[p] if p.split(".")[-1] in ("wq", "wk", "wv", "wo")
+        else v for p, v in old_flat.items()})
+    v2 = dep.update("code", C.compress(base, refreshed))
+    full, patch = (dep.store.artifact_bytes("code", v) for v in (1, v2))
+    print(f"update 'code' -> v{v2}: patch {patch/1e6:.2f} MB "
+          f"({patch/full:.2f}x of a full publish)")
+    rid_v2 = dep.submit(rng.integers(1, cfg.vocab_size, size=8),
+                        variant="code", max_new_tokens=8)
+    dep.drain()
+    print(f"post-update request: {dep.status(rid_v2)}")
+    v_back = dep.rollback("code")
+    print(f"rollback 'code' -> v{v_back}")
+
+    done = sum(1 for rid, _ in rids if dep.result(rid).status == "done")
+    stats = dep.stats
     print(f"\nserved {done}/{len(rids)} requests")
-    print(f"engine: {eng.metrics}")
-    print(f"registry: swaps={reg.stats['swaps']} hits={reg.stats['hits']} "
-          f"swap_time={reg.stats['swap_seconds']*1e3:.1f} ms "
-          f"transferred={reg.stats['transferred_bytes']/1e6:.2f} MB "
-          f"resident={reg.stats['resident_bytes']/1e6:.2f} MB "
+    print(f"engine: {dep.metrics}")
+    print(f"registry: swaps={stats['swaps']} hits={stats['hits']} "
+          f"swap_time={stats['swap_seconds']*1e3:.1f} ms "
+          f"transferred={stats['transferred_bytes']/1e6:.2f} MB "
+          f"resident={stats['resident_bytes']/1e6:.2f} MB "
           f"(dense copy would be "
           f"{3 * sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(base))/1e6:.2f} MB)")
-    sample = eng.result(rids[0][0])
+    sample = dep.result(rids[0][0])
     print(f"sample output ({rids[0][1]}): {sample.out_tokens}")
 
 

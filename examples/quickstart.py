@@ -1,5 +1,6 @@
-"""Quickstart: compress a fine-tune into a 1-bit per-axis delta, save it,
-hot-swap it onto the resident base, and verify quality.
+"""Quickstart: compress a fine-tune into a 1-bit per-axis delta, publish
+it as version 1 of a variant, serve it, ship a second fine-tune as an
+incremental update patch, and roll back — the full lifecycle in one file.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,10 +13,9 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import calibration as C
-from repro.core import loader as L
-from repro.core import store as S
 from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
+from repro.serving import Deployment
 from repro.train.step import init_train_state, make_train_step
 
 
@@ -44,21 +44,44 @@ def main():
                                          lr=1e-3, e2e_lr=1e-3)
     print("axis selections:", {k: v for k, v in report["axis"].items()})
 
-    # 3. save the artifact; report sizes
-    out = pathlib.Path(tempfile.mkdtemp()) / "variant_a"
-    manifest = S.save_artifact(dm, out, base_fp=S.base_fingerprint(base))
+    # 3. publish as version 1 of a variant and serve it — the Deployment
+    # facade owns the store (manifest v3 + lineage), the registry, and the
+    # serving engine; callers only see publish/update/rollback/submit
+    out = pathlib.Path(tempfile.mkdtemp())
+    dep = Deployment(model, base, root_dir=out / "variants",
+                     batch_size=4, prompt_len=16, max_len=64)
+    v1 = dep.publish("task_a", dm)
+    full_bytes = dep.store.artifact_bytes("task_a", v1)
     fp16 = C.fp16_checkpoint_nbytes(ft)
-    print(f"artifact {manifest['artifact_bytes']/1e6:.2f} MB vs "
+    print(f"published 'task_a' v{v1}: {full_bytes/1e6:.2f} MB vs "
           f"fp16 checkpoint {fp16/1e6:.2f} MB "
-          f"({fp16/manifest['artifact_bytes']:.2f}x smaller)")
+          f"({fp16/full_bytes:.2f}x smaller)")
 
-    # 4. hot-swap onto the resident base (fused Pallas unpack path)
-    dm2 = S.load_artifact(out, expect_base_fp=S.base_fingerprint(base))
-    student, stats = L.apply_artifact(base, dm2)
-    print(f"swap: {stats['seconds']*1e3:.1f} ms, "
-          f"{stats['transferred_bytes']/1e6:.2f} MB moved")
+    rid = dep.submit(jnp.arange(1, 9), variant="task_a", max_new_tokens=8)
+    dep.drain()
+    print(f"served: {dep.status(rid)}")
 
-    # 5. quality: student vs teacher on held-out data
+    # 4. frequent updates: the fine-tune trains a little more and ships an
+    # attention-only refresh — the localized regime where an incremental
+    # patch (XOR'd sign planes + zero-run-suppressed fp16 diffs) beats a
+    # full republish; hot-swap in, rollback is a pointer move
+    for i in range(15, 19):
+        state, _ = step(state, ft_src.lm_batch(i, 4, 32))
+    old_flat = C.flatten_params(ft)
+    new_flat = C.flatten_params(state.params)
+    refreshed = C.unflatten_like(base, {
+        p: new_flat[p] if p.split(".")[-1] in ("wq", "wk", "wv", "wo")
+        else v for p, v in old_flat.items()})
+    v2 = dep.update("task_a", C.compress(base, refreshed))
+    patch_bytes = dep.store.artifact_bytes("task_a", v2)
+    print(f"update -> v{v2}: patch {patch_bytes/1e6:.2f} MB "
+          f"({patch_bytes/full_bytes:.2f}x of a full publish)")
+    dep.rollback("task_a")
+    print(f"rolled back to v{dep.current('task_a')}")
+
+    # 5. quality: student (served weights) vs teacher on held-out data
+    from repro.core import loader as L
+    student, _ = L.apply_artifact(base, dep.store.load("task_a", v1))
     fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
     batch = ft_src.lm_batch(9999, 4, 32)
     err = float(jnp.mean((fwd(ft, batch) - fwd(student, batch)) ** 2))

@@ -166,6 +166,76 @@ def delta_matmul(x: jax.Array, packed: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# incremental update patches (version-to-version wire format)
+#
+# BitDelta (arXiv 2402.10193) motivates the incremental case: two successive
+# fine-tunes of one base differ by a far smaller residual than fine-tune vs
+# base, so a new VERSION of a variant ships as a patch against its parent.
+# One uniform wire transform covers every buffer kind:
+#
+#   1. XOR the parent's and the new version's WIRE bytes (packed uint8 sign
+#      planes, fp16 vectors/extras, bool selectors) — unchanged bytes
+#      become 0, and for sign planes specifically the XOR is the set of
+#      flipped sign bits;
+#   2. run-length-suppress the zero runs: maximal nonzero stretches become
+#      (start, length, literal-bytes) segments, with short zero gaps
+#      merged into a segment so overhead stays ~12 bytes per region.
+#
+# The transform is EXACT at the bit level: applying a patch reproduces
+# buffers bit-identical to a fresh full publish of the new version, so a
+# patched variant serves with exact greedy-token parity.
+# ---------------------------------------------------------------------------
+
+def xor_bytes(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """Flat uint8 XOR of two wire buffers (same shape + dtype)."""
+    old = np.ascontiguousarray(old)
+    new = np.ascontiguousarray(new)
+    if old.shape != new.shape or old.dtype != new.dtype:
+        raise ValueError(
+            f"wire buffers must match, got {old.dtype}{old.shape} vs "
+            f"{new.dtype}{new.shape}; incremental patches require an "
+            "unchanged module structure (publish full)")
+    return old.view(np.uint8).ravel() ^ new.view(np.uint8).ravel()
+
+
+def zrle_encode(flat: np.ndarray, *, merge_gap: int = 16
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Zero-run suppression of a flat uint8 XOR stream ->
+    (starts int64, lengths int32, literals uint8).
+
+    Segments are maximal nonzero stretches; stretches separated by at most
+    ``merge_gap`` zero bytes merge into one segment (12 bytes of overhead
+    beats a dozen 1-byte segments).  A localised update — a few rows of a
+    matrix — costs ~its own bytes; an untouched buffer costs nothing."""
+    flat = np.ascontiguousarray(flat, dtype=np.uint8).ravel()
+    nz = np.flatnonzero(flat)
+    if nz.size == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int32),
+                np.zeros(0, np.uint8))
+    brk = np.flatnonzero(np.diff(nz) > merge_gap)
+    starts = nz[np.concatenate([[0], brk + 1])]
+    ends = nz[np.concatenate([brk, [nz.size - 1]])] + 1
+    lits = np.concatenate([flat[s:e] for s, e in zip(starts, ends)])
+    return (starts.astype(np.int64), (ends - starts).astype(np.int32), lits)
+
+
+def zrle_decode(starts: np.ndarray, lens: np.ndarray, lits: np.ndarray,
+                size: int) -> np.ndarray:
+    """Inverse of :func:`zrle_encode` -> dense flat uint8 of ``size``."""
+    out = np.zeros(size, np.uint8)
+    off = 0
+    for s, n in zip(np.asarray(starts, np.int64), np.asarray(lens)):
+        if s + n > size:
+            raise ValueError(
+                f"XOR segment [{s}, {s + n}) exceeds buffer size {size}")
+        out[s:s + n] = lits[off:off + n]
+        off += int(n)
+    if off != len(lits):
+        raise ValueError("XOR literal stream length mismatch")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # storage accounting (paper Table 2)
 # ---------------------------------------------------------------------------
 

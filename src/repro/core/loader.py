@@ -178,6 +178,63 @@ def _mask_sharding(weight_sharding, mask_ndim: int):
         return weight_sharding
 
 
+# ---------------------------------------------------------------------------
+# incremental version updates (store v3 patch artifacts)
+# ---------------------------------------------------------------------------
+
+def _xor16(v, xr):
+    """XOR a (possibly fp32-held) fp16 wire buffer with uint16 XOR bits —
+    exact at the bit level, so a patched vector is bit-identical to the
+    new version's full publish."""
+    bits = jax.lax.bitcast_convert_type(v.astype(jnp.float16), jnp.uint16)
+    out = jax.lax.bitcast_convert_type(bits ^ xr.reshape(v.shape),
+                                       jnp.float16)
+    return out.astype(v.dtype)
+
+
+@jax.jit
+def _patch_entry(packed, v_row, v_col, use_row, pk_xor, vr_xor, vc_xor,
+                 ur_xor):
+    """Apply one module's update patch in a single compiled op: XOR the
+    packed sign plane (flipped sign bits), the fp16 axis vectors, and the
+    axis-selector flags with their decoded XOR buffers."""
+    return (packed ^ pk_xor.reshape(packed.shape),
+            _xor16(v_row, vr_xor),
+            _xor16(v_col, vc_xor),
+            use_row ^ ur_xor.reshape(use_row.shape))
+
+
+@jax.jit
+def _patch_extra(arr, xr):
+    return _xor16(arr, xr).astype(jnp.float16)
+
+
+def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict
+                 ) -> DeltaModel:
+    """Materialise the NEXT version of a variant from its parent plus a
+    decoded update patch — one jitted op per module, no disk round-trip
+    through a full artifact.
+
+    ``delta_patches``: path -> dict(packed, v_row, v_col, use_row) dense
+    XOR buffers (store-side zero-run decoding already done): uint8 for the
+    packed planes, uint16 for the fp16 vectors' bit patterns, bool for the
+    selector.  ``extras_patches``: path -> uint16 XOR buffer.  Untouched
+    modules are shared with the parent DeltaModel (no copy)."""
+    deltas = dict(dm.deltas)
+    extras = dict(dm.extras)
+    for path, p in delta_patches.items():
+        e = deltas[path]
+        packed, v_row, v_col, use_row = _patch_entry(
+            e.packed, e.v_row, e.v_col, e.use_row,
+            jnp.asarray(p["packed"]), jnp.asarray(p["v_row"]),
+            jnp.asarray(p["v_col"]), jnp.asarray(p["use_row"]))
+        deltas[path] = type(e)(packed=packed, v_row=v_row, v_col=v_col,
+                               use_row=use_row, scalar=e.scalar)
+    for path, xr in extras_patches.items():
+        extras[path] = _patch_extra(extras[path], jnp.asarray(xr))
+    return DeltaModel(deltas=deltas, extras=extras)
+
+
 def load_full_checkpoint(npz_path: str, template_params):
     """Baseline loader: read a full fp16 checkpoint from disk into the
     template's structure (the paper's 2.08 s comparison path)."""

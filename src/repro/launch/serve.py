@@ -1,13 +1,17 @@
-"""Serving launcher: multi-tenant engine over synthetic delta variants.
+"""Serving launcher: versioned multi-tenant deployment over synthetic
+delta variants, driven through the serving/api.Deployment control plane.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-        --variants 3 --requests 12 --mode fused --scheduler continuous
+        --variants 3 --requests 12 --mode fused --scheduler continuous \
+        --updates 1
 
 --mode fused keeps variants resident as packed delta overlays (on-the-fly
 fused GEMMs, ~1/16 the HBM per variant); --mode dense materialises full
 copies (the classic hot-swap path).  --scheduler continuous serves MIXED
 variants in one decode batch via the overlay bank (requires --mode fused;
-DESIGN.md §9); group batches one variant at a time.
+DESIGN.md §9); group batches one variant at a time.  --updates N performs
+N incremental publish_update + hot-swap cycles on the first variant
+mid-workload (DESIGN.md §10), then rolls the last one back.
 """
 from __future__ import annotations
 
@@ -27,6 +31,10 @@ def main():
                     default="group")
     ap.add_argument("--max-resident", type=int, default=0,
                     help="0 -> 2 for dense, 8 for fused")
+    ap.add_argument("--updates", type=int, default=0,
+                    help="incremental update+hot-swap cycles on variant v0")
+    ap.add_argument("--store-dir", default=None,
+                    help="persist artifacts here (default: in-memory)")
     args = ap.parse_args()
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
@@ -38,7 +46,7 @@ def main():
     from repro.core import calibration as C
     from repro.models import build_model
     from repro.models.param import split
-    from repro.serving import ServingEngine, VariantRegistry
+    from repro.serving import Deployment
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -46,29 +54,54 @@ def main():
     model = build_model(cfg)
     base, _ = split(model.init(jax.random.PRNGKey(0)))
 
-    max_resident = args.max_resident or (8 if args.mode == "fused" else 2)
-    reg = VariantRegistry(base, max_resident=max_resident, mode=args.mode,
-                          bank_size=args.variants + 1)
-    for i in range(args.variants):
-        key = jax.random.PRNGKey(100 + i)
+    def fine_tune(seed: int, scale: float = 0.005):
+        key = jax.random.PRNGKey(seed)
         leaves, treedef = jax.tree.flatten(base)
         keys = jax.random.split(key, len(leaves))
-        ft = jax.tree.unflatten(treedef, [
-            l + 0.005 * jax.random.normal(k, l.shape, l.dtype)
+        return jax.tree.unflatten(treedef, [
+            l + scale * jax.random.normal(k, l.shape, l.dtype)
             if l.ndim >= 2 else l for l, k in zip(leaves, keys)])
-        reg.register(f"v{i}", C.compress(base, ft))
 
-    eng = ServingEngine(model, reg, batch_size=args.batch, prompt_len=16,
-                        max_len=64, scheduler=args.scheduler)
+    max_resident = args.max_resident or (8 if args.mode == "fused" else 2)
+    dep = Deployment(model, base, root_dir=args.store_dir,
+                     mode=args.mode, scheduler=args.scheduler,
+                     batch_size=args.batch, prompt_len=16, max_len=64,
+                     max_resident=max_resident,
+                     bank_size=args.variants + 2)
+    tunes = {}
+    for i in range(args.variants):
+        tunes[f"v{i}"] = fine_tune(100 + i)
+        dep.publish(f"v{i}", C.compress(base, tunes[f"v{i}"]))
+
     rng = np.random.default_rng(0)
-    names = reg.registered()
+    names = dep.variants()
     for i in range(args.requests):
-        eng.submit(rng.integers(1, cfg.vocab_size, size=8),
+        dep.submit(rng.integers(1, cfg.vocab_size, size=8),
                    variant=names[i % len(names)],
                    max_new_tokens=args.new_tokens)
-    eng.run_until_drained()
-    print("metrics:", eng.metrics)
-    print("registry:", reg.stats)
+    dep.drain()
+
+    for u in range(args.updates):
+        # continue v0's fine-tune a little and ship it as a patch
+        ft = jax.tree.map(
+            lambda l, b: l + 0.2 * (l - b) if l.ndim >= 2 else l,
+            tunes["v0"], base)
+        tunes["v0"] = ft
+        v = dep.update("v0", C.compress(base, ft))
+        print(f"update {u}: v0 -> version {v}")
+        for _ in range(args.batch):
+            dep.submit(rng.integers(1, cfg.vocab_size, size=8),
+                       variant="v0", max_new_tokens=args.new_tokens)
+        dep.drain()
+    if args.updates:
+        v = dep.rollback("v0")
+        print(f"rollback: v0 -> version {v}")
+        dep.submit(rng.integers(1, cfg.vocab_size, size=8), variant="v0",
+                   max_new_tokens=args.new_tokens)
+        dep.drain()
+
+    print("metrics:", dep.metrics)
+    print("registry:", dep.stats)
 
 
 if __name__ == "__main__":

@@ -1,2 +1,3 @@
+from repro.serving.api import Deployment  # noqa: F401
 from repro.serving.engine import ServingEngine  # noqa: F401
 from repro.serving.variants import VariantRegistry  # noqa: F401

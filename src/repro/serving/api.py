@@ -1,0 +1,201 @@
+"""Deployment: the versioned variant lifecycle as ONE control plane.
+
+The paper's headline claim is cheap *frequent* model updates — which makes
+publishing, updating, hot-swapping and rolling back variants a first-class
+serving concern, not an exercise in wiring ``VariantStore`` +
+``VariantRegistry`` + ``ServingEngine`` by hand (DeltaZip's lesson: serving
+many deltas is a lifecycle problem, not just a kernel problem).
+
+One facade, six verbs::
+
+    dep = Deployment(model, base_params, root_dir="/srv/variants")
+    v1  = dep.publish("support-bot", dm)          # full artifact, version 1
+    rid = dep.submit(prompt, variant="support-bot")
+    v2  = dep.update("support-bot", dm_next)      # XOR/RLE patch, hot-swap
+    dep.drain()
+    dep.status(rid)                               # {"status": "done", ...}
+    dep.rollback("support-bot")                   # constant-time pointer move
+
+Semantics callers can rely on:
+
+* ``publish`` writes a full store-v3 artifact and points serving at it;
+* ``update`` writes an incremental patch (typically a small fraction of a
+  full publish — the version-to-version residual is small) and atomically
+  moves the serving pointer: requests admitted after the call serve the
+  new version, in-flight requests finish on the version they pinned;
+* ``rollback`` moves the pointer back without touching artifacts — if the
+  old version is still bank-resident the next admission is a cache hit;
+* ``submit``/``drain``/``status``/``result`` are the data plane — callers
+  never see registry residency modes, bank slots, or engine scheduling.
+
+A ``Deployment`` without a store (``root_dir=None``) keeps versions
+in-memory only — useful for tests and benchmarks; the lifecycle semantics
+are identical, minus crash durability.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import store as S
+from repro.core.calibration import DeltaModel
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.variants import VariantRegistry
+
+
+class Deployment:
+    """Versioned multi-tenant serving node: one resident base model, a
+    store of variant version lineages, and a continuous-batching engine,
+    behind a publish/update/rollback/submit/drain/status surface."""
+
+    def __init__(self, model, base_params, *,
+                 root_dir=None, store: Optional[S.VariantStore] = None,
+                 mode: str = "fused", scheduler: str = "continuous",
+                 batch_size: int = 4, prompt_len: int = 32,
+                 max_len: int = 128, bank_size: int = 8,
+                 max_resident: int = 8, max_retries: int = 1,
+                 param_shardings=None, use_kernel: bool = True):
+        if store is not None and root_dir is not None:
+            raise ValueError("pass either store or root_dir, not both")
+        if scheduler == "continuous" and mode != "fused":
+            # mirror launch/serve.py: the continuous slot scheduler admits
+            # through the overlay bank, which is fused-only — accepting
+            # mode="dense" here would silently serve fused residents
+            raise ValueError(
+                "scheduler='continuous' requires mode='fused' (mixed "
+                "batches serve from the packed overlay bank); use "
+                "scheduler='group' for dense residency")
+        self.model = model
+        self.registry = VariantRegistry(
+            base_params, param_shardings=param_shardings,
+            max_resident=max_resident, use_kernel=use_kernel,
+            mode=mode, bank_size=bank_size)
+        if store is None and root_dir is not None:
+            store = S.VariantStore(root_dir, base_fp=self.registry.base_fp)
+        if store is not None and store.base_fp is None:
+            store.base_fp = self.registry.base_fp
+        self.store = store
+        if store is not None:
+            # hydrate EVERY persisted version (artifacts stay on disk
+            # until a request materialises them): a restarted node serves
+            # each variant at its durable `latest` pointer, and explicit
+            # ``name@vN`` addressing / rollback targets keep working
+            for name in store.names():
+                for v in store.versions(name):
+                    self.registry.set_version(name, v,
+                                              self._store_ref(name, v))
+                self.registry.set_version(name, store.latest(name))
+        self.engine = ServingEngine(
+            model, self.registry, batch_size=batch_size,
+            prompt_len=prompt_len, max_len=max_len,
+            max_retries=max_retries, scheduler=scheduler)
+
+    # -- control plane -----------------------------------------------------
+    def publish(self, name: str, dm: DeltaModel, *,
+                mode: Optional[str] = None,
+                meta: Optional[dict] = None) -> int:
+        """Publish ``dm`` as the next FULL version of ``name`` and point
+        serving at it.  Returns the new version id."""
+        if mode == "dense" and self.engine.scheduler == "continuous":
+            raise ValueError(
+                "per-variant mode='dense' cannot serve under the "
+                "continuous scheduler (overlay-bank admission is "
+                "fused-only)")
+        if self.store is not None:
+            v = self.store.publish(name, dm, meta=meta)
+            artifact = self._store_ref(name, v)
+        else:
+            v = self.registry.next_version(name)
+            artifact = dm
+        self.registry.set_version(name, v, artifact, mode=mode)
+        return v
+
+    def update(self, name: str, dm: DeltaModel, *,
+               meta: Optional[dict] = None) -> int:
+        """Incremental publish + atomic hot-swap: ``dm`` becomes the next
+        version — shipped as an XOR/RLE patch against the current latest
+        when a store backs this deployment — and the serving pointer moves.
+        Requests admitted after this call serve the new version; in-flight
+        requests finish on the old version's pinned bank slot."""
+        if self.store is not None:
+            v = self.store.publish_update(name, dm, meta=meta)
+            artifact = self._store_ref(name, v)
+        else:
+            if not self.registry.has_variant(name):
+                raise KeyError(f"unknown variant {name!r}; publish first")
+            v = self.registry.next_version(name)
+            artifact = dm
+        self.registry.set_version(name, v, artifact)
+        return v
+
+    def rollback(self, name: str, to_version: Optional[int] = None) -> int:
+        """Constant-time pointer move back to ``to_version`` (default:
+        previous version).  Artifacts are untouched; if the target version
+        is still device-resident the next admission is a cache hit."""
+        if self.store is not None:
+            v = self.store.rollback(name, to_version)
+            # the registry may not have seen this version yet (e.g. a
+            # fresh Deployment over an existing store directory)
+            self.registry.set_version(name, v, self._store_ref(name, v))
+            return v
+        return self.registry.rollback(name, to_version)
+
+    def current(self, name: str) -> Optional[int]:
+        """Version the serving pointer resolves to right now."""
+        return self.registry.current_version(name)
+
+    def versions(self, name: str) -> list:
+        return (self.store.versions(name) if self.store is not None
+                else self.registry.versions(name))
+
+    def variants(self) -> list:
+        return self.registry.registered()
+
+    def _store_ref(self, name: str, version: int):
+        """Lazy materialisation closure: the registry loads (and the store
+        caches) the version only when a request actually needs it."""
+        store = self.store
+        return lambda: store.load(name, version)
+
+    # -- data plane --------------------------------------------------------
+    def submit(self, tokens, variant: str = "__base__",
+               max_new_tokens: int = 16) -> int:
+        """Queue a request.  ``variant`` names a published variant (serves
+        its CURRENT version at admission time), ``name@vN`` pins an
+        explicit version, '__base__' serves the base model."""
+        return self.engine.submit(tokens, variant=variant,
+                                  max_new_tokens=max_new_tokens)
+
+    def drain(self, max_rounds: int = 1000) -> dict:
+        """Serve until the queue and all decode lanes are empty; returns
+        engine metrics."""
+        return self.engine.run_until_drained(max_rounds)
+
+    def result(self, rid: int) -> Request:
+        return self.engine.result(rid)
+
+    def status(self, rid: int) -> dict:
+        """Lifecycle view of one request — never raises.  ``version`` is
+        the variant version the request resolved at admission (stable
+        across later updates/rollbacks of the variant)."""
+        r = self.engine.request(rid)
+        if r is None:
+            return {"status": "unknown", "rid": rid}
+        return {"status": r.status, "rid": rid, "variant": r.variant,
+                "version": r.served_version,
+                "tokens_generated": len(r.out_tokens),
+                "error": r.error}
+
+    def pending(self) -> int:
+        return self.engine.pending()
+
+    def active(self) -> int:
+        return self.engine.active()
+
+    @property
+    def metrics(self) -> dict:
+        return self.engine.metrics
+
+    @property
+    def stats(self) -> dict:
+        """Registry swap/residency counters (hits, swaps, resident bytes)."""
+        return self.registry.stats

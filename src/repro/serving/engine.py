@@ -24,6 +24,12 @@ params plus a packed delta overlay fused into every GEMM on the fly
 Fault tolerance: a variant whose artifact fails to load has its requests
 re-queued up to ``max_retries`` then failed individually — the engine and
 other tenants keep serving.
+
+Versioned variants (DESIGN.md §10): admission resolves the variant's
+CURRENT version and pins that VERSION KEY for the request's lifetime, so
+a hot-swap (``registry.set_version``) mid-flight leaves running lanes on
+the version they started with while new admissions serve the new one;
+``Request.served_version`` records the resolution.
 """
 from __future__ import annotations
 
@@ -50,6 +56,9 @@ class Request:
     status: str = "queued"        # queued | running | done | failed
     retries: int = 0
     error: Optional[str] = None
+    served_version: Optional[int] = None   # variant version resolved at
+                                           # admission (None: base or
+                                           # unversioned registration)
 
 
 @dataclasses.dataclass
@@ -58,6 +67,9 @@ class _Slot:
     request: Request
     variant_slot: int             # bank slot index (0 = base)
     remaining: int                # tokens still owed
+    vkey: str = "__base__"        # pinned version key — unpinned at retire
+                                  # even if the variant was hot-swapped
+                                  # mid-flight
 
 
 class ServingEngine:
@@ -139,17 +151,23 @@ class ServingEngine:
     def result(self, rid: int) -> Request:
         return self._done[rid]
 
-    def status(self, rid: int) -> str:
-        """queued | running | done | failed | unknown — never raises."""
+    def request(self, rid: int) -> Optional[Request]:
+        """The Request object wherever it lives (done, in a decode slot,
+        or still queued); None for unknown rids.  Never raises."""
         if rid in self._done:
-            return self._done[rid].status
+            return self._done[rid]
         for s in self._slots:
             if s is not None and s.request.rid == rid:
-                return "running"
+                return s.request
         for r in self._queue:
             if r.rid == rid:
-                return "queued"
-        return "unknown"
+                return r
+        return None
+
+    def status(self, rid: int) -> str:
+        """queued | running | done | failed | unknown — never raises."""
+        r = self.request(rid)
+        return "unknown" if r is None else r.status
 
     def pending(self) -> int:
         return len(self._queue)
@@ -193,6 +211,9 @@ class ServingEngine:
         variant = group[0].variant
         try:
             params, overlay = self.registry.resolve(variant)
+            # group admission resolves the serving pointer ONCE — the whole
+            # group serves the version current at this moment
+            version = self.registry.current_version(variant)
         except Exception as e:  # artifact failure: re-queue or fail
             for r in group:
                 r.retries += 1
@@ -203,6 +224,8 @@ class ServingEngine:
                 else:
                     self._queue.append(r)
             return
+        for r in group:
+            r.served_version = version
 
         batch = self._prompt_batch(
             {i: r for i, r in enumerate(group)})
@@ -284,7 +307,12 @@ class ServingEngine:
         while free and self._queue:
             r = self._queue.popleft()
             try:
-                vslot = self.registry.bank_resolve(r.variant)
+                # admission-time resolution: a queued request follows the
+                # serving pointer at THIS moment — a version published (or
+                # rolled back) while it waited is what it serves.  The
+                # acquire pins the resolved VERSION KEY, so a later swap
+                # cannot evict the bank slot this lane decodes from.
+                vslot, vkey = self.registry.bank_acquire(r.variant)
             except RuntimeError:
                 # every bank slot pinned by in-flight requests: transient
                 # capacity pressure — retry after retirements free pins
@@ -300,9 +328,9 @@ class ServingEngine:
                     self._queue.append(r)
                 continue
             i = free.pop(0)
-            self.registry.bank_pin(r.variant)
+            r.served_version = self.registry.current_version(r.variant)
             self._slots[i] = _Slot(request=r, variant_slot=vslot,
-                                   remaining=r.max_new_tokens)
+                                   remaining=r.max_new_tokens, vkey=vkey)
             self._variant_idx[i] = vslot
             self._variant_idx_dev = None
             r.status = "running"
@@ -375,7 +403,7 @@ class ServingEngine:
                 s = self._slots[i]
                 s.request.status = "done"
                 self._done[s.request.rid] = s.request
-                self.registry.bank_unpin(s.request.variant)
+                self.registry.bank_unpin(s.vkey)
                 self._slots[i] = None
                 self._variant_idx[i] = 0
                 self._variant_idx_dev = None

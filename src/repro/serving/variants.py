@@ -25,6 +25,12 @@ slot 0 reserved for the base, with pin/unpin guarding in-flight variants
 and slot reuse on eviction.  ``bank_resolve(name)`` admits a variant and
 returns its slot index — the per-batch-row ``variant_idx`` the banked
 kernels consume (DESIGN.md §9).
+
+Variants are VERSIONED (DESIGN.md §10): residents and bank slots are
+keyed per version (``name@vN``), ``set_version`` atomically moves the
+serving pointer (hot-swap), ``rollback`` moves it back in constant time.
+Requests address a plain name (current version at admission) or an
+explicit ``name@vN``.
 """
 from __future__ import annotations
 
@@ -231,7 +237,23 @@ class _Resident:
     nbytes: int                    # HBM added on top of the resident base
 
 
+_MISSING = object()
+
+
 class VariantRegistry:
+    """Versioned serving-side variant table.
+
+    Every variant is a lineage of VERSIONS with one CURRENT pointer — the
+    serving pointer.  Residents (dense copies, fused overlays) and bank
+    slots are keyed by version key ``name@vN`` (plain ``name`` for
+    unversioned back-compat registrations), so two versions of one variant
+    coexist on device during a hot-swap: in-flight requests finish on the
+    version they pinned while new admissions resolve through the moved
+    pointer.  ``set_version`` IS the hot-swap; ``rollback`` is the same
+    pointer move in reverse, and usually re-admits as a bank/LRU hit
+    because stale versions are left resident (unpinned) until capacity
+    pressure reuses their slots."""
+
     def __init__(self, base_params, *, param_shardings=None,
                  max_resident: int = 2, use_kernel: bool = True,
                  mode: str = "dense", bank_size: int = 8):
@@ -245,7 +267,8 @@ class VariantRegistry:
         self.bank_size = bank_size
         self.bank: Optional[OverlayBank] = None   # created on first use
         self._bank_evictions_seen = 0
-        self._artifacts: dict[str, object] = {}   # name -> dir or DeltaModel
+        self._versions: dict[str, dict] = {}   # name -> {version: artifact}
+        self._current: dict[str, Optional[int]] = {}   # serving pointer
         self._modes: dict[str, str] = {}          # per-variant override
         self._resident: "collections.OrderedDict[str, _Resident]" = \
             collections.OrderedDict()
@@ -257,37 +280,127 @@ class VariantRegistry:
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree.leaves(base_params))
 
+    @property
+    def base_fp(self) -> str:
+        return self._base_fp
+
+    # -- names and versions ------------------------------------------------
+    def _parse(self, nameish: str) -> tuple:
+        """Resolve a request-facing variant string to (name, version):
+        a plain name follows the current serving pointer; an explicit
+        ``name@vN`` pins that version regardless of the pointer."""
+        if nameish == "__base__" or nameish in self._versions:
+            return nameish, self._current.get(nameish)
+        if "@v" in nameish:
+            name, _, tail = nameish.rpartition("@v")
+            if name in self._versions and tail.isdigit() \
+                    and int(tail) in self._versions[name]:
+                return name, int(tail)
+        raise KeyError(f"unknown variant {nameish!r}")
+
+    @staticmethod
+    def _vkey(name: str, version) -> str:
+        """Device-residency key: residents and bank slots are PER VERSION."""
+        return name if version is None else f"{name}@v{version}"
+
     # -- registration ------------------------------------------------------
     def register(self, name: str, artifact, mode: Optional[str] = None
                  ) -> None:
-        """artifact: directory path (lazy-loaded) or a DeltaModel.
-        ``mode`` overrides the registry default for this variant."""
-        if mode is not None and mode not in ("dense", "fused"):
-            raise ValueError(f"unknown residency mode {mode!r}")
-        self._artifacts[name] = artifact
+        """Back-compat unversioned registration: artifact is a directory
+        path (lazy-loaded) or a DeltaModel; ``mode`` overrides the registry
+        default for this variant.  Versioned lifecycles use
+        ``set_version`` (typically via serving/api.Deployment)."""
+        self.set_version(name, None, artifact, mode=mode)
+
+    def set_version(self, name: str, version, artifact=None,
+                    mode: Optional[str] = None):
+        """Register ``artifact`` under (name, version) if given, then
+        atomically move the serving pointer: THIS is publish/update/
+        rollback at the registry level.  Resolutions and admissions after
+        this call serve ``version``; in-flight requests keep decoding the
+        version they pinned.  The previous version's dense/fused resident
+        is dropped (its HBM frees now); its bank slot is left as an
+        unpinned LRU resident so rolling back re-admits as a hit.
+
+        artifact: directory path, DeltaModel, or a zero-arg callable
+        returning a DeltaModel (lazy store materialisation)."""
         if mode is not None:
+            if mode not in ("dense", "fused"):
+                raise ValueError(f"unknown residency mode {mode!r}")
             self._modes[name] = mode
+        vers = self._versions.setdefault(name, {})
+        if artifact is not None:
+            vers[version] = artifact
+        elif version not in vers:
+            raise KeyError(
+                f"variant {name!r} has no registered version {version}")
+        prev = self._current.get(name, _MISSING)
+        self._current[name] = version
+        if prev is not _MISSING and prev != version:
+            old_key = self._vkey(name, prev)
+            r = self._resident.pop(old_key, None)
+            if r is not None:
+                self.stats["resident_bytes"] -= r.nbytes
+                self.stats["evictions"] += 1
+        return version
+
+    def rollback(self, name: str, to_version=None):
+        """Constant-time pointer move to an already-registered version
+        (default: the highest version id below the current pointer)."""
+        if name not in self._versions:
+            raise KeyError(f"unknown variant {name!r}")
+        if to_version is None:
+            cur = self._current.get(name)
+            older = [v for v in self._versions[name]
+                     if v is not None and (cur is None or v < cur)]
+            if not older:
+                raise ValueError(
+                    f"variant {name!r} has no version below {cur}")
+            to_version = max(older)
+        return self.set_version(name, to_version)
 
     def registered(self) -> list:
-        return ["__base__"] + sorted(self._artifacts)
+        return ["__base__"] + sorted(self._versions)
 
-    def variant_mode(self, name: str) -> str:
+    def versions(self, name: str) -> list:
+        if name not in self._versions:
+            raise KeyError(f"unknown variant {name!r}")
+        return sorted(v for v in self._versions[name] if v is not None)
+
+    def current_version(self, nameish: str):
+        """Version the serving pointer (or an explicit ``name@vN``)
+        resolves to right now; None for the base and unversioned
+        registrations."""
+        return self._parse(nameish)[1]
+
+    def next_version(self, name: str) -> int:
+        """Next monotonic version id for ``name`` (1 for a fresh name;
+        rollbacks never reuse ids)."""
+        known = [v for v in self._versions.get(name, {}) if v is not None]
+        return max(known, default=0) + 1
+
+    def has_variant(self, name: str) -> bool:
+        return name in self._versions
+
+    def variant_mode(self, nameish: str) -> str:
+        name = self._parse(nameish)[0] if nameish != "__base__" else nameish
         return self._modes.get(name, self.mode)
 
     # -- resolution --------------------------------------------------------
-    def resolve(self, name: str):
-        """(params, overlay) for a variant, LRU-cached on device;
+    def resolve(self, nameish: str):
+        """(params, overlay) for a variant's CURRENT version (or an
+        explicit ``name@vN``), LRU-cached on device per version key;
         '__base__' serves the resident base (overlay None)."""
-        if name == "__base__":
+        if nameish == "__base__":
             return self.base_params, None
-        if name in self._resident:
-            self._resident.move_to_end(name)
+        name, version = self._parse(nameish)
+        vkey = self._vkey(name, version)
+        if vkey in self._resident:
+            self._resident.move_to_end(vkey)
             self.stats["hits"] += 1
-            r = self._resident[name]
+            r = self._resident[vkey]
             return r.params, r.overlay
-        if name not in self._artifacts:
-            raise KeyError(f"unknown variant {name!r}")
-        dm = self._load(name)
+        dm = self._load(name, version)
         if self.variant_mode(name) == "fused":
             params, overlay, st = L.device_put_overlay(
                 self.base_params, dm, param_shardings=self.param_shardings)
@@ -301,7 +414,7 @@ class VariantRegistry:
         self.stats["swap_seconds"] += st["seconds"]
         self.stats["transferred_bytes"] += st["transferred_bytes"]
         resident = _Resident(params, overlay, nbytes)
-        self._resident[name] = resident
+        self._resident[vkey] = resident
         self.stats["resident_bytes"] += nbytes
         while len(self._resident) > self.max_resident:
             _, evicted = self._resident.popitem(last=False)   # evict LRU
@@ -324,21 +437,22 @@ class VariantRegistry:
         return params
 
     # -- banked resolution (mixed-variant batches) -------------------------
-    def bank_resolve(self, name: str) -> int:
-        """Admit ``name`` into the overlay bank (created on demand) and
-        return its bank slot index — the per-row ``variant_idx`` value.
+    def bank_resolve(self, nameish: str) -> int:
+        """Admit the CURRENT version of ``nameish`` (or an explicit
+        ``name@vN``) into the overlay bank (created on demand) and return
+        its bank slot index — the per-row ``variant_idx`` value.
         '__base__' is always slot 0.  Swap/residency stats migrate to the
         bank: ``resident_bytes`` tracks the bank allocation (charged when
         the bank grows, not per admitted variant)."""
         if self.bank is None:
             self.bank = OverlayBank(self.base_params, self.bank_size)
-        if name == "__base__":
+        if nameish == "__base__":
             return 0
-        if name in self.bank._slots:
+        name, version = self._parse(nameish)
+        vkey = self._vkey(name, version)
+        if vkey in self.bank._slots:
             self.stats["hits"] += 1
-            return self.bank.admit(name, None)[0]   # LRU touch, no payload
-        if name not in self._artifacts:
-            raise KeyError(f"unknown variant {name!r}")
+            return self.bank.admit(vkey, None)[0]   # LRU touch, no payload
         if self.bank.tree is not None and not self.bank.has_capacity():
             # refuse BEFORE the disk load: a fully-pinned bank would
             # otherwise re-read + re-verify the artifact every scheduler
@@ -346,10 +460,10 @@ class VariantRegistry:
             raise RuntimeError(
                 "overlay bank full: every resident is pinned by an "
                 "in-flight request")
-        dm = self._load(name)
+        dm = self._load(name, version)
         before = self.bank.nbytes()
         t0 = time.perf_counter()
-        slot, payload = self.bank.admit(name, dm)
+        slot, payload = self.bank.admit(vkey, dm)
         jax.block_until_ready(jax.tree.leaves(self.bank.tree)[0])
         self.stats["swaps"] += 1
         self.stats["swap_seconds"] += time.perf_counter() - t0
@@ -360,25 +474,54 @@ class VariantRegistry:
         self._bank_evictions_seen = self.bank.stats["evictions"]
         return slot
 
-    def bank_pin(self, name: str) -> None:
-        if self.bank is not None:
-            self.bank.pin(name)
+    def bank_acquire(self, nameish: str) -> tuple:
+        """Admit AND pin in one step: returns (slot, version_key).  The
+        caller unpins with the returned KEY, not the request's variant
+        name — the serving pointer may move while the request is in
+        flight (hot-swap), and the pin must stay on the version the
+        request is actually decoding."""
+        slot = self.bank_resolve(nameish)
+        vkey = "__base__" if nameish == "__base__" \
+            else self._vkey(*self._parse(nameish))
+        self.bank.pin(vkey)
+        return slot, vkey
 
-    def bank_unpin(self, name: str) -> None:
+    def _bank_key(self, nameish: str) -> str:
+        """Map a caller-facing name to its bank/resident key: version keys
+        and unversioned names pass through; plain names of versioned
+        variants follow the serving pointer."""
+        if nameish == "__base__":
+            return nameish
+        if self.bank is not None and nameish in self.bank._slots:
+            return nameish
+        if nameish in self._resident:
+            return nameish
+        try:
+            return self._vkey(*self._parse(nameish))
+        except KeyError:
+            return nameish
+
+    def bank_pin(self, nameish: str) -> None:
         if self.bank is not None:
-            self.bank.unpin(name)
+            self.bank.pin(self._bank_key(nameish))
+
+    def bank_unpin(self, nameish: str) -> None:
+        if self.bank is not None:
+            self.bank.unpin(self._bank_key(nameish))
 
     def resident(self) -> list:
         return list(self._resident)
 
-    def resident_nbytes(self, name: str) -> int:
-        return self._resident[name].nbytes
+    def resident_nbytes(self, nameish: str) -> int:
+        return self._resident[self._bank_key(nameish)].nbytes
 
-    def _load(self, name: str) -> DeltaModel:
-        art = self._artifacts[name]
+    def _load(self, name: str, version=None) -> DeltaModel:
+        art = self._versions[name][version]
         if isinstance(art, DeltaModel):
             return art
         try:
+            if callable(art):
+                return art()    # lazy store materialisation
             return S.load_artifact(str(art), expect_base_fp=self._base_fp)
         except Exception:
             # fault tolerance: corrupt/missing artifact must not take the
@@ -387,19 +530,22 @@ class VariantRegistry:
             self.stats["load_failures"] += 1
             raise
 
-    def evict(self, name: str) -> None:
+    def evict(self, nameish: str) -> None:
+        """Evict a variant's device residency by name (current version),
+        explicit ``name@vN``, or raw version key."""
+        key = self._bank_key(nameish)
         # pin check FIRST: refusing a pinned (mid-flight) banked variant
         # must not half-evict — the dense resident and stats stay intact
-        if self.bank is not None and self.bank.pinned(name):
+        if self.bank is not None and self.bank.pinned(key):
             raise RuntimeError(
-                f"variant {name!r} is pinned by in-flight requests; "
+                f"variant {key!r} is pinned by in-flight requests; "
                 "retire them before evicting")
-        r = self._resident.pop(name, None)
+        r = self._resident.pop(key, None)
         if r is not None:
             self.stats["resident_bytes"] -= r.nbytes
             self.stats["evictions"] += 1
-        if self.bank is not None and name in self.bank._slots:
+        if self.bank is not None and key in self.bank._slots:
             # bank bytes stay allocated — the slot is reusable, not freed
-            self.bank.evict(name)
+            self.bank.evict(key)
             self.stats["evictions"] += 1
             self._bank_evictions_seen = self.bank.stats["evictions"]

@@ -1,0 +1,439 @@
+"""Versioned variant lifecycle: VariantStore lineage + update patches,
+registry hot-swap/rollback semantics, and the Deployment control plane
+(DESIGN.md §10).
+
+Parity contract: a version materialised through ANY lineage (full publish,
+chain of XOR/zero-run patches, rollback + re-forward) must be bit-identical
+in the wire domain to a fresh full publish of the same weights — so greedy
+tokens match exactly no matter how a version reached the serving node.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import store as S
+from repro.models import build_model
+from repro.models.param import split
+from repro.serving import Deployment
+from repro.serving.variants import OverlayBank, VariantRegistry
+
+PROMPT = np.arange(1, 7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Model + base + three fine-tunes: ft2/ft3 are INCREMENTAL
+    continuations of ft1 (a fraction of rows move), the regime update
+    patches are built for."""
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft1 = jax.tree.map(lambda b, p: b + 0.05 * p, base, pert)
+
+    def inc(ft):
+        def upd(l1, lb):
+            if l1.ndim < 2:
+                return l1
+            n = max(1, l1.shape[-2] // 8)
+            return l1.at[..., :n, :].add(
+                0.3 * (l1[..., :n, :] - lb[..., :n, :]))
+        return jax.tree.map(upd, ft, base)
+
+    ft2 = inc(ft1)
+    ft3 = inc(ft2)
+    return (model, base, C.compress(base, ft1), C.compress(base, ft2),
+            C.compress(base, ft3))
+
+
+def _dep(model, base, root=None, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("bank_size", 4)
+    return Deployment(model, base, root_dir=root, **kw)
+
+
+def _serve(dep, variant, n=4):
+    rid = dep.submit(PROMPT, variant=variant, max_new_tokens=n)
+    dep.drain()
+    assert dep.result(rid).status == "done"
+    return dep.result(rid).out_tokens
+
+
+def _wire_equal(dm_a, dm_b):
+    assert set(dm_a.deltas) == set(dm_b.deltas)
+    assert set(dm_a.extras) == set(dm_b.extras)
+    for k, ea in dm_a.deltas.items():
+        eb = dm_b.deltas[k]
+        np.testing.assert_array_equal(
+            np.asarray(ea.packed), np.asarray(eb.packed), err_msg=k)
+        np.testing.assert_array_equal(
+            np.asarray(ea.v_row).astype(np.float16),
+            np.asarray(eb.v_row).astype(np.float16), err_msg=k)
+        np.testing.assert_array_equal(
+            np.asarray(ea.v_col).astype(np.float16),
+            np.asarray(eb.v_col).astype(np.float16), err_msg=k)
+        np.testing.assert_array_equal(
+            np.asarray(ea.use_row), np.asarray(eb.use_row), err_msg=k)
+    for k, va in dm_a.extras.items():
+        np.testing.assert_array_equal(
+            np.asarray(va).astype(np.float16),
+            np.asarray(dm_b.extras[k]).astype(np.float16), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# VariantStore: lineage, patches, rollback, integrity
+# ---------------------------------------------------------------------------
+
+def test_store_publish_lineage_and_manifest_v3(setup, tmp_path):
+    _, base, dm1, dm2, _ = setup
+    st = S.VariantStore(tmp_path, base_fp=S.base_fingerprint(base))
+    assert st.publish("prod", dm1) == 1
+    assert st.publish("prod", dm2) == 2
+    assert st.versions("prod") == [1, 2] and st.latest("prod") == 2
+    m = S.read_manifest(tmp_path / "prod" / "v0002")
+    assert m["version"] == S.STORE_VERSION and m["kind"] == "full"
+    assert m["lineage"] == {"variant": "prod", "version": 2,
+                            "parent_version": None}
+    assert st.artifact_bytes("prod", 2) == m["artifact_bytes"] > 0
+
+
+def test_store_update_patch_exact_and_small(setup, tmp_path):
+    _, base, dm1, dm2, _ = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    v2 = st.publish_update("prod", dm2)
+    assert st.version_info("prod", v2)["kind"] == "patch"
+    # bit-exact vs a fresh full publish of the same weights
+    st2 = S.VariantStore(tmp_path / "ref")
+    st2.publish("ref", dm2)
+    _wire_equal(st.load("prod", v2), st2.load("ref", 1))
+    # and the incremental regime actually ships fewer bytes
+    assert st.artifact_bytes("prod", v2) < \
+        0.5 * st.artifact_bytes("prod", 1)
+
+
+def test_store_patch_chain_and_cold_materialise(setup, tmp_path):
+    _, base, dm1, dm2, dm3 = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    st.publish_update("prod", dm2)
+    v3 = st.publish_update("prod", dm3)
+    assert st.lineage("prod", v3) == [1, 2, 3]
+    ref = S.VariantStore(tmp_path / "ref")
+    ref.publish("ref", dm3)
+    _wire_equal(st.load("prod", v3), ref.load("ref", 1))
+    # cold: a fresh store over the same directory (empty cache) walks the
+    # full->patch->patch chain from disk
+    cold = S.VariantStore(tmp_path)
+    _wire_equal(cold.load("prod"), ref.load("ref", 1))
+
+
+def test_store_rollback_pointer_and_monotonic_ids(setup, tmp_path):
+    _, base, dm1, dm2, _ = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    st.publish_update("prod", dm2)
+    assert st.rollback("prod") == 1 and st.latest("prod") == 1
+    # ids never reuse: the next publish is 3, not 2
+    assert st.publish("prod", dm2) == 3
+    with pytest.raises(KeyError):
+        st.rollback("prod", 99)
+
+
+def test_store_structure_change_requires_full_publish(setup, tmp_path):
+    _, base, dm1, _, _ = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    smaller = type(dm1)(deltas=dict(list(dm1.deltas.items())[:-1]),
+                        extras=dm1.extras)
+    with pytest.raises(ValueError):
+        st.publish_update("prod", smaller)
+
+
+def test_patch_dir_rejected_by_plain_load_artifact(setup, tmp_path):
+    _, base, dm1, dm2, _ = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    v2 = st.publish_update("prod", dm2)
+    with pytest.raises(ValueError):
+        S.load_artifact(tmp_path / "prod" / f"v{v2:04d}")
+
+
+def test_wrong_parent_patch_detected(setup, tmp_path):
+    """A patch applied over the wrong parent artifact fails the recorded
+    result sha — corruption and lineage mix-ups cannot serve silently."""
+    _, base, dm1, dm2, dm3 = setup
+    st = S.VariantStore(tmp_path)
+    st.publish("prod", dm1)
+    st.publish_update("prod", dm2)
+    # overwrite v1's payload with different weights, keeping the lineage
+    S.save_artifact(dm3, st._vdir("prod", 1))
+    cold = S.VariantStore(tmp_path)           # no cache
+    with pytest.raises(IOError):
+        cold.load("prod", 2)
+
+
+def test_torn_manifest_rejected(setup, tmp_path):
+    """Satellite: a partially written manifest (crash that bypassed the
+    atomic tmp+os.replace finalize) must be rejected, not half-parsed."""
+    _, base, dm1, _, _ = setup
+    S.save_artifact(dm1, tmp_path / "v1")
+    mpath = tmp_path / "v1" / "manifest.json"
+    full_text = mpath.read_text()
+    mpath.write_text(full_text[:len(full_text) // 2])   # torn JSON
+    with pytest.raises(IOError):
+        S.load_artifact(tmp_path / "v1")
+    mpath.write_text("{}")                              # valid JSON, torn
+    with pytest.raises(IOError):
+        S.load_artifact(tmp_path / "v1")
+    mpath.write_text(full_text)                         # restored
+    S.load_artifact(tmp_path / "v1")
+
+
+def test_v1_manifest_compat(setup, tmp_path):
+    """Pre-lineage manifests (no files/artifact_bytes/kind/lineage) still
+    load through the compat path."""
+    _, base, dm1, _, _ = setup
+    S.save_artifact(dm1, tmp_path / "v1")
+    mpath = tmp_path / "v1" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    for k in ("files", "artifact_bytes", "kind", "lineage"):
+        m.pop(k)
+    m["version"] = 1
+    mpath.write_text(json.dumps(m))
+    _wire_equal(S.load_artifact(tmp_path / "v1"), dm1)
+
+
+# ---------------------------------------------------------------------------
+# registry + engine: hot-swap, rollback, pinned in-flight versions
+# ---------------------------------------------------------------------------
+
+def test_hot_swap_inflight_finishes_on_old_version(setup):
+    """The atomic-swap contract: a request decoding v1 when the pointer
+    moves to v2 finishes with EXACTLY the tokens it would have produced
+    had no update happened; requests admitted after the move serve v2."""
+    model, base, dm1, dm2, _ = setup
+
+    dep = _dep(model, base)
+    dep.publish("prod", dm1)
+    rid_old = dep.submit(PROMPT, variant="prod", max_new_tokens=5)
+    # stage mid-flight: admit + prefill without draining
+    dep.engine._prefill_admitted(dep.engine._admit_free_slots())
+    assert dep.status(rid_old)["status"] == "running"
+    assert dep.registry.bank.pinned("prod@v1")
+
+    dep.update("prod", dm2)
+    rid_new = dep.submit(PROMPT, variant="prod", max_new_tokens=5)
+    dep.drain()
+    old_tokens = dep.result(rid_old).out_tokens
+    new_tokens = dep.result(rid_new).out_tokens
+    assert dep.status(rid_old)["version"] == 1
+    assert dep.status(rid_new)["version"] == 2
+
+    ref1 = _dep(model, base)
+    ref1.publish("prod", dm1)
+    assert old_tokens == _serve(ref1, "prod", 5)
+    ref2 = _dep(model, base)
+    ref2.publish("prod", dm2)
+    assert new_tokens == _serve(ref2, "prod", 5)
+    assert not dep.registry.bank.pinned("prod@v1")
+
+
+def test_submit_against_version_swapped_mid_queue(setup):
+    """Satellite: a QUEUED request resolves the serving pointer at
+    admission — a version published while it waited is what it serves."""
+    model, base, dm1, dm2, _ = setup
+    dep = _dep(model, base)
+    dep.publish("prod", dm1)
+    _serve(dep, "prod")                       # warm + resident at v1
+    rid = dep.submit(PROMPT, variant="prod", max_new_tokens=4)
+    assert dep.status(rid) == {"status": "queued", "rid": rid,
+                               "variant": "prod", "version": None,
+                               "tokens_generated": 0, "error": None}
+    dep.update("prod", dm2)                   # swap while rid is queued
+    dep.drain()
+    assert dep.status(rid)["version"] == 2
+    ref = _dep(model, base)
+    ref.publish("prod", dm2)
+    assert dep.result(rid).out_tokens == _serve(ref, "prod")
+
+
+def test_status_across_full_lifecycle(setup):
+    """Satellite: engine.status/Deployment.status across queued -> active
+    -> done -> after rollback of the variant the request ran on."""
+    model, base, dm1, dm2, _ = setup
+    dep = _dep(model, base)
+    dep.publish("prod", dm1)
+    dep.update("prod", dm2)
+    rid = dep.submit(PROMPT, variant="prod", max_new_tokens=3)
+    assert dep.engine.status(rid) == "queued"
+    dep.engine._prefill_admitted(dep.engine._admit_free_slots())
+    assert dep.engine.status(rid) == "running"
+    dep.drain()
+    assert dep.engine.status(rid) == "done"
+    assert dep.status(rid)["version"] == 2
+    # rolling back the variant the request ran on does not rewrite history
+    dep.rollback("prod")
+    assert dep.engine.status(rid) == "done"
+    assert dep.status(rid)["version"] == 2
+    assert dep.engine.status(404404) == "unknown"
+    assert dep.status(404404) == {"status": "unknown", "rid": 404404}
+
+
+def test_explicit_version_addressing_and_rollback_hit(setup):
+    """``name@vN`` pins a version regardless of the pointer; rollback is a
+    pointer move that re-admits the still-resident old version as a bank
+    HIT (no artifact reload)."""
+    model, base, dm1, dm2, _ = setup
+    dep = _dep(model, base)
+    dep.publish("prod", dm1)
+    t1 = _serve(dep, "prod")
+    dep.update("prod", dm2)
+    t2 = _serve(dep, "prod")
+    # explicit old version while the pointer is at v2
+    assert _serve(dep, "prod@v1") == t1
+    swaps_before = dep.stats["swaps"]
+    hits_before = dep.stats["hits"]
+    assert dep.rollback("prod") == 1
+    assert _serve(dep, "prod") == t1
+    assert dep.stats["swaps"] == swaps_before      # no reload
+    assert dep.stats["hits"] > hits_before          # bank hit
+    # forward again to the latest version id
+    dep.rollback("prod", 2)
+    assert _serve(dep, "prod") == t2
+
+
+def test_group_scheduler_versioned_lifecycle(setup):
+    """The grouped (dense-capable) scheduler serves the same versioned
+    surface: update swaps what a group resolves, rollback restores it."""
+    model, base, dm1, dm2, _ = setup
+    dep = _dep(model, base, scheduler="group", mode="dense",
+               max_resident=2)
+    dep.publish("prod", dm1)
+    t1 = _serve(dep, "prod")
+    dep.update("prod", dm2)
+    t2 = _serve(dep, "prod")
+    dep.rollback("prod")
+    assert _serve(dep, "prod") == t1
+    ref = _dep(model, base, scheduler="group", mode="dense")
+    ref.publish("prod", dm2)
+    assert t2 == _serve(ref, "prod")
+
+
+def test_deployment_store_backed_lifecycle(setup, tmp_path):
+    """Store-backed deployment: update ships a patch, and a FRESH
+    deployment over the same directory HYDRATES from versions.json — a
+    restarted node serves previously published variants at their
+    persisted pointer, identical tokens, no re-publish needed."""
+    model, base, dm1, dm2, _ = setup
+    dep = _dep(model, base, root=tmp_path / "store")
+    dep.publish("prod", dm1)
+    v2 = dep.update("prod", dm2)
+    assert dep.store.version_info("prod", v2)["kind"] == "patch"
+    t2 = _serve(dep, "prod")
+    cold = _dep(model, base, root=tmp_path / "store")
+    assert cold.variants() == ["__base__", "prod"]
+    assert cold.current("prod") == v2
+    assert _serve(cold, "prod") == t2        # cold chain materialise
+    ref = _dep(model, base)
+    ref.publish("prod", dm1)
+    t1 = _serve(ref, "prod")
+    # every persisted version hydrates: explicit addressing of the OLD
+    # version works on the restarted node without a rollback first
+    assert _serve(cold, "prod@v1") == t1
+    assert cold.rollback("prod") == 1        # lineage survives restart too
+    assert _serve(cold, "prod") == t1
+
+
+def test_store_rejects_path_traversal_names(setup, tmp_path):
+    _, base, dm1, _, _ = setup
+    st = S.VariantStore(tmp_path / "store")
+    for bad in ("..", ".", "a/b", "a@b", "", "a\\b"):
+        with pytest.raises(ValueError):
+            st.publish(bad, dm1)
+    assert not (tmp_path / "versions.json").exists()
+    st.publish("ok-name_1.2", dm1)           # safe charset accepted
+
+
+def test_deployment_rejects_dense_continuous(setup):
+    model, base, dm1, _, _ = setup
+    with pytest.raises(ValueError):
+        _dep(model, base, mode="dense")      # default scheduler continuous
+    dep = _dep(model, base)                  # fused + continuous
+    with pytest.raises(ValueError):
+        dep.publish("prod", dm1, mode="dense")
+
+
+def test_store_cache_bounded(setup, tmp_path):
+    """The materialisation cache is LRU-bounded: a long chain of frequent
+    updates must not pin every historical version's arrays in memory."""
+    _, base, dm1, dm2, _ = setup
+    st = S.VariantStore(tmp_path, cache_versions=2)
+    st.publish("prod", dm1)
+    st.publish_update("prod", dm2)
+    for _ in range(4):
+        st.publish_update("prod", st.load("prod"))
+    assert len(st._cache) <= 2
+    # evicted versions still materialise correctly from disk
+    ref = S.VariantStore(tmp_path / "ref")
+    ref.publish("ref", dm2)
+    _wire_equal(st.load("prod", 2), ref.load("ref", 1))
+    assert len(st._cache) <= 2
+
+
+# ---------------------------------------------------------------------------
+# overlay bank accounting (satellite: admit -> evict -> admit reuse)
+# ---------------------------------------------------------------------------
+
+def test_bank_nbytes_stable_across_admit_evict_admit(setup):
+    """Regression: the bank allocates once at full size — nbytes() must
+    return to its value after the first admit when a slot is evicted and
+    reused by a DIFFERENT variant, and registry resident_bytes must not
+    drift across the cycle."""
+    model, base, dm1, dm2, _ = setup
+    bank = OverlayBank(base, 3)
+    assert bank.nbytes() == 0
+    bank.admit("a", dm1)
+    allocated = bank.nbytes()
+    assert allocated > 0
+    bank.evict("a")
+    assert bank.nbytes() == allocated
+    bank.admit("b", dm2)
+    assert bank.nbytes() == allocated
+    assert bank.stats["evictions"] == 1
+
+    reg = VariantRegistry(base, mode="fused", bank_size=3)
+    reg.register("a", dm1)
+    reg.register("b", dm2)
+    reg.bank_resolve("a")
+    charged = reg.stats["resident_bytes"]
+    assert charged == reg.bank.nbytes()
+    reg.evict("a")
+    reg.bank_resolve("b")
+    reg.bank_resolve("a")        # slot churn: b evicted? no — free slot
+    assert reg.stats["resident_bytes"] == charged == reg.bank.nbytes()
+
+
+def test_registry_set_version_drops_stale_dense_resident(setup):
+    """Hot-swapping a dense-resident variant frees the old version's full
+    materialised copy (stats stay balanced); the bank path instead keeps
+    the old slot for constant-time rollback."""
+    model, base, dm1, dm2, _ = setup
+    reg = VariantRegistry(base, mode="dense", max_resident=2)
+    reg.set_version("prod", 1, dm1)
+    reg.resolve("prod")
+    before = reg.stats["resident_bytes"]
+    assert before > 0
+    reg.set_version("prod", 2, dm2)
+    assert reg.stats["resident_bytes"] == 0    # v1 copy dropped
+    reg.resolve("prod")
+    assert reg.stats["resident_bytes"] == before
