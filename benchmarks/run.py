@@ -10,7 +10,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fused    on-the-fly (packed-overlay) vs swap-then-dense serving
   continuous mixed-variant continuous batching vs grouped-by-variant
   update_latency incremental publish_update + hot-swap vs full republish
+  sharded_serving banked decode on a host mesh: parity + per-device bytes
   roofline dry-run roofline terms per (arch × shape × mesh)
+
+``--strict`` exits nonzero when any section errors (CI gate — by default
+a crash is swallowed into a ``*/ERROR,0,...`` CSV row and the driver
+exits 0, which hides regressions).  ``--sections a,b`` runs a subset.
 """
 from __future__ import annotations
 
@@ -51,22 +56,48 @@ def serving_bench() -> list:
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any section emits an ERROR row")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run")
+    args = ap.parse_args()
+
     from benchmarks import (axis_stats, continuous_batching, fused_serving,
                             kernel_bench, load_time, roofline,
-                            table1_quality, table2_sizes, update_latency)
+                            sharded_serving, table1_quality, table2_sizes,
+                            update_latency)
+    sections = [                                      # cheap first
+        ("table2", table2_sizes.run),
+        ("kernel", kernel_bench.run),
+        ("load_time", load_time.run),
+        ("table1", table1_quality.run),
+        ("axis_stats", axis_stats.run),
+        ("serving", serving_bench),
+        ("fused", fused_serving.run),
+        ("continuous_batching", continuous_batching.run),
+        ("update_latency", update_latency.run),
+        ("sharded_serving", sharded_serving.run),
+        ("roofline", roofline.run),
+    ]
+    if args.sections:
+        wanted = {s.strip() for s in args.sections.split(",")}
+        unknown = wanted - {n for n, _ in sections}
+        if unknown:
+            ap.error(f"unknown sections: {sorted(unknown)}")
+        sections = [(n, f) for n, f in sections if n in wanted]
     rows = []
-    rows += _section("table2", table2_sizes.run)      # cheap first
-    rows += _section("kernel", kernel_bench.run)
-    rows += _section("load_time", load_time.run)
-    rows += _section("table1", table1_quality.run)
-    rows += _section("axis_stats", axis_stats.run)
-    rows += _section("serving", serving_bench)
-    rows += _section("fused", fused_serving.run)
-    rows += _section("continuous_batching", continuous_batching.run)
-    rows += _section("update_latency", update_latency.run)
-    rows += _section("roofline", roofline.run)
+    for name, fn in sections:
+        rows += _section(name, fn)
     print("name,us_per_call,derived")
     print("\n".join(rows))
+    errors = [r for r in rows if "/ERROR," in r]
+    if args.strict and errors:
+        print(f"STRICT: {len(errors)} section error(s)", file=sys.stderr)
+        for r in errors:
+            print(f"  {r}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

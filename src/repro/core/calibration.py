@@ -43,9 +43,12 @@ TARGET_KEYS.discard("router")
 # path utilities
 # ---------------------------------------------------------------------------
 
-def flatten_params(params) -> dict:
+def flatten_params(params, is_leaf=None) -> dict:
+    """{dot-path -> leaf}; THE path scheme every flat view shares
+    (delta/extras keys, overlay insertion, axes trees)."""
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+    pairs = jax.tree_util.tree_flatten_with_path(params, is_leaf=is_leaf)[0]
+    for path, leaf in pairs:
         key = ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         flat[key] = leaf

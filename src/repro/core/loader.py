@@ -126,12 +126,25 @@ def device_put_overlay(base_params, dm: DeltaModel, *,
     for path, wb in base_flat.items():
         if path in dm.deltas:
             e = from_delta_entry(dm.deltas[path], vec_dtype=vec_dtype)
-            packed = e.packed
+            packed, v_row, v_col = e.packed, e.v_row, e.v_col
             if shard_flat is not None:
+                # EVERY overlay leaf lands on its derived sharding: the
+                # mask like the weight (packed byte dim replicated), each
+                # axis vector on the single weight axis it scales — so the
+                # fused delta GEMM reads shard-local overlay tiles and
+                # decode needs no overlay re-layout (DESIGN.md §11)
                 mask_sh = _mask_sharding(shard_flat[path], packed.ndim)
+                row_sh, col_sh = _vec_shardings(shard_flat[path],
+                                                packed.ndim)
                 packed = jax.device_put(packed, mask_sh)
-            e = type(e)(packed=packed, v_row=jax.device_put(e.v_row),
-                        v_col=jax.device_put(e.v_col))
+                v_row = jax.device_put(v_row, row_sh) if row_sh is not None \
+                    else jax.device_put(v_row)
+                v_col = jax.device_put(v_col, col_sh) if col_sh is not None \
+                    else jax.device_put(v_col)
+            else:
+                v_row = jax.device_put(v_row)
+                v_col = jax.device_put(v_col)
+            e = type(e)(packed=packed, v_row=v_row, v_col=v_col)
             transferred += e.nbytes()
             insert_entry(overlay_tree, path, e)
             out[path] = wb                      # base weight, shared
@@ -178,6 +191,25 @@ def _mask_sharding(weight_sharding, mask_ndim: int):
         return weight_sharding
 
 
+def _vec_shardings(weight_sharding, w_ndim: int):
+    """(v_row, v_col) shardings from the weight's: each axis vector keeps
+    the spec entries of the weight dims it is a copy of — (lead..., d_out)
+    for v_row, (lead..., d_in) for v_col.  Transferring the weight's
+    resolved allocation verbatim matches the logical derivation in
+    ``models/delta_overlay.entry_axes`` (tests/test_sharded_serving.py
+    asserts the equivalence); (None, None) when the sharding carries no
+    inspectable spec (single-device placements)."""
+    try:
+        spec = list(weight_sharding.spec) + [None] * w_ndim
+        spec = spec[:w_ndim]
+        from jax.sharding import NamedSharding, PartitionSpec
+        mesh = weight_sharding.mesh
+        return (NamedSharding(mesh, PartitionSpec(*spec[:-1])),
+                NamedSharding(mesh, PartitionSpec(*(spec[:-2] + spec[-1:]))))
+    except Exception:
+        return None, None
+
+
 # ---------------------------------------------------------------------------
 # incremental version updates (store v3 patch artifacts)
 # ---------------------------------------------------------------------------
@@ -219,20 +251,36 @@ def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict
     XOR buffers (store-side zero-run decoding already done): uint8 for the
     packed planes, uint16 for the fp16 vectors' bit patterns, bool for the
     selector.  ``extras_patches``: path -> uint16 XOR buffer.  Untouched
-    modules are shared with the parent DeltaModel (no copy)."""
+    modules are shared with the parent DeltaModel (no copy).
+
+    Sharded parents stay sharded: each XOR buffer is placed onto its
+    parent leaf's sharding before the jitted patch, so the update applies
+    shard-local (no replicated wire operand, outputs inherit the parent
+    placement — DESIGN.md §11)."""
     deltas = dict(dm.deltas)
     extras = dict(dm.extras)
     for path, p in delta_patches.items():
         e = deltas[path]
         packed, v_row, v_col, use_row = _patch_entry(
             e.packed, e.v_row, e.v_col, e.use_row,
-            jnp.asarray(p["packed"]), jnp.asarray(p["v_row"]),
-            jnp.asarray(p["v_col"]), jnp.asarray(p["use_row"]))
+            _wire(p["packed"], e.packed), _wire(p["v_row"], e.v_row),
+            _wire(p["v_col"], e.v_col), _wire(p["use_row"], e.use_row))
         deltas[path] = type(e)(packed=packed, v_row=v_row, v_col=v_col,
                                use_row=use_row, scalar=e.scalar)
     for path, xr in extras_patches.items():
-        extras[path] = _patch_extra(extras[path], jnp.asarray(xr))
+        extras[path] = _patch_extra(extras[path], _wire(xr, extras[path]))
     return DeltaModel(deltas=deltas, extras=extras)
+
+
+def _wire(buf, like) -> jax.Array:
+    """Decoded XOR buffer -> device, shaped and placed like the parent
+    leaf (sharding only transfers when the parent carries a NamedSharding;
+    shapes always match, dtypes intentionally don't)."""
+    arr = jnp.asarray(buf).reshape(like.shape)
+    sh = getattr(like, "sharding", None)
+    if isinstance(sh, jax.sharding.NamedSharding):
+        arr = jax.device_put(arr, sh)
+    return arr
 
 
 def load_full_checkpoint(npz_path: str, template_params):

@@ -44,6 +44,11 @@ PARAM_RULES = {
     "ssm": ["model"],
     "conv": [],
     "layers": [],
+    # overlay-bank slot axis (models/delta_overlay.py): replicated — every
+    # device holds all bank slots of its own weight shard, so per-row slot
+    # gathers in the banked delta GEMM stay device-local and bank admission
+    # needs no collectives (DESIGN.md §11)
+    "bank": [],
 }
 
 # Pure tensor-parallel params (serving: no FSDP; weights replicated over

@@ -38,7 +38,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     import jax
     import jax.numpy as jnp
 
-    from repro.configs import SHAPES, get_config, cell_skip_reason
+    from repro.configs import (BANKED_SLOTS, SHAPES, get_config,
+                               cell_skip_reason)
     from repro.distributed import hlo_analysis as H
     from repro.distributed.sharding import (rules_for, shard_ctx,
                                             tree_shardings)
@@ -46,8 +47,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     from repro.models import build_model
     from repro.models.param import split
     from repro.optim.adamw import AdamWState
-    from repro.train.step import (TrainState, make_decode_step,
-                                  make_prefill_step, make_train_step)
+    from repro.train.step import (TrainState, make_banked_decode_step,
+                                  make_decode_step, make_prefill_step,
+                                  make_train_step)
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -124,9 +126,38 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                       rules, mesh)
             token_struct = batch_struct["tokens"]
             token_sh = batch_sh["tokens"]
-            step_fn = make_decode_step(model)
-            args = (serve_struct, token_struct, cache_struct)
-            shardings = (param_sh, token_sh, cache_sh)
+            if shape.banked:
+                # mixed-variant serving cell: decode against a banked
+                # overlay whose leaves land on their derived shardings
+                # (weight-axis tiles, replicated bank axis) — validates
+                # the DESIGN.md §11 collective schedule: batch lanes over
+                # `data`, fused delta GEMMs over `model`, no per-step
+                # weight or overlay all-gathers
+                from repro.core.calibration import (flatten_params,
+                                                    is_target)
+                from repro.models import delta_overlay as DO
+                flat = flatten_params(serve_struct)
+                delta_paths = sorted(p for p, l in flat.items()
+                                     if is_target(p, l))
+                ds = set(delta_paths)
+                extra_paths = sorted(p for p in flat if p not in ds)
+                bank_struct = DO.overlay_struct(
+                    flat, delta_paths, extra_paths, bank_size=BANKED_SLOTS)
+                bank_axes = DO.overlay_pspecs(
+                    params_axes, delta_paths, extra_paths, bank=True)
+                bank_sh = tree_shardings(bank_struct, bank_axes, rules,
+                                         mesh)
+                vidx_struct = jax.ShapeDtypeStruct(
+                    (shape.global_batch,), jnp.int32)
+                step_fn = make_banked_decode_step(model)
+                args = (serve_struct, bank_struct, vidx_struct,
+                        token_struct, cache_struct)
+                shardings = (param_sh, bank_sh, token_sh, token_sh,
+                             cache_sh)
+            else:
+                step_fn = make_decode_step(model)
+                args = (serve_struct, token_struct, cache_struct)
+                shardings = (param_sh, token_sh, cache_sh)
 
     jit_kwargs = {"in_shardings": shardings}
     if out_shardings is not None:

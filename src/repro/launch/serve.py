@@ -12,6 +12,15 @@ variants in one decode batch via the overlay bank (requires --mode fused;
 DESIGN.md §9); group batches one variant at a time.  --updates N performs
 N incremental publish_update + hot-swap cycles on the first variant
 mid-workload (DESIGN.md §10), then rolls the last one back.
+
+--mesh DATA,MODEL serves the whole deployment data×model-parallel
+(DESIGN.md §11): base weights and every overlay/bank leaf land
+tensor-parallel over ``model``, decode lanes span ``data``.  Needs
+DATA*MODEL visible devices, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --mode fused --scheduler continuous --mesh 2,2
 """
 from __future__ import annotations
 
@@ -35,6 +44,9 @@ def main():
                     help="incremental update+hot-swap cycles on variant v0")
     ap.add_argument("--store-dir", default=None,
                     help="persist artifacts here (default: in-memory)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve on a (data, model) mesh of this shape "
+                         "(default: single device)")
     args = ap.parse_args()
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
@@ -48,11 +60,20 @@ def main():
     from repro.models.param import split
     from repro.serving import Deployment
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        try:
+            data, model_par = (int(p) for p in args.mesh.split(","))
+        except ValueError:
+            ap.error("--mesh expects DATA,MODEL, e.g. --mesh 2,2")
+        mesh = make_host_mesh(data, model_par)
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    base, param_axes = split(model.init(jax.random.PRNGKey(0)))
 
     def fine_tune(seed: int, scale: float = 0.005):
         key = jax.random.PRNGKey(seed)
@@ -67,7 +88,8 @@ def main():
                      mode=args.mode, scheduler=args.scheduler,
                      batch_size=args.batch, prompt_len=16, max_len=64,
                      max_resident=max_resident,
-                     bank_size=args.variants + 2)
+                     bank_size=args.variants + 2,
+                     mesh=mesh, param_axes=param_axes if mesh else None)
     tunes = {}
     for i in range(args.variants):
         tunes[f"v{i}"] = fine_tune(100 + i)
@@ -102,6 +124,9 @@ def main():
 
     print("metrics:", dep.metrics)
     print("registry:", dep.stats)
+    if mesh is not None and dep.registry.bank is not None:
+        print("bank per-device bytes:",
+              dep.registry.bank.per_device_nbytes())
 
 
 if __name__ == "__main__":

@@ -171,3 +171,137 @@ def bank_set_extra_base(path: str, bank: jax.Array, slot: int,
                         base_leaf: jax.Array) -> jax.Array:
     idx = _bank_slot_index(bank_axis(path), slot)
     return bank.at[idx].set(base_leaf.astype(bank.dtype))
+
+
+# ---------------------------------------------------------------------------
+# mesh sharding of overlays (DESIGN.md §11)
+#
+# Overlay leaves inherit their placement from the base weight they shadow:
+# the packed sign plane keeps the weight's logical axes on every unpacked
+# dim (the packed d_in//8 byte dim is replicated — it is 8x smaller and the
+# fused kernel reads it whole per tile), v_row / v_col follow the single
+# weight axis they scale, extras ARE fine-tuned weight leaves and keep the
+# weight's own axes, and the bank axis resolves to replicated (every device
+# holds every slot's shard of its own weight tile — admission is then a
+# collective-free local scatter).  ``distributed/sharding.py`` owns the
+# logical->mesh mapping; this module only derives the logical axes.
+# ---------------------------------------------------------------------------
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def flatten_axes(param_axes) -> dict:
+    """{dot-path -> logical-axes tuple} view of a ``param.split`` axes
+    tree: ``calibration.flatten_params`` with axis tuples as leaves (they
+    are pytree nodes and would otherwise be exploded)."""
+    from repro.core.calibration import flatten_params
+    return flatten_params(param_axes, is_leaf=_is_axes)
+
+
+def _insert_bank(axes: tuple, path: str) -> tuple:
+    ax = bank_axis(path)
+    return axes[:ax] + ("bank",) + axes[ax:]
+
+
+def entry_axes(weight_axes: tuple, *, path: str = "",
+               bank: bool = False) -> OverlayEntry:
+    """Logical axes for one overlay entry, derived from the shadowed
+    weight's ``(*lead, out_ax, in_ax)`` axes."""
+    *lead, out_ax, in_ax = weight_axes
+    packed = tuple(lead) + (out_ax, None)   # packed byte dim: replicated
+    v_row = tuple(lead) + (out_ax,)
+    v_col = tuple(lead) + (in_ax,)
+    if bank:
+        packed, v_row, v_col = (_insert_bank(t, path)
+                                for t in (packed, v_row, v_col))
+    return OverlayEntry(packed=packed, v_row=v_row, v_col=v_col)
+
+
+def extra_axes(weight_axes: tuple, *, path: str = "",
+               bank: bool = False) -> tuple:
+    """Extras leaves are fine-tuned copies of base leaves: same axes, plus
+    the replicated bank axis when banked."""
+    return _insert_bank(tuple(weight_axes), path) if bank \
+        else tuple(weight_axes)
+
+
+def overlay_pspecs(param_axes, delta_paths, extra_paths=(), *,
+                   bank: bool = False) -> dict:
+    """Logical-axes tree mirroring an overlay (or banked overlay) tree.
+
+    ``param_axes`` is the axes tree from ``models.param.split``;
+    ``delta_paths`` / ``extra_paths`` name the modules the overlay carries
+    (extras ride in the tree only when banked — the per-variant path swaps
+    them into the params view instead).  Resolve against a mesh with
+    ``distributed.sharding.tree_shardings`` (rule "bank" -> replicated).
+    """
+    flat = flatten_axes(param_axes)
+    tree: dict = {}
+    for path in delta_paths:
+        insert_entry(tree, path, entry_axes(flat[path], path=path, bank=bank))
+    for path in extra_paths:
+        insert_entry(tree, path, extra_axes(flat[path], path=path, bank=bank))
+    return tree
+
+
+def overlay_struct(flat_shapes: dict, delta_paths, extra_paths=(), *,
+                   bank_size=None, vec_dtype=jnp.float16) -> dict:
+    """ShapeDtypeStruct tree mirroring an overlay tree (abstract twin of
+    ``overlay_from_deltas`` / a bank — dry-run and in_shardings use).
+
+    ``flat_shapes``: {path -> array or ShapeDtypeStruct} of BASE weights.
+    With ``bank_size`` the leaves grow the bank axis at ``bank_axis(path)``
+    and extras are included (base-dtype, as ``bank_extra_base`` stores
+    them)."""
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+    tree: dict = {}
+    for path in delta_paths:
+        w = flat_shapes[path]
+        lead = w.shape[:-2]
+        d_out, d_in = w.shape[-2], w.shape[-1]
+        packed = lead + (d_out, d_in // 8)
+        v_row = lead + (d_out,)
+        v_col = lead + (d_in,)
+        if bank_size is not None:
+            ax = bank_axis(path)
+            packed, v_row, v_col = (s[:ax] + (bank_size,) + s[ax:]
+                                    for s in (packed, v_row, v_col))
+        insert_entry(tree, path, OverlayEntry(
+            packed=sds(packed, jnp.uint8), v_row=sds(v_row, vec_dtype),
+            v_col=sds(v_col, vec_dtype)))
+    if bank_size is not None:
+        for path in extra_paths:
+            w = flat_shapes[path]
+            ax = bank_axis(path)
+            shape = w.shape[:ax] + (bank_size,) + w.shape[ax:]
+            insert_entry(tree, path, sds(shape, w.dtype))
+    return tree
+
+
+def overlay_shardings(param_axes, flat_shapes: dict, delta_paths,
+                      extra_paths, rules: dict, mesh, *,
+                      bank_size=None) -> dict:
+    """Flat {path -> OverlayEntry-of-NamedSharding | NamedSharding} for
+    every overlay leaf, resolved through the logical rules (the one
+    derivation the sharded bank, the engine in_shardings and the dry-run
+    serving cells all share)."""
+    from repro.distributed.sharding import tree_shardings
+    axes = overlay_pspecs(param_axes, delta_paths,
+                          extra_paths if bank_size is not None else (),
+                          bank=bank_size is not None)
+    struct = overlay_struct(flat_shapes, delta_paths, extra_paths,
+                            bank_size=bank_size)
+    sh_tree = tree_shardings(struct, axes, rules, mesh)
+    paths = list(delta_paths) + (list(extra_paths)
+                                 if bank_size is not None else [])
+    flat: dict = {}
+    for path in paths:
+        node = sh_tree
+        for part in path.split("."):
+            node = node[part]
+        flat[path] = node
+    return flat

@@ -31,6 +31,14 @@ Semantics callers can rely on:
 A ``Deployment`` without a store (``root_dir=None``) keeps versions
 in-memory only — useful for tests and benchmarks; the lifecycle semantics
 are identical, minus crash durability.
+
+Mesh-sharded deployments (DESIGN.md §11): pass ``mesh`` (axes
+("data", "model"), e.g. from ``launch.mesh.make_host_mesh``) plus
+``param_axes`` (the logical-axes tree from ``models.param.split``) — the
+base params are placed tensor-parallel under the serving rules, every
+overlay/bank leaf lands on its derived sharding, and the engine runs
+data×model-parallel step jits.  The control/data-plane surface is
+unchanged.
 """
 from __future__ import annotations
 
@@ -53,7 +61,8 @@ class Deployment:
                  batch_size: int = 4, prompt_len: int = 32,
                  max_len: int = 128, bank_size: int = 8,
                  max_resident: int = 8, max_retries: int = 1,
-                 param_shardings=None, use_kernel: bool = True):
+                 param_shardings=None, use_kernel: bool = True,
+                 mesh=None, param_axes=None):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
         if scheduler == "continuous" and mode != "fused":
@@ -64,11 +73,25 @@ class Deployment:
                 "scheduler='continuous' requires mode='fused' (mixed "
                 "batches serve from the packed overlay bank); use "
                 "scheduler='group' for dense residency")
+        if mesh is not None:
+            if param_axes is None:
+                raise ValueError(
+                    "a sharded deployment needs param_axes (the logical "
+                    "axes tree from models.param.split) with the mesh")
+            import jax
+            from repro.distributed.sharding import rules_for, tree_shardings
+            if param_shardings is None:
+                param_shardings = tree_shardings(
+                    base_params, param_axes, rules_for("decode"), mesh)
+            # the ONE resident base lands tensor-parallel; every variant
+            # (dense copy, fused overlay, bank slot) inherits from it
+            base_params = jax.device_put(base_params, param_shardings)
         self.model = model
         self.registry = VariantRegistry(
             base_params, param_shardings=param_shardings,
             max_resident=max_resident, use_kernel=use_kernel,
-            mode=mode, bank_size=bank_size)
+            mode=mode, bank_size=bank_size, mesh=mesh,
+            param_axes=param_axes)
         if store is None and root_dir is not None:
             store = S.VariantStore(root_dir, base_fp=self.registry.base_fp)
         if store is not None and store.base_fp is None:
@@ -87,7 +110,7 @@ class Deployment:
         self.engine = ServingEngine(
             model, self.registry, batch_size=batch_size,
             prompt_len=prompt_len, max_len=max_len,
-            max_retries=max_retries, scheduler=scheduler)
+            max_retries=max_retries, scheduler=scheduler, mesh=mesh)
 
     # -- control plane -----------------------------------------------------
     def publish(self, name: str, dm: DeltaModel, *,

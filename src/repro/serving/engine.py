@@ -30,6 +30,17 @@ CURRENT version and pins that VERSION KEY for the request's lifetime, so
 a hot-swap (``registry.set_version``) mid-flight leaves running lanes on
 the version they started with while new admissions serve the new one;
 ``Request.served_version`` records the resolution.
+
+Mesh-sharded serving (DESIGN.md §11): with ``mesh`` the engine jits every
+step pair (plain, fused, banked) with EXPLICIT in/out shardings — batch
+rows (tokens, variant_idx, cache act_batch dims, logits) data-parallel so
+the continuous-batching slot lanes span the ``data`` axis, params and
+overlay/bank leaves tensor-parallel on their weight axes (no per-step
+weight collectives: serve rules replicate weights over ``data``).  The
+persistent decode cache is pinned to its sharding via out_shardings, so
+step N+1 sees exactly the layout step N produced — no resharding, no
+recompiles.  Calls run under ``shard_ctx`` so model-internal logical
+constraints activate.
 """
 from __future__ import annotations
 
@@ -41,7 +52,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.distributed.sharding import (resolve_spec, rules_for, shard_ctx,
+                                        tree_shardings)
 from repro.models.model_zoo import Model
 from repro.serving.variants import VariantRegistry
 
@@ -78,12 +92,18 @@ class ServingEngine:
 
     scheduler: "continuous" (mixed-variant slot scheduler over the overlay
     bank) or "group" (grouped-by-variant compatibility mode — required for
-    dense residency)."""
+    dense residency).
+
+    mesh: optional ``jax.sharding.Mesh`` with ("data", "model") axes (and
+    optionally "pod") — every step jit gains explicit in/out shardings
+    (batch data-parallel, weights/overlays model-parallel) and runs under
+    the serving rule context.  Requires registry.param_shardings."""
 
     def __init__(self, model: Model, registry: VariantRegistry, *,
                  batch_size: int = 4, prompt_len: int = 32,
                  max_len: int = 128, max_retries: int = 1,
-                 greedy: bool = True, scheduler: str = "group"):
+                 greedy: bool = True, scheduler: str = "group",
+                 mesh=None):
         if scheduler not in ("group", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.model = model
@@ -93,6 +113,7 @@ class ServingEngine:
         self.max_len = max_len
         self.max_retries = max_retries
         self.scheduler = scheduler
+        self.mesh = mesh
         self._queue: collections.deque[Request] = collections.deque()
         self._done: dict[int, Request] = {}
         self._next_rid = 0
@@ -121,10 +142,41 @@ class ServingEngine:
                                               variant_idx=vidx)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
-        self._prefill = jax.jit(prefill_fn)
-        self._decode = jax.jit(decode_fn)
-        self._prefill_banked = jax.jit(prefill_banked_fn)
-        self._decode_banked = jax.jit(decode_banked_fn)
+        self._fns = {"prefill": prefill_fn, "decode": decode_fn,
+                     "prefill_banked": prefill_banked_fn,
+                     "decode_banked": decode_banked_fn}
+        # arg roles drive the explicit in_shardings on a mesh; vidx shards
+        # exactly like the token vector (one entry per batch lane)
+        self._roles = {"prefill": ("params", "overlay", "batch"),
+                       "decode": ("params", "overlay", "token", "cache"),
+                       "prefill_banked": ("params", "overlay", "token",
+                                          "batch"),
+                       "decode_banked": ("params", "overlay", "token",
+                                         "token", "cache")}
+        self._jits: dict = {}
+        if mesh is None:
+            for kind, fn in self._fns.items():
+                self._jits[kind] = jax.jit(fn)
+        else:
+            if registry.param_shardings is None:
+                raise ValueError(
+                    "a sharded engine needs registry.param_shardings "
+                    "(resolve them with distributed.sharding."
+                    "tree_shardings under the serve rules)")
+            self._rules = rules_for("decode")
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(batch_size, max_len))
+            self._cache_sh = tree_shardings(cache_struct,
+                                            model.cache_pspecs(),
+                                            self._rules, mesh)
+            tok_spec = resolve_spec((batch_size,), ("act_batch",),
+                                    self._rules, mesh)
+            self._tok_sh = NamedSharding(mesh, tok_spec)
+            # prefill logits (B, V): batch rows follow the lanes; the
+            # vocab dim is gathered for the host-side argmax
+            self._logits_sh = NamedSharding(
+                mesh, PartitionSpec(*(list(tok_spec) + [None])))
+            self._batch_axes = model.batch_pspecs("prefill")
         # continuous-scheduler state (persists across run_until_drained
         # calls: the decode batch is a long-lived object)
         self._slots: list[Optional[_Slot]] = [None] * batch_size
@@ -137,6 +189,52 @@ class ServingEngine:
                         "prefills": 0, "failed": 0, "admitted": 0,
                         "retired": 0, "decode_steps": 0,
                         "prefill_seconds": 0.0, "decode_seconds": 0.0}
+
+    # -- sharded step dispatch -----------------------------------------------
+    def _arg_sharding(self, role: str, arg):
+        """Explicit sharding for one step argument by role (mesh mode)."""
+        if role == "params":
+            return self.registry.param_shardings
+        if role == "overlay":
+            # overlay/bank leaves were committed to their derived
+            # placements by loader.device_put_overlay / OverlayBank —
+            # pin exactly those (None for the dense overlay-free trace)
+            return jax.tree.map(lambda l: l.sharding, arg)
+        if role == "token":
+            return self._tok_sh
+        if role == "cache":
+            return self._cache_sh
+        if role == "batch":
+            return {k: NamedSharding(
+                self.mesh, resolve_spec(v.shape, self._batch_axes[k],
+                                        self._rules, self.mesh))
+                for k, v in arg.items()}
+        raise ValueError(role)
+
+    def _call(self, kind: str, *args):
+        """Run one compiled step.  Without a mesh this is the plain jit;
+        with a mesh the jit is built per OVERLAY structure with explicit
+        in/out shardings (batch lanes data-parallel, weights/overlays
+        model-parallel, cache pinned in place) and runs inside the mesh +
+        serving-rules context so logical constraints apply.  The overlay
+        is the only argument whose structure varies between calls of one
+        kind, so the cache key flattens just that tree — not the full
+        params+cache pytrees — on the per-token hot path."""
+        if self.mesh is None:
+            return self._jits[kind](*args)
+        key = (kind, jax.tree_util.tree_structure(args[1]))
+        jitted = self._jits.get(key)
+        if jitted is None:
+            in_sh = tuple(self._arg_sharding(role, arg)
+                          for role, arg in zip(self._roles[kind], args))
+            out_sh = ((self._logits_sh, self._cache_sh)
+                      if kind.startswith("prefill")
+                      else (self._tok_sh, self._cache_sh))
+            jitted = jax.jit(self._fns[kind], in_shardings=in_sh,
+                             out_shardings=out_sh)
+            self._jits[key] = jitted
+        with self.mesh, shard_ctx(self.mesh, self._rules):
+            return jitted(*args)
 
     # -- API -----------------------------------------------------------------
     def submit(self, tokens, variant: str = "__base__",
@@ -231,7 +329,7 @@ class ServingEngine:
             {i: r for i, r in enumerate(group)})
 
         t0 = time.perf_counter()
-        last_logits, cache = self._prefill(params, overlay, batch)
+        last_logits, cache = self._call("prefill", params, overlay, batch)
         jax.block_until_ready(last_logits)
         self.metrics["prefill_seconds"] += time.perf_counter() - t0
         self.metrics["prefills"] += 1
@@ -255,7 +353,8 @@ class ServingEngine:
             if step + 1 >= n_steps:
                 break   # every slot has its full budget: skip the decode
                         # whose output nobody would consume
-            next_tok, cache = self._decode(params, overlay, next_tok, cache)
+            next_tok, cache = self._call("decode", params, overlay,
+                                         next_tok, cache)
         jax.block_until_ready(next_tok)
         self.metrics["decode_seconds"] += time.perf_counter() - t0
 
@@ -350,8 +449,9 @@ class ServingEngine:
             {i: self._slots[i].request for i in newly})
         bank = self.registry.bank.tree if self.registry.bank else None
         t0 = time.perf_counter()
-        last_logits, fresh = self._prefill_banked(
-            self.registry.base_params, bank, jnp.asarray(pvidx), batch)
+        last_logits, fresh = self._call(
+            "prefill_banked", self.registry.base_params, bank,
+            jnp.asarray(pvidx), batch)
         jax.block_until_ready(last_logits)
         self.metrics["prefill_seconds"] += time.perf_counter() - t0
         self.metrics["prefills"] += 1
@@ -416,8 +516,8 @@ class ServingEngine:
             if self._variant_idx_dev is None:
                 self._variant_idx_dev = jnp.asarray(self._variant_idx)
             t0 = time.perf_counter()
-            self._next_tok, self._cache = self._decode_banked(
-                self.registry.base_params, bank,
+            self._next_tok, self._cache = self._call(
+                "decode_banked", self.registry.base_params, bank,
                 self._variant_idx_dev, self._next_tok, self._cache)
             jax.block_until_ready(self._next_tok)
             self.metrics["decode_seconds"] += time.perf_counter() - t0

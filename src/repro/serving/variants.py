@@ -49,14 +49,19 @@ from repro.core.calibration import DeltaModel, flatten_params
 from repro.models import delta_overlay as DO
 
 
-@functools.partial(jax.jit, static_argnames=("vec_dtype",))
 def _bank_write(flat: dict, deltas: dict, extras: dict, slot, *,
                 vec_dtype) -> dict:
     """Write one variant into bank slot ``slot`` as a SINGLE compiled
     update: canonicalise every DeltaEntry (fp16 axis vectors, zeroed
     unselected axis), fp16-round every extras leaf, and scatter them at
     the slot index.  One dispatch per admission instead of a few hundred
-    eager ``.at[].set`` calls — cold-admit latency is part of TTFT."""
+    eager ``.at[].set`` calls — cold-admit latency is part of TTFT.
+
+    Jitted per bank (below) with the bank dict DONATED: admission updates
+    the resident bank in place instead of doubling its HBM footprint, and
+    on a mesh the out_shardings pin every leaf to its derived placement so
+    the scatter runs shard-local (the bank axis is replicated — each
+    device updates its own weight-tile's slot, no collectives)."""
     out = dict(flat)
     for path, e in deltas.items():
         ent = DO.from_delta_entry(e, vec_dtype=vec_dtype)
@@ -74,6 +79,22 @@ def _bank_write(flat: dict, deltas: dict, extras: dict, slot, *,
     return out
 
 
+def _make_bank_write(out_shardings=None):
+    """The donated admission-scatter jit — ONE place states the
+    static/donation contract for both the shared single-device jit and
+    the per-bank mesh jits (which differ only by out_shardings)."""
+    kwargs = {} if out_shardings is None else \
+        {"out_shardings": out_shardings}
+    return jax.jit(_bank_write, static_argnames=("vec_dtype",),
+                   donate_argnames=("flat",), **kwargs)
+
+
+# shared compile cache for every single-device bank (same toy shapes across
+# tests/benchmarks hit one trace); mesh banks build a per-instance jit in
+# ``_ensure_tree`` because their out_shardings are bank-specific
+_bank_write_jit = _make_bank_write()
+
+
 class OverlayBank:
     """Stacked fused residents: one banked overlay tree whose leaves carry a
     leading bank axis of ``size`` slots (DESIGN.md §9).
@@ -87,17 +108,37 @@ class OverlayBank:
 
     The bank is allocated at full size on first admit; resident-byte
     accounting is therefore per-bank, not per-variant — ``nbytes()`` is the
-    device footprint the registry reports.
+    device footprint the registry reports (``per_device_nbytes()`` breaks
+    it down by device on a mesh).
+
+    With ``mesh`` + ``param_axes`` every banked leaf is allocated as a
+    SHARDED array on its derived placement (delta_overlay.overlay_shardings
+    — weight-axis sharded tiles, replicated bank axis) and admission runs
+    as one jitted donated scatter whose out_shardings keep the bank in
+    place (DESIGN.md §11).
     """
 
-    def __init__(self, base_params, size: int, *, vec_dtype=jnp.float16):
+    def __init__(self, base_params, size: int, *, vec_dtype=jnp.float16,
+                 mesh=None, param_axes=None, rules=None):
         if size < 2:
             raise ValueError("bank needs >= 2 slots (base + 1 variant)")
+        if mesh is not None and param_axes is None:
+            raise ValueError("a sharded bank needs param_axes (from "
+                             "models.param.split) alongside the mesh")
         self.size = size
         self.vec_dtype = vec_dtype
+        self.mesh = mesh
+        self._param_axes = param_axes
+        if rules is None and mesh is not None:
+            from repro.distributed.sharding import rules_for
+            rules = rules_for("decode")
+        self._rules = rules
+        self.shardings: Optional[dict] = None   # path -> leaf shardings
         self._base_flat = flatten_params(base_params)
         self._flat: Optional[dict] = None   # path -> banked leaf
         self.tree: Optional[dict] = None    # nested view of _flat
+        self._write = functools.partial(_bank_write_jit,
+                                        vec_dtype=vec_dtype)
         self._slots: dict[str, int] = {}
         self._pins: dict[str, int] = {}
         self._lru: "collections.OrderedDict[str, None]" = \
@@ -122,6 +163,16 @@ class OverlayBank:
         for path in dm.extras:
             flat[path] = DO.bank_extra_base(path, self._base_flat[path],
                                             self.size)
+        if self.mesh is not None:
+            self.shardings = DO.overlay_shardings(
+                self._param_axes, self._base_flat, sorted(dm.deltas),
+                sorted(dm.extras), self._rules, self.mesh,
+                bank_size=self.size)
+            flat = {path: jax.device_put(leaf, self.shardings[path])
+                    for path, leaf in flat.items()}
+            self._write = functools.partial(
+                _make_bank_write(out_shardings=self.shardings),
+                vec_dtype=self.vec_dtype)
         self._flat = flat
         self._template_deltas = set(dm.deltas)
         self._template_extras = set(dm.extras)
@@ -173,9 +224,8 @@ class OverlayBank:
         payload = sum(int(e.packed.size) + 2 * int(e.v_row.size)
                       + 2 * int(e.v_col.size) for e in dm.deltas.values())
         payload += sum(2 * int(v.size) for v in dm.extras.values())
-        self._flat = _bank_write(self._flat, dict(dm.deltas),
-                                 dict(dm.extras), jnp.int32(slot),
-                                 vec_dtype=self.vec_dtype)
+        self._flat = self._write(self._flat, dict(dm.deltas),
+                                 dict(dm.extras), jnp.int32(slot))
         self._slots[name] = slot
         self._lru[name] = None
         self.stats["admits"] += 1
@@ -229,6 +279,20 @@ class OverlayBank:
             return 0
         return DO.overlay_nbytes(self._flat)
 
+    def per_device_nbytes(self) -> dict:
+        """{device -> resident bank bytes} from the actual shard layout —
+        the capacity-planning number on a mesh (each device holds its
+        weight-tile's slice of every slot plus the replicated vectors)."""
+        out: dict = {}
+        if self._flat is None:
+            return out
+        for leaf in jax.tree.leaves(self._flat):
+            for shard in leaf.addressable_shards:
+                key = str(shard.device)
+                out[key] = out.get(key, 0) + (
+                    shard.data.size * shard.data.dtype.itemsize)
+        return out
+
 
 @dataclasses.dataclass
 class _Resident:
@@ -256,11 +320,14 @@ class VariantRegistry:
 
     def __init__(self, base_params, *, param_shardings=None,
                  max_resident: int = 2, use_kernel: bool = True,
-                 mode: str = "dense", bank_size: int = 8):
+                 mode: str = "dense", bank_size: int = 8,
+                 mesh=None, param_axes=None):
         if mode not in ("dense", "fused"):
             raise ValueError(f"unknown residency mode {mode!r}")
         self.base_params = base_params
         self.param_shardings = param_shardings
+        self.mesh = mesh
+        self.param_axes = param_axes
         self.use_kernel = use_kernel
         self.max_resident = max_resident
         self.mode = mode
@@ -445,7 +512,9 @@ class VariantRegistry:
         bank: ``resident_bytes`` tracks the bank allocation (charged when
         the bank grows, not per admitted variant)."""
         if self.bank is None:
-            self.bank = OverlayBank(self.base_params, self.bank_size)
+            self.bank = OverlayBank(self.base_params, self.bank_size,
+                                    mesh=self.mesh,
+                                    param_axes=self.param_axes)
         if nameish == "__base__":
             return 0
         name, version = self._parse(nameish)

@@ -128,3 +128,13 @@ def make_decode_step(model: Model):
     def decode_step(params, token, cache):
         return model.decode_step(params, token, cache)
     return decode_step
+
+
+def make_banked_decode_step(model: Model):
+    """Mixed-variant decode: every batch row fuses its own overlay-bank
+    slot's packed delta (slot 0 = base) — the sharded serving hot path
+    the dry-run decode_banked cells lower (DESIGN.md §11)."""
+    def banked_decode_step(params, bank, variant_idx, token, cache):
+        return model.decode_step(params, token, cache, overlay=bank,
+                                 variant_idx=variant_idx)
+    return banked_decode_step
