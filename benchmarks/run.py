@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   continuous mixed-variant continuous batching vs grouped-by-variant
   update_latency incremental publish_update + hot-swap vs full republish
   sharded_serving banked decode on a host mesh: parity + per-device bytes
+  shard_map_kernels per-shard vs GSPMD-partitioned delta kernels: latency
+           + kernel/token parity at forced 4 host devices (DESIGN.md §12)
   roofline dry-run roofline terms per (arch × shape × mesh)
 
 ``--strict`` exits nonzero when any section errors (CI gate — by default
@@ -66,8 +68,8 @@ def main() -> None:
 
     from benchmarks import (axis_stats, continuous_batching, fused_serving,
                             kernel_bench, load_time, roofline,
-                            sharded_serving, table1_quality, table2_sizes,
-                            update_latency)
+                            shard_map_kernels, sharded_serving,
+                            table1_quality, table2_sizes, update_latency)
     sections = [                                      # cheap first
         ("table2", table2_sizes.run),
         ("kernel", kernel_bench.run),
@@ -79,6 +81,7 @@ def main() -> None:
         ("continuous_batching", continuous_batching.run),
         ("update_latency", update_latency.run),
         ("sharded_serving", sharded_serving.run),
+        ("shard_map_kernels", shard_map_kernels.run),
         ("roofline", roofline.run),
     ]
     if args.sections:

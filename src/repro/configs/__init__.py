@@ -1,9 +1,10 @@
 """Architecture registry + assigned input-shape grid.
 
 ``get_config(arch_id)`` returns the full published config; ``SHAPES`` is the
-assigned shape set (incl. the banked mixed-variant decode serving shape).
-``cells()`` enumerates the 50 (arch × shape) dry-run cells, with per-cell
-eligibility (see DESIGN.md §4 for skip rationale).
+assigned shape set (incl. the fused single-variant and banked mixed-variant
+decode serving shapes).  ``cells()`` enumerates the 60 (arch × shape)
+dry-run cells, with per-cell eligibility (see DESIGN.md §4 for skip
+rationale).
 """
 from __future__ import annotations
 
@@ -44,6 +45,9 @@ class ShapeSpec:
     kind: str  # "train" | "prefill" | "decode"
     banked: bool = False  # decode against a banked overlay (mixed-variant
                           # serving cell — DESIGN.md §11); bank size below
+    fused: bool = False   # decode against ONE packed overlay (single-
+                          # variant on-the-fly serving cell: the shard_map
+                          # delta-kernel hot path — DESIGN.md §12)
 
 BANKED_SLOTS = 4   # dry-run bank size: base + 3 resident variants
 
@@ -52,6 +56,8 @@ SHAPES = {
     "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
     "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "decode_fused": ShapeSpec("decode_fused", 32768, 128, "decode",
+                              fused=True),
     "decode_banked": ShapeSpec("decode_banked", 32768, 128, "decode",
                                banked=True),
     "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
@@ -69,7 +75,7 @@ def cell_skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
 
 
 def cells() -> Iterator[tuple[str, str, Optional[str]]]:
-    """Yield (arch, shape, skip_reason) for all 50 cells."""
+    """Yield (arch, shape, skip_reason) for all 60 cells."""
     for arch in ARCHS:
         cfg = get_config(arch)
         for shape in SHAPES.values():

@@ -34,38 +34,60 @@ from repro.core.calibration import (DeltaModel, flatten_params,
                                     unflatten_like)
 
 
-def _reconstruct_entry(entry, w_base: jax.Array, use_kernel: bool):
-    """Dense Ŵ from one (possibly stacked) entry."""
+def _reconstruct_entry(entry, w_base: jax.Array, use_kernel: bool,
+                       waxes=None):
+    """Dense Ŵ from one (possibly stacked) entry.
+
+    Unstacked (2-D) entries pass ``waxes`` through to the kernel wrapper,
+    so inside a mesh context the reconstruction lowers as a shard_map'd
+    per-tile unpack (each device rebuilds its own Ŵ shard —
+    kernels/dispatch.py).  STACKED entries vmap over the lead dims, and
+    vmap-of-shard_map is not a supported composition, so they pin the
+    global kernel (GSPMD partitions it exactly as before)."""
     if use_kernel and not entry.scalar:
+        from repro.kernels import dispatch as D
         from repro.kernels import ops as K
 
-        def one(packed, vr, vc, ur, wb):
+        def one(packed, vr, vc, ur, wb, waxes=None):
             w_r = K.unpack_apply(packed, vr, wb, mode="row",
-                                 out_dtype=jnp.float32)
+                                 out_dtype=jnp.float32, waxes=waxes)
             w_c = K.unpack_apply(packed, vc, wb, mode="col",
-                                 out_dtype=jnp.float32)
+                                 out_dtype=jnp.float32, waxes=waxes)
             return jnp.where(ur, w_r, w_c).astype(wb.dtype)
 
+        if w_base.ndim == 2:
+            return one(entry.packed, entry.v_row.astype(jnp.float32),
+                       entry.v_col.astype(jnp.float32), entry.use_row,
+                       w_base, waxes=waxes)
         fn = one
         for _ in range(w_base.ndim - 2):
             fn = jax.vmap(fn)
-        return fn(entry.packed, entry.v_row.astype(jnp.float32),
-                  entry.v_col.astype(jnp.float32), entry.use_row, w_base)
+        with D.no_dispatch():
+            return fn(entry.packed, entry.v_row.astype(jnp.float32),
+                      entry.v_col.astype(jnp.float32), entry.use_row, w_base)
     return entry.reconstruct(w_base)
 
 
 def apply_artifact(base_params, dm: DeltaModel, *,
-                   param_shardings=None, use_kernel: bool = True):
+                   param_shardings=None, param_axes=None,
+                   use_kernel: bool = True):
     """Materialise fine-tuned params on device.
 
     param_shardings: optional tree matching base_params — packed buffers
     are device_put with the matching sharding BEFORE the fused unpack, so
     the kernel runs sharded (one transfer per module, paper-faithful).
-    Returns (params, stats).
+    param_axes: optional logical-axes tree (models.param.split) — threads
+    each weight's axes into the unpack kernel so that, inside a mesh
+    context, unstacked reconstructions lower per-shard under shard_map
+    (kernels/dispatch.py).  Returns (params, stats).
     """
     base_flat = flatten_params(base_params)
     shard_flat = (flatten_params(param_shardings)
                   if param_shardings is not None else None)
+    axes_flat = None
+    if param_axes is not None:
+        from repro.models.delta_overlay import flatten_axes
+        axes_flat = flatten_axes(param_axes)
     t0 = time.perf_counter()
     transferred = 0
     out = {}
@@ -81,7 +103,9 @@ def apply_artifact(base_params, dm: DeltaModel, *,
                             v_row=e.v_row, v_col=e.v_col,
                             use_row=e.use_row, scalar=e.scalar)
             transferred += e.packed.size + 2 * (e.v_row.size + e.v_col.size)
-            out[path] = _reconstruct_entry(e, wb, use_kernel)
+            out[path] = _reconstruct_entry(
+                e, wb, use_kernel,
+                waxes=axes_flat.get(path) if axes_flat else None)
         elif path in dm.extras:
             v = dm.extras[path].astype(wb.dtype)
             if shard_flat is not None:
@@ -178,36 +202,24 @@ def fused_resident_bytes(base_params, params_view, overlay) -> int:
 
 def _mask_sharding(weight_sharding, mask_ndim: int):
     """Packed mask shards like the weight on all dims except the packed
-    last dim (d_in/8): keep the weight's spec for leading dims, replicate
-    the packed dim if the weight's d_in shard doesn't divide it."""
-    try:
-        spec = weight_sharding.spec
-        parts = list(spec) + [None] * (mask_ndim - len(spec))
-        parts = parts[:mask_ndim]
-        parts[-1] = None  # packed byte dim: replicate (8x smaller)
-        from jax.sharding import NamedSharding, PartitionSpec
-        return NamedSharding(weight_sharding.mesh, PartitionSpec(*parts))
-    except Exception:
-        return weight_sharding
+    last dim (d_in/8; replicated — 8x smaller).  Thin delegate over the
+    ONE shared spec-surgery derivation in ``models/delta_overlay.
+    entry_shardings_from_weight``."""
+    from repro.models.delta_overlay import entry_shardings_from_weight
+    ent = entry_shardings_from_weight(weight_sharding, mask_ndim)
+    return weight_sharding if ent is None else ent.packed
 
 
 def _vec_shardings(weight_sharding, w_ndim: int):
-    """(v_row, v_col) shardings from the weight's: each axis vector keeps
-    the spec entries of the weight dims it is a copy of — (lead..., d_out)
-    for v_row, (lead..., d_in) for v_col.  Transferring the weight's
-    resolved allocation verbatim matches the logical derivation in
-    ``models/delta_overlay.entry_axes`` (tests/test_sharded_serving.py
-    asserts the equivalence); (None, None) when the sharding carries no
-    inspectable spec (single-device placements)."""
-    try:
-        spec = list(weight_sharding.spec) + [None] * w_ndim
-        spec = spec[:w_ndim]
-        from jax.sharding import NamedSharding, PartitionSpec
-        mesh = weight_sharding.mesh
-        return (NamedSharding(mesh, PartitionSpec(*spec[:-1])),
-                NamedSharding(mesh, PartitionSpec(*(spec[:-2] + spec[-1:]))))
-    except Exception:
-        return None, None
+    """(v_row, v_col) shardings from the weight's — each axis vector keeps
+    the spec entries of the weight dims it is a copy of.  Same shared
+    derivation (``delta_overlay.entry_shardings_from_weight``) the update
+    path uses, matching the logical derivation in ``entry_axes``
+    (tests/test_sharded_serving.py asserts the equivalence); (None, None)
+    when the sharding carries no inspectable spec."""
+    from repro.models.delta_overlay import entry_shardings_from_weight
+    ent = entry_shardings_from_weight(weight_sharding, w_ndim)
+    return (None, None) if ent is None else (ent.v_row, ent.v_col)
 
 
 # ---------------------------------------------------------------------------
@@ -241,8 +253,8 @@ def _patch_extra(arr, xr):
     return _xor16(arr, xr).astype(jnp.float16)
 
 
-def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict
-                 ) -> DeltaModel:
+def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict,
+                 *, param_shardings=None) -> DeltaModel:
     """Materialise the NEXT version of a variant from its parent plus a
     decoded update patch — one jitted op per module, no disk round-trip
     through a full artifact.
@@ -256,11 +268,28 @@ def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict
     Sharded parents stay sharded: each XOR buffer is placed onto its
     parent leaf's sharding before the jitted patch, so the update applies
     shard-local (no replicated wire operand, outputs inherit the parent
-    placement — DESIGN.md §11)."""
+    placement — DESIGN.md §11).  With ``param_shardings`` (a tree or flat
+    map of the shadowed BASE weights' shardings) host-resident parents are
+    additionally lifted onto the placements derived by the shared
+    spec-surgery helper ``delta_overlay.entry_shardings_from_weight`` —
+    the same derivation ``device_put_overlay`` transfers with — so a
+    patched variant starts life sharded instead of being re-laid-out at
+    its first serve."""
+    from repro.models.delta_overlay import entry_shardings_from_weight
+    shard_flat = (flatten_params(param_shardings)
+                  if param_shardings is not None else None)
     deltas = dict(dm.deltas)
     extras = dict(dm.extras)
     for path, p in delta_patches.items():
         e = deltas[path]
+        if shard_flat is not None and path in shard_flat and not e.scalar:
+            ent_sh = entry_shardings_from_weight(shard_flat[path],
+                                                 e.packed.ndim)
+            if ent_sh is not None:
+                e = type(e)(packed=jax.device_put(e.packed, ent_sh.packed),
+                            v_row=jax.device_put(e.v_row, ent_sh.v_row),
+                            v_col=jax.device_put(e.v_col, ent_sh.v_col),
+                            use_row=e.use_row, scalar=e.scalar)
         packed, v_row, v_col, use_row = _patch_entry(
             e.packed, e.v_row, e.v_col, e.use_row,
             _wire(p["packed"], e.packed), _wire(p["v_row"], e.v_row),
@@ -268,7 +297,10 @@ def apply_update(dm: DeltaModel, delta_patches: dict, extras_patches: dict
         deltas[path] = type(e)(packed=packed, v_row=v_row, v_col=v_col,
                                use_row=use_row, scalar=e.scalar)
     for path, xr in extras_patches.items():
-        extras[path] = _patch_extra(extras[path], _wire(xr, extras[path]))
+        like = extras[path]
+        if shard_flat is not None and path in shard_flat:
+            like = jax.device_put(like, shard_flat[path])
+        extras[path] = _patch_extra(like, _wire(xr, like))
     return DeltaModel(deltas=deltas, extras=extras)
 
 

@@ -341,11 +341,17 @@ class VariantStore:
     INDEX = "versions.json"
 
     def __init__(self, root, *, base_fp: Optional[str] = None,
-                 cache_versions: int = 4):
+                 cache_versions: int = 4, param_shardings=None):
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.base_fp = base_fp
         self.cache_versions = max(1, cache_versions)
+        # optional base-weight shardings tree (sharded deployments set it
+        # — serving/api.Deployment): chain-walk patches then apply on the
+        # derived per-leaf placements (loader.apply_update), so a freshly
+        # materialised version starts life sharded instead of being
+        # re-laid-out at its first serve
+        self.param_shardings = param_shardings
         self._cache: "collections.OrderedDict[tuple, DeltaModel]" = \
             collections.OrderedDict()
 
@@ -514,7 +520,8 @@ class VariantStore:
                         f"patch built for base "
                         f"{manifest['base_fingerprint']}, got {self.base_fp}")
                 dm = L.apply_update(self._cache[(name, int(info["parent"]))],
-                                    dpatch, epatch)
+                                    dpatch, epatch,
+                                    param_shardings=self.param_shardings)
                 if verify:
                     self._verify_patched(manifest, dm, vdir)
             self._cache[(name, step)] = dm

@@ -175,6 +175,15 @@ def active_mesh() -> Optional[Mesh]:
     return st[0] if st else None
 
 
+def active_rules() -> Optional[dict]:
+    """Rule set of the active shard_ctx (None when inactive).  The kernel
+    dispatch layer (kernels/dispatch.py) reads the pair (active_mesh,
+    active_rules) at trace time to decide whether a delta GEMM lowers as a
+    per-shard shard_map'd kernel or stays on the global GSPMD path."""
+    st = getattr(_ctx, "state", None)
+    return st[1] if st else None
+
+
 def ctx_axis_size(name: str) -> Optional[int]:
     """Size of a mesh axis in the active context (None when inactive or the
     axis is absent).  Lets model code pick sharding strategy by

@@ -1,0 +1,365 @@
+"""Partitioned kernel dispatch: per-shard Pallas delta GEMMs (DESIGN.md §12).
+
+The sharded serving path (DESIGN.md §11) jits whole decode steps with
+explicit in/out shardings and lets GSPMD partition everything inside —
+including the fused delta kernels.  That works for the interpret-mode (CPU)
+lowering, but on a real TPU mesh a ``pl.pallas_call`` is a single opaque
+custom call: GSPMD cannot slice into it, so the global kernel would force
+full all-gathers of the very weight tiles the mesh exists to split.  This
+module is the explicit alternative: wrap each fused delta GEMM in
+``shard_map`` so every device runs the Pallas kernel on its OWN weight /
+overlay tile, with block sizes picked from shard-local dims and the one
+required collective (a psum over the contracted model axis, for
+column-sharded weights) stated in the open.
+
+Axis derivation (one source of truth, shared with the storage layer):
+
+* the caller passes the shadowed weight's logical axes ``waxes`` (the same
+  ``(*lead, out_ax, in_ax)`` tuples ``models/param.py`` declares and
+  ``delta_overlay.entry_axes`` consumes);
+* ``resolve_spec`` maps them onto the active mesh under the active rule
+  set — exactly the resolution that placed the weight, overlay and bank
+  leaves on device, so shard_map's in_specs describe layouts the operands
+  already have (no resharding on the hot path);
+* the packed sign plane is STORED with its byte dim replicated
+  (``entry_axes`` — it is 8x smaller than the weight), but when the
+  weight's in-axis is model-sharded the in_specs here slice that byte dim
+  to the shard: each device reads only its K-tile's bytes.
+
+Activation: the dispatch keys off the ambient ``shard_ctx`` (mesh + rules
+— serving/engine.py already traces every sharded step inside it), so ops
+wrappers route here automatically on a mesh and fall back to the global
+jit path single-device.  ``no_dispatch()`` restores the PR-4 GSPMD
+behaviour for A/B parity and latency comparisons
+(benchmarks/shard_map_kernels.py; engine ``kernel_dispatch="gspmd"``).
+
+Fallback contract: every entry point returns ``None`` when a per-shard
+lowering is not possible — unknown weight axes, a shard-local K tile that
+is not a multiple of the packing width (``_pick_block`` now refuses those
+instead of silently picking a global-only block), or nothing to shard —
+and the ops wrapper then serves the global kernel unchanged.  Dispatch is
+an optimisation layer: it must never change results, only layouts.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+PACK = 8
+
+_local = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# activation
+# ---------------------------------------------------------------------------
+
+def state() -> Optional[tuple]:
+    """(mesh, rules) when per-shard dispatch should engage, else None.
+
+    Reads the ambient shard_ctx at TRACE time — the sharded engine and the
+    dry-run both lower their step jits inside ``with mesh, shard_ctx(...)``,
+    so kernels traced there see the pair; tier-1 single-device paths see
+    None and keep the global jit wrappers byte-for-byte unchanged."""
+    if getattr(_local, "off", 0):
+        return None
+    from repro.distributed.sharding import active_mesh, active_rules
+    mesh = active_mesh()
+    rules = active_rules()
+    if mesh is None or rules is None:
+        return None
+    return mesh, rules
+
+
+@contextlib.contextmanager
+def no_dispatch():
+    """Force the global (GSPMD-partitioned) kernel path inside an active
+    mesh context — the PR-4 baseline the per-shard path is compared
+    against, and the escape hatch for callers that vmap over kernels
+    (vmap-of-shard_map is not a supported composition here)."""
+    prev = getattr(_local, "off", 0)
+    _local.off = prev + 1
+    try:
+        yield
+    finally:
+        _local.off = prev
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def _names(part) -> tuple:
+    """Mesh-axis names of one PartitionSpec entry (None -> ())."""
+    if part is None:
+        return ()
+    return part if isinstance(part, tuple) else (part,)
+
+
+def _size(mesh, part) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[n] for n in _names(part))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Resolved partitioning of one fused delta GEMM.
+
+    ``m_part``: mesh axes of the flattened batch rows (data-parallel lanes);
+    ``o_part`` / ``i_part``: mesh axes of the weight's out / in dim — at
+    most one is non-None (``resolve_spec`` never assigns a mesh axis
+    twice); ``psum_axes``: contracted axes to psum over (non-empty exactly
+    when the in dim is sharded, i.e. each shard holds partial sums)."""
+    m_part: object
+    o_part: object
+    i_part: object
+
+    @property
+    def psum_axes(self) -> tuple:
+        return _names(self.i_part)
+
+
+def plan_matmul(mesh, rules: dict, waxes, m: Optional[int], n: int,
+                k: int) -> Optional[Plan]:
+    """Partitioning plan for y[m, n] = x[m, k] @ Ŵ[n, k]ᵀ, or None when
+    the per-shard path cannot run (caller falls back to the global
+    kernel).  ``waxes`` are the weight's logical axes (last two used);
+    ``m=None`` plans weight-only ops (unpack_apply) with no batch dim."""
+    if waxes is None or len(waxes) < 2:
+        return None
+    from repro.distributed.sharding import resolve_spec
+    o_part, i_part = resolve_spec((n, k), tuple(waxes[-2:]), rules, mesh)
+    m_part = None
+    if m is not None:
+        m_part = resolve_spec((m,), ("act_batch",), rules, mesh)[0]
+        if set(_names(m_part)) & (set(_names(o_part)) | set(_names(i_part))):
+            m_part = None       # pathological rule set: batch wins nothing
+    if i_part is not None and (k // _size(mesh, i_part)) % PACK:
+        # the shard-local K tile (and its packed byte dim) would not align
+        # to the packing width — _pick_block rightly refuses such dims, so
+        # this matmul stays on the global path
+        return None
+    if m_part is None and o_part is None and i_part is None:
+        return None             # fully replicated: global path IS local
+    return Plan(m_part=m_part, o_part=o_part, i_part=i_part)
+
+
+# compiled shard_map callables, memoized per (op kind, mesh, plan, operand
+# shapes/dtypes, statics): every entry point below builds a FRESH closure,
+# so without this cache eager callers (e.g. the registry's mesh dense
+# reconstruction) would re-trace and re-lower on every call — jit'ing the
+# shard_map and keying on everything the trace depends on restores the
+# compile-once behaviour of the global @jax.jit wrappers.  Mesh and Plan
+# are hashable; shapes/dtypes/statics are plain tuples.
+_compiled: dict = {}
+
+
+def _cached_jit(key, build):
+    fn = _compiled.get(key)
+    if fn is None:
+        fn = jax.jit(build())
+        _compiled[key] = fn
+    return fn
+
+
+def _avals(*arrays) -> tuple:
+    return tuple((tuple(a.shape), jnp.dtype(a.dtype).name) for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# shard_map'd entry points (ops.py routes here; every one may return None)
+# ---------------------------------------------------------------------------
+
+def bitlinear_axes(st, x: jax.Array, packed: jax.Array, v_row: jax.Array,
+                   v_col: jax.Array, w_base: jax.Array,
+                   waxes) -> Optional[jax.Array]:
+    """shard_map'd fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ."""
+    mesh, rules = st
+    *lead, k = x.shape
+    n = w_base.shape[0]
+    x2 = x.reshape(-1, k)
+    plan = plan_matmul(mesh, rules, waxes, x2.shape[0], n, k)
+    if plan is None:
+        return None
+    mp, op, ip = plan.m_part, plan.o_part, plan.i_part
+
+    def shard_fn(x2, pk, vr, vc, wb):
+        # import from the SUBMODULES directly: the kernels package
+        # re-exports same-named jitted functions over the module attrs
+        from repro.kernels.bitlinear import bitlinear_axes_p
+        import repro.kernels.ops as O
+        lm, lk = x2.shape
+        ln = wb.shape[0]
+        y = bitlinear_axes_p(
+            x2, pk, vr.reshape(ln, 1), vc.reshape(1, lk), wb,
+            block_m=O._pick_block(lm, O._TILE_M),
+            block_n=O._pick_block(ln, O._TILE_N),
+            block_k=O._pick_block(lk, O._TILE_K, multiple=PACK),
+            interpret=O._interpret())
+        if plan.psum_axes:
+            y = jax.lax.psum(y, plan.psum_axes)
+        return y
+
+    vr = v_row.reshape(n)
+    vc = v_col.reshape(k)
+    fn = _cached_jit(
+        ("axes", mesh, plan, _avals(x2, packed, vr, vc, w_base)),
+        lambda: shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(mp, ip), P(op, ip), P(op), P(ip), P(op, ip)),
+            out_specs=P(mp, op),    # op is None whenever ip carried model
+            check_rep=False))
+    y = fn(x2, packed, vr, vc, w_base)
+    return y.astype(x.dtype).reshape(*lead, n)
+
+
+def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
+                          packed: jax.Array, v_row: jax.Array,
+                          v_col: jax.Array, w_base: jax.Array,
+                          waxes) -> Optional[jax.Array]:
+    """shard_map'd mixed-variant fused GEMM: overlay leaves carry a leading
+    (replicated) bank axis; each device gathers its rows' slots from its
+    OWN weight tile's bank — admission stays collective-free and so does
+    the per-row gather."""
+    mesh, rules = st
+    *lead, k = x.shape
+    n = w_base.shape[0]
+    nb = packed.shape[0]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    plan = plan_matmul(mesh, rules, waxes, m, n, k)
+    if plan is None:
+        return None
+    mp, op, ip = plan.m_part, plan.o_part, plan.i_part
+    import repro.kernels.ops as _O
+    vidx2 = _O.flatten_vidx(variant_idx, tuple(lead)).reshape(m, 1)
+
+    def shard_fn(x2, vi, pk, vr, vc, wb):
+        from repro.kernels.bitlinear import bitlinear_axes_banked_p
+        import repro.kernels.ops as O
+        lm, lk = x2.shape
+        ln = wb.shape[0]
+        y = bitlinear_axes_banked_p(
+            x2, vi, pk, vr.reshape(nb, ln, 1), vc.reshape(nb, 1, lk), wb,
+            block_m=O._pick_block(lm, O._TILE_BANKED_M),
+            block_n=O._pick_block(ln, O._TILE_BANKED_N),
+            block_k=O._pick_block(lk, O._TILE_BANKED_K, multiple=PACK),
+            interpret=O._interpret())
+        if plan.psum_axes:
+            y = jax.lax.psum(y, plan.psum_axes)
+        return y
+
+    pk = packed.reshape(nb, n, k // PACK)
+    vr = v_row.reshape(nb, n)
+    vc = v_col.reshape(nb, k)
+    fn = _cached_jit(
+        ("banked", mesh, plan, _avals(x2, vidx2, pk, vr, vc, w_base)),
+        lambda: shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(mp, ip), P(mp, None), P(None, op, ip), P(None, op),
+                      P(None, ip), P(op, ip)),
+            out_specs=P(mp, op),
+            check_rep=False))
+    y = fn(x2, vidx2, pk, vr, vc, w_base)
+    return y.astype(x.dtype).reshape(*lead, n)
+
+
+def bitlinear_axes_stacked(st, xe: jax.Array, entry, w: jax.Array,
+                           waxes) -> Optional[jax.Array]:
+    """shard_map'd per-expert fused GEMMs: xe (E, M, D) · entry leaves
+    (E, F, D/8)/(E, F)/(E, D) · w (E, F, D) -> (E, M, F).
+
+    The MoE expert stacks shard their EXPERT dim over the model axis, so
+    the per-shard body vmaps the 2-D kernel over the local experts —
+    shard_map(vmap(kernel)), the composition that works, instead of
+    vmap(shard_map(kernel)), which does not.  Falls back through the same
+    plan contract when experts don't divide (then ffn/embed may carry the
+    axis and the contraction psums)."""
+    mesh, rules = st
+    if waxes is None or len(waxes) != 3:
+        return None
+    from repro.distributed.sharding import resolve_spec
+    e, m, d = xe.shape
+    f = w.shape[1]
+    ep, fp, dp = resolve_spec((e, f, d), tuple(waxes), rules, mesh)
+    if dp is not None and (d // _size(mesh, dp)) % PACK:
+        return None
+    if ep is None and fp is None and dp is None:
+        return None
+    psum_axes = _names(dp)
+
+    def shard_fn(xl, pk, vr, vc, wb):
+        from repro.kernels.bitlinear import bitlinear_axes_p
+        import repro.kernels.ops as O
+        _, lm, ld = xl.shape
+        lf = wb.shape[1]
+        bm = O._pick_block(lm, O._TILE_M)
+        bn = O._pick_block(lf, O._TILE_N)
+        bk = O._pick_block(ld, O._TILE_K, multiple=PACK)
+
+        def one(x2, p2, r2, c2, w2):
+            return bitlinear_axes_p(
+                x2, p2, r2.reshape(lf, 1), c2.reshape(1, ld), w2,
+                block_m=bm, block_n=bn, block_k=bk,
+                interpret=O._interpret())
+
+        y = jax.vmap(one)(xl, pk, vr, vc, wb)
+        if psum_axes:
+            y = jax.lax.psum(y, psum_axes)
+        return y
+
+    fn = _cached_jit(
+        ("stacked", mesh, (ep, fp, dp),
+         _avals(xe, entry.packed, entry.v_row, entry.v_col, w)),
+        lambda: shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(ep, None, dp), P(ep, fp, dp), P(ep, fp), P(ep, dp),
+                      P(ep, fp, dp)),
+            out_specs=P(ep, None, fp),
+            check_rep=False))
+    y = fn(xe, entry.packed, entry.v_row, entry.v_col, w)
+    return y.astype(xe.dtype)
+
+
+def unpack_apply(st, packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                 mode: str, out_dtype, waxes) -> Optional[jax.Array]:
+    """shard_map'd Ŵ = v ⊙ unpack(B) + W_b: pure per-tile reconstruction,
+    no contraction — every shard rebuilds exactly its own weight tile."""
+    mesh, rules = st
+    n, k = w_base.shape
+    plan = plan_matmul(mesh, rules, waxes, None, n, k)
+    if plan is None:
+        return None
+    op, ip = plan.o_part, plan.i_part
+    v_spec = {"row": P(op, None), "col": P(None, ip),
+              "scalar": P(None, None)}[mode]
+
+    def shard_fn(pk, v2, wb):
+        import repro.kernels.ops as O
+        from repro.kernels.unpack_apply import unpack_apply_p
+        ln, lk = wb.shape
+        return unpack_apply_p(
+            pk, v2, wb,
+            block_m=O._pick_block(ln, O._TILE_M),
+            block_n=O._pick_block(lk, O._TILE_N, multiple=PACK),
+            out_dtype=out_dtype, interpret=O._interpret())
+
+    from repro.kernels.ops import _v2d
+    v2 = _v2d(v, mode, n, k)
+    fn = _cached_jit(
+        ("unpack", mesh, plan, mode, jnp.dtype(out_dtype).name,
+         _avals(packed, v2, w_base)),
+        lambda: shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(op, ip), v_spec, P(op, ip)),
+            out_specs=P(op, ip),
+            check_rep=False))
+    return fn(packed, v2, w_base)

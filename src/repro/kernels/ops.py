@@ -3,6 +3,16 @@
 Handles: per-axis-mode v reshaping, block-size selection (hardware-aligned
 where the shape allows, divisor fallback otherwise), interpret-mode fallback
 on CPU hosts (this container), and output dtype casting.
+
+Partitioned execution (DESIGN.md §12): inside an active mesh context
+(``distributed.sharding.shard_ctx`` — the sharded engine and the dry-run
+trace there) the delta-GEMM wrappers route through
+``kernels/dispatch.py``, which lowers them as shard_map'd per-shard
+kernels with block sizes picked from SHARD-LOCAL dims; the caller passes
+the shadowed weight's logical axes via ``waxes`` to drive the spec
+derivation.  Without a mesh — or when the dispatcher declines (unknown
+axes, packing-width misalignment) — the original global jit path runs
+unchanged, so single-device tier-1 behaviour is identical.
 """
 from __future__ import annotations
 
@@ -12,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bitlinear as _bl
+from repro.kernels import dispatch as _dp
 from repro.kernels import unpack_apply as _ua
 
 PACK = 8
@@ -35,13 +46,45 @@ def _interpret() -> bool:
 
 def _pick_block(dim: int, target: int, multiple: int = 1) -> int:
     """Largest divisor of ``dim`` that is <= target and a multiple of
-    ``multiple``; falls back to ``dim`` itself (always valid)."""
-    best = dim
+    ``multiple``.
+
+    When ``dim % multiple == 0`` a valid block always exists (``multiple``
+    itself divides).  Otherwise NO block satisfies the kernels' divisibility
+    asserts — the old fallback returned ``dim`` itself, which is only valid
+    for global shapes and silently mis-sized blocks for shard-local dims
+    that are not packing-width multiples (e.g. the packed byte dim after an
+    8-way model split) — so refuse loudly; the dispatch planner checks
+    alignment up front and keeps such matmuls on the global path."""
+    if dim % multiple:
+        raise ValueError(
+            f"no valid block for dim={dim}: not a multiple of {multiple} "
+            "(shard-local kernel dims must stay aligned to the packing "
+            "width; kernels/dispatch.py falls back to the global path "
+            "for such splits)")
     for cand in range(min(dim, target), 0, -1):
         if dim % cand == 0 and cand % multiple == 0:
-            best = cand
-            break
-    return best
+            return cand
+    # only reachable when multiple > target: no divisor <= target can be a
+    # multiple, so take the smallest VALID block (divides dim, aligned)
+    # rather than an oversized dim-sized one
+    return multiple
+
+
+def flatten_vidx(variant_idx: jax.Array, lead: tuple) -> jax.Array:
+    """Per-row variant indices -> flattened batch rows (m,) int32.
+
+    ``variant_idx`` has shape ``lead`` (one slot per row) or ``(lead[0],)``
+    (broadcast over the remaining lead dims).  The ONE definition of the
+    banked vidx convention — both the global jit path and the shard_map
+    dispatch (kernels/dispatch.py) flatten through here, so the two
+    lowerings can never drift apart."""
+    import math
+    m = math.prod(lead)
+    if variant_idx.shape == tuple(lead):
+        return variant_idx.astype(jnp.int32).reshape(m)
+    return jnp.broadcast_to(
+        variant_idx.reshape(variant_idx.shape[0], *([1] * (len(lead) - 1))),
+        tuple(lead)).astype(jnp.int32).reshape(m)
 
 
 def _v2d(v: jax.Array, mode: str, d_out: int, d_in: int) -> jax.Array:
@@ -57,17 +100,33 @@ def _v2d(v: jax.Array, mode: str, d_out: int, d_in: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "out_dtype"))
-def unpack_apply(packed: jax.Array, v: jax.Array, w_base: jax.Array,
-                 mode: str = "row", out_dtype=None) -> jax.Array:
-    """Production Ŵ = v ⊙ unpack(B) + W_b (loader hot path)."""
+def _unpack_apply_global(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                         mode: str, out_dtype) -> jax.Array:
     d_out, d_in = w_base.shape
-    out_dtype = out_dtype or w_base.dtype
     bm = _pick_block(d_out, _TILE_M)
     bn = _pick_block(d_in, _TILE_N, multiple=PACK)
     return _ua.unpack_apply_p(
         packed, _v2d(v, mode, d_out, d_in), w_base,
         block_m=bm, block_n=bn, out_dtype=out_dtype,
         interpret=_interpret())
+
+
+def unpack_apply(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+                 mode: str = "row", out_dtype=None,
+                 waxes=None) -> jax.Array:
+    """Production Ŵ = v ⊙ unpack(B) + W_b (loader hot path).
+
+    ``waxes`` (the weight's logical axes) + an active mesh context lower
+    this as a shard_map'd per-tile reconstruction — each device rebuilds
+    only its own Ŵ shard; otherwise the global jit path runs."""
+    out_dtype = out_dtype or w_base.dtype
+    st = _dp.state()
+    if st is not None and waxes is not None:
+        y = _dp.unpack_apply(st, packed, v, w_base, mode, out_dtype, waxes)
+        if y is not None:
+            return y
+    return _unpack_apply_global(packed, v, w_base, mode=mode,
+                                out_dtype=out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_offset",
@@ -95,16 +154,8 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 @jax.jit
-def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
-                   v_col: jax.Array, w_base: jax.Array) -> jax.Array:
-    """Fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ.
-
-    Effective scale v[n,k] = v_row[n] + v_col[k]; the on-the-fly serving
-    overlay zeroes the unselected axis vector per matrix, so this one
-    entry point covers row-, col- and scalar-scaled deltas with no static
-    mode argument (the axis choice stays data, scan-able over layers).
-    x may carry leading batch dims; fp32 accumulate, cast back to x.dtype.
-    """
+def _bitlinear_axes_global(x: jax.Array, packed: jax.Array, v_row: jax.Array,
+                           v_col: jax.Array, w_base: jax.Array) -> jax.Array:
     *lead, k_dim = x.shape
     n, _ = w_base.shape
     x2 = x.reshape(-1, k_dim)
@@ -118,10 +169,54 @@ def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
     return y.astype(x.dtype).reshape(*lead, n)
 
 
+def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
+                   v_col: jax.Array, w_base: jax.Array,
+                   waxes=None) -> jax.Array:
+    """Fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ.
+
+    Effective scale v[n,k] = v_row[n] + v_col[k]; the on-the-fly serving
+    overlay zeroes the unselected axis vector per matrix, so this one
+    entry point covers row-, col- and scalar-scaled deltas with no static
+    mode argument (the axis choice stays data, scan-able over layers).
+    x may carry leading batch dims; fp32 accumulate, cast back to x.dtype.
+
+    ``waxes`` (the shadowed weight's logical axes, threaded by
+    models/layers.linear) + an active mesh context lower this per-shard
+    under shard_map (kernels/dispatch.py); otherwise the global jit.
+    """
+    st = _dp.state()
+    if st is not None and waxes is not None:
+        y = _dp.bitlinear_axes(st, x, packed, v_row, v_col, w_base, waxes)
+        if y is not None:
+            return y
+    return _bitlinear_axes_global(x, packed, v_row, v_col, w_base)
+
+
 @jax.jit
+def _bitlinear_axes_banked_global(x: jax.Array, variant_idx: jax.Array,
+                                  packed: jax.Array, v_row: jax.Array,
+                                  v_col: jax.Array,
+                                  w_base: jax.Array) -> jax.Array:
+    *lead, k_dim = x.shape
+    n, _ = w_base.shape
+    nbank = packed.shape[0]
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    vidx = flatten_vidx(variant_idx, tuple(lead))
+    bm = _pick_block(m, _TILE_BANKED_M)
+    bn = _pick_block(n, _TILE_BANKED_N)
+    bk = _pick_block(k_dim, _TILE_BANKED_K, multiple=PACK)
+    y = _bl.bitlinear_axes_banked_p(
+        x2, vidx.astype(jnp.int32).reshape(m, 1), packed,
+        v_row.reshape(nbank, n, 1), v_col.reshape(nbank, 1, k_dim), w_base,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    return y.astype(x.dtype).reshape(*lead, n)
+
+
 def bitlinear_axes_banked(x: jax.Array, variant_idx: jax.Array,
                           packed: jax.Array, v_row: jax.Array,
-                          v_col: jax.Array, w_base: jax.Array) -> jax.Array:
+                          v_col: jax.Array, w_base: jax.Array,
+                          waxes=None) -> jax.Array:
     """Mixed-variant fused y: row m of x computes against bank slot
     ``variant_idx[m]`` of a stacked overlay (slot 0 = base, zero delta).
 
@@ -132,27 +227,19 @@ def bitlinear_axes_banked(x: jax.Array, variant_idx: jax.Array,
     HBM-bound: the kernel gathers each row's packed tile + vectors in VMEM,
     so per-step traffic is base weights + bank bytes, independent of how
     many distinct variants share the batch (DESIGN.md §9).
+
+    ``waxes`` + an active mesh context lower this per-shard (each device
+    gathers slots from its own weight tile's bank — kernels/dispatch.py);
+    otherwise the global jit path runs.
     """
-    *lead, k_dim = x.shape
-    n, _ = w_base.shape
-    nbank = packed.shape[0]
-    x2 = x.reshape(-1, k_dim)
-    m = x2.shape[0]
-    if variant_idx.shape == tuple(lead):
-        vidx = variant_idx.reshape(m)
-    else:
-        vidx = jnp.broadcast_to(
-            variant_idx.reshape(variant_idx.shape[0],
-                                *([1] * (len(lead) - 1))),
-            tuple(lead)).reshape(m)
-    bm = _pick_block(m, _TILE_BANKED_M)
-    bn = _pick_block(n, _TILE_BANKED_N)
-    bk = _pick_block(k_dim, _TILE_BANKED_K, multiple=PACK)
-    y = _bl.bitlinear_axes_banked_p(
-        x2, vidx.astype(jnp.int32).reshape(m, 1), packed,
-        v_row.reshape(nbank, n, 1), v_col.reshape(nbank, 1, k_dim), w_base,
-        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
-    return y.astype(x.dtype).reshape(*lead, n)
+    st = _dp.state()
+    if st is not None and waxes is not None:
+        y = _dp.bitlinear_axes_banked(st, x, variant_idx, packed, v_row,
+                                      v_col, w_base, waxes)
+        if y is not None:
+            return y
+    return _bitlinear_axes_banked_global(x, variant_idx, packed, v_row,
+                                         v_col, w_base)
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))

@@ -12,6 +12,11 @@ Per cell this:
   4. records memory_analysis, cost_analysis and the parsed collective
      schedule to results/dryrun/<cell>.json.
 
+The decode_fused / decode_banked serving cells lower their fused delta
+GEMMs as shard_map'd PER-SHARD Pallas kernels (kernels/dispatch.py —
+DESIGN.md §12) at both meshes; ``--opt gspmd_kernels`` restores the PR-4
+GSPMD-partitioned global-kernel lowering for comparison.
+
 The driver (--all) runs each cell in a SUBPROCESS so an XLA failure or OOM
 in one cell cannot kill the sweep, and finished cells are skipped on
 restart (the dry-run is itself fault-tolerant / resumable).
@@ -48,8 +53,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     from repro.models.param import split
     from repro.optim.adamw import AdamWState
     from repro.train.step import (TrainState, make_banked_decode_step,
-                                  make_decode_step, make_prefill_step,
-                                  make_train_step)
+                                  make_decode_step, make_fused_decode_step,
+                                  make_prefill_step, make_train_step)
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -126,7 +131,26 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                       rules, mesh)
             token_struct = batch_struct["tokens"]
             token_sh = batch_sh["tokens"]
-            if shape.banked:
+            if shape.fused:
+                # single-variant on-the-fly serving cell: decode against
+                # ONE packed overlay on its derived shardings — inside
+                # shard_ctx the fused delta GEMMs lower as shard_map'd
+                # per-shard Pallas kernels (kernels/dispatch.py,
+                # DESIGN.md §12; --opt gspmd_kernels pins the PR-4
+                # GSPMD-partitioned lowering for comparison)
+                from repro.core.calibration import (flatten_params,
+                                                    is_target)
+                from repro.models import delta_overlay as DO
+                flat = flatten_params(serve_struct)
+                delta_paths = sorted(p for p, l in flat.items()
+                                     if is_target(p, l))
+                ov_struct = DO.overlay_struct(flat, delta_paths)
+                ov_axes = DO.overlay_pspecs(params_axes, delta_paths)
+                ov_sh = tree_shardings(ov_struct, ov_axes, rules, mesh)
+                step_fn = make_fused_decode_step(model)
+                args = (serve_struct, ov_struct, token_struct, cache_struct)
+                shardings = (param_sh, ov_sh, token_sh, cache_sh)
+            elif shape.banked:
                 # mixed-variant serving cell: decode against a banked
                 # overlay whose leaves land on their derived shardings
                 # (weight-axis tiles, replicated bank axis) — validates
@@ -162,7 +186,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     jit_kwargs = {"in_shardings": shardings}
     if out_shardings is not None:
         jit_kwargs["out_shardings"] = out_shardings
-    with mesh, shard_ctx(mesh, rules):
+    import contextlib
+
+    from repro.kernels import dispatch as _dp
+    # serving cells lower the shard_map'd per-shard delta kernels by
+    # default (the shard_ctx below activates kernels/dispatch.py);
+    # --opt gspmd_kernels pins the PR-4 GSPMD-partitioned lowering
+    dp_ctx = (_dp.no_dispatch() if "gspmd_kernels" in opt_flags
+              else contextlib.nullcontext())
+    with mesh, shard_ctx(mesh, rules), dp_ctx:
         lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()

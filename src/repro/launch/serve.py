@@ -47,6 +47,11 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="serve on a (data, model) mesh of this shape "
                          "(default: single device)")
+    ap.add_argument("--kernel-dispatch", choices=("shard_map", "gspmd"),
+                    default="shard_map",
+                    help="mesh-mode delta-GEMM lowering: per-shard "
+                         "shard_map kernels (default) or the PR-4 "
+                         "GSPMD-partitioned global kernels")
     args = ap.parse_args()
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
@@ -89,7 +94,8 @@ def main():
                      batch_size=args.batch, prompt_len=16, max_len=64,
                      max_resident=max_resident,
                      bank_size=args.variants + 2,
-                     mesh=mesh, param_axes=param_axes if mesh else None)
+                     mesh=mesh, param_axes=param_axes if mesh else None,
+                     kernel_dispatch=args.kernel_dispatch)
     tunes = {}
     for i in range(args.variants):
         tunes[f"v{i}"] = fine_tune(100 + i)

@@ -61,9 +61,9 @@ def qkv_project(p: dict, x: jax.Array, cfg, positions: jax.Array,
     from repro.models.layers import _oget, linear, psel
     b, s, _ = x.shape
     ms = ctx_axis_size("model") or 1
-    q = linear(x, p["wq"], _oget(ov, "wq"), vidx)
-    k = linear(x, p["wk"], _oget(ov, "wk"), vidx)
-    v = linear(x, p["wv"], _oget(ov, "wv"), vidx)
+    q = linear(x, p["wq"], _oget(ov, "wq"), vidx, waxes=("q_heads", "embed"))
+    k = linear(x, p["wk"], _oget(ov, "wk"), vidx, waxes=("kv_heads", "embed"))
+    v = linear(x, p["wv"], _oget(ov, "wv"), vidx, waxes=("kv_heads", "embed"))
     if cfg.num_heads % ms == 0 and cfg.num_kv_heads % ms == 0:
         # full head-TP
         q = _lc(q, "act_batch", "act_seq", "act_heads")

@@ -187,6 +187,36 @@ def bank_set_extra_base(path: str, bank: jax.Array, slot: int,
 # logical->mesh mapping; this module only derives the logical axes.
 # ---------------------------------------------------------------------------
 
+def entry_shardings_from_weight(weight_sharding, w_ndim: int):
+    """Overlay-leaf placements by SPEC SURGERY on the shadowed weight's
+    resolved NamedSharding: OverlayEntry(packed=, v_row=, v_col=) of
+    NamedShardings — the allocation-level twin of :func:`entry_axes`
+    (tests/test_sharded_serving.py asserts the two derivations agree).
+
+    * packed keeps the weight's spec with the byte dim replicated (it is
+      8x smaller; the shard_map dispatch slices it per-shard at run time);
+    * v_row keeps the spec entries of the dims it copies ((lead..., d_out));
+    * v_col keeps (lead..., d_in).
+
+    The ONE shared derivation for every consumer that starts from a
+    resolved weight sharding instead of logical axes — ``loader.
+    device_put_overlay`` (variant transfer) and ``loader.apply_update``
+    (incremental patches) both route here.  Returns None when the sharding
+    carries no inspectable spec (single-device placements)."""
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = list(weight_sharding.spec) + [None] * w_ndim
+        spec = spec[:w_ndim]
+        mesh = weight_sharding.mesh
+        return OverlayEntry(
+            packed=NamedSharding(mesh, PartitionSpec(*(spec[:-1] + [None]))),
+            v_row=NamedSharding(mesh, PartitionSpec(*spec[:-1])),
+            v_col=NamedSharding(mesh,
+                                PartitionSpec(*(spec[:-2] + spec[-1:]))))
+    except Exception:
+        return None
+
+
 def _is_axes(x) -> bool:
     return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
                                         for e in x)

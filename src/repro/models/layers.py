@@ -17,20 +17,30 @@ def cast_to(x: jax.Array, dtype_name: str) -> jax.Array:
 # the fused on-the-fly delta GEMM without touching call sites
 # ---------------------------------------------------------------------------
 
-def linear(x: jax.Array, w: jax.Array, ov=None, vidx=None) -> jax.Array:
+def linear(x: jax.Array, w: jax.Array, ov=None, vidx=None,
+           waxes=None) -> jax.Array:
     """y = x @ Ŵᵀ where Ŵ = w without an overlay entry, else the variant
     weight v ⊙ unpack(B) + w applied on the fly (never densified).
 
     With ``vidx`` (per-batch-row int32 variant indices, 0 = base) the
     overlay entry is BANKED — leaves carry a leading bank axis and every
     row fuses its own variant's delta in one mixed-variant GEMM
-    (DESIGN.md §9)."""
+    (DESIGN.md §9).
+
+    ``waxes`` — the weight's logical axes as declared at init (e.g.
+    ``("ffn", "embed")``) — is the mesh/axes context the model families
+    thread down: inside an active mesh the fused delta GEMM then lowers
+    as a shard_map'd per-shard Pallas kernel on the weight's own tiling
+    (kernels/dispatch.py, DESIGN.md §12) instead of leaning on GSPMD to
+    partition the opaque kernel call."""
     if ov is None:
         return x @ w.T.astype(x.dtype)
     from repro.kernels import ops as K
     if vidx is None:
-        return K.bitlinear_axes(x, ov.packed, ov.v_row, ov.v_col, w)
-    return K.bitlinear_axes_banked(x, vidx, ov.packed, ov.v_row, ov.v_col, w)
+        return K.bitlinear_axes(x, ov.packed, ov.v_row, ov.v_col, w,
+                                waxes=waxes)
+    return K.bitlinear_axes_banked(x, vidx, ov.packed, ov.v_row, ov.v_col,
+                                   w, waxes=waxes)
 
 
 def psel(w: jax.Array, bank, vidx, *, lead: int = 1) -> jax.Array:
@@ -191,10 +201,18 @@ def mlp_init(key, d: int, d_ff: int) -> dict:
     }
 
 
-def mlp_apply(p: dict, x: jax.Array, ov=None, vidx=None) -> jax.Array:
-    h = (jax.nn.silu(linear(x, p["w_gate"], _oget(ov, "w_gate"), vidx))
-         * linear(x, p["w_up"], _oget(ov, "w_up"), vidx))
-    return linear(h, p["w_down"], _oget(ov, "w_down"), vidx)
+def mlp_apply(p: dict, x: jax.Array, ov=None, vidx=None,
+              ffn_ax: str = "ffn") -> jax.Array:
+    """``ffn_ax`` names the hidden dim's logical axis — "ffn" for the
+    standard gated MLP, "ffn_small" for replicated shared experts — so the
+    per-shard kernel dispatch sees the same axes the weights were
+    initialised (and placed) with."""
+    h = (jax.nn.silu(linear(x, p["w_gate"], _oget(ov, "w_gate"), vidx,
+                            waxes=(ffn_ax, "embed")))
+         * linear(x, p["w_up"], _oget(ov, "w_up"), vidx,
+                  waxes=(ffn_ax, "embed")))
+    return linear(h, p["w_down"], _oget(ov, "w_down"), vidx,
+                  waxes=("embed", ffn_ax))
 
 
 # ---------------------------------------------------------------------------
@@ -210,5 +228,7 @@ def mlp2_init(key, d: int, d_ff: int) -> dict:
 
 
 def mlp2_apply(p: dict, x: jax.Array, ov=None, vidx=None) -> jax.Array:
-    return linear(jax.nn.gelu(linear(x, p["w_in"], _oget(ov, "w_in"), vidx)),
-                  p["w_out"], _oget(ov, "w_out"), vidx)
+    return linear(jax.nn.gelu(linear(x, p["w_in"], _oget(ov, "w_in"), vidx,
+                                     waxes=("ffn", "embed"))),
+                  p["w_out"], _oget(ov, "w_out"), vidx,
+                  waxes=("embed", "ffn"))

@@ -62,14 +62,28 @@ def _group_tokens(x: jax.Array, target_group: int = 4096
     return x.reshape(g, n, d), (b, s, d)
 
 
-def _expert_mm(xe: jax.Array, w: jax.Array, ent) -> jax.Array:
+def _expert_mm(xe: jax.Array, w: jax.Array, ent,
+               waxes=("experts", "ffn", "embed")) -> jax.Array:
     """Per-expert matmul: xe (E, M, D) · w (E, F, D) -> (E, M, F).
 
     With a delta-overlay entry (stacked over the expert dim) each expert's
-    GEMM runs the fused on-the-fly delta kernel against its base weight."""
+    GEMM runs the fused on-the-fly delta kernel against its base weight.
+    Inside an active mesh the whole stack lowers as ONE shard_map over the
+    expert-sharded axis — shard_map(vmap(kernel)), each device running the
+    fused kernels for its own experts — because the plain formulation here
+    (vmap over a shard_map'd kernel) is not a supported composition; the
+    dispatcher declines (None) when the stack can't partition and the
+    global vmap path below runs under GSPMD exactly as before."""
     if ent is None:
         return jnp.einsum("emd,efd->emf", xe, w.astype(xe.dtype))
-    return jax.vmap(lambda x_, e_, w_: linear(x_, w_, e_))(xe, ent, w)
+    from repro.kernels import dispatch as D
+    st = D.state()
+    if st is not None:
+        y = D.bitlinear_axes_stacked(st, xe, ent, w, waxes)
+        if y is not None:
+            return y
+    with D.no_dispatch():
+        return jax.vmap(lambda x_, e_, w_: linear(x_, w_, e_))(xe, ent, w)
 
 
 def moe_apply(p: dict, x: jax.Array, cfg, ov=None, vidx=None
@@ -151,14 +165,16 @@ def moe_apply(p: dict, x: jax.Array, cfg, ov=None, vidx=None
             sl = {k_: entry_slot(v, vi) for k_, v in ents.items()}
             hv = (jax.nn.silu(_expert_mm(xv, p["w_gate"], sl["w_gate"]))
                   * _expert_mm(xv, p["w_up"], sl["w_up"]))
-            yv = _expert_mm(hv, p["w_down"], sl["w_down"])
+            yv = _expert_mm(hv, p["w_down"], sl["w_down"],
+                            waxes=("experts", "embed", "ffn"))
             ye = jnp.where(mask, yv, ye)
         yd = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
     elif has_delta:
         xe = xd.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
         he = (jax.nn.silu(_expert_mm(xe, p["w_gate"], oget(ov, "w_gate")))
               * _expert_mm(xe, p["w_up"], oget(ov, "w_up")))
-        ye = _expert_mm(he, p["w_down"], oget(ov, "w_down"))
+        ye = _expert_mm(he, p["w_down"], oget(ov, "w_down"),
+                        waxes=("experts", "embed", "ffn"))
         yd = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
     else:
         wg = p["w_gate"].astype(x.dtype)
@@ -188,7 +204,7 @@ def moe_apply(p: dict, x: jax.Array, cfg, ov=None, vidx=None
     if "shared" in p:
         from repro.models.layers import mlp_apply
         y = y + mlp_apply(p["shared"], xg, ov=oget(ov, "shared"),
-                          vidx=vidx_gn)
+                          vidx=vidx_gn, ffn_ax="ffn_small")
 
     # load-balancing aux loss (Switch-style): f_i · P_i summed over experts
     frac_tokens = jnp.mean(

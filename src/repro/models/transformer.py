@@ -114,7 +114,8 @@ def _attn_part(p, x, cfg, positions, theta, window, kv_override=None,
     # constraint forces the row-parallel psum HERE, in bf16 — without it
     # GSPMD defers the reduction into the next op's fp32 domain (rmsnorm
     # upcast), doubling the wire bytes of every TP all-reduce
-    wo_out = lc(linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx),
+    wo_out = lc(linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                       waxes=("embed", "q_heads")),
                 "act_batch", "act_seq", None)
     if io is not None:
         b, s, _ = x.shape
@@ -341,7 +342,8 @@ def _decode_block(p, x, cfg, layer_cache, pat_entry, pos, ov=None,
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos, window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                   waxes=("embed", "q_heads"))
     x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
     return x, new_cache
 
@@ -362,7 +364,8 @@ def _decode_block_stacked(p, x, cfg, caches, idx, pat_entry, pos, ov=None,
     o = A.decode_attention(q, view["k"], view["v"], view["slot_pos"], pos,
                            window=window)
     o = o.reshape(*x.shape[:-1], cfg.q_dim)
-    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                   waxes=("embed", "q_heads"))
     x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
     return x, caches
 

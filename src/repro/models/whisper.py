@@ -64,9 +64,12 @@ def _qkv(p, xq, xkv, cfg, ov=None, vidx=None):
     head_tp = cfg.num_heads % ms == 0
     axes = (("act_batch", "act_seq", "act_heads") if head_tp
             else ("act_batch", "act_seq_tp", None))
-    q = lc(linear(xq, p["wq"], oget(ov, "wq"), vidx).astype(xq.dtype), *axes)
-    k = lc(linear(xkv, p["wk"], oget(ov, "wk"), vidx).astype(xq.dtype), *axes)
-    v = lc(linear(xkv, p["wv"], oget(ov, "wv"), vidx).astype(xq.dtype), *axes)
+    q = lc(linear(xq, p["wq"], oget(ov, "wq"), vidx,
+                  waxes=("q_heads", "embed")).astype(xq.dtype), *axes)
+    k = lc(linear(xkv, p["wk"], oget(ov, "wk"), vidx,
+                  waxes=("kv_heads", "embed")).astype(xq.dtype), *axes)
+    v = lc(linear(xkv, p["wv"], oget(ov, "wv"), vidx,
+                  waxes=("kv_heads", "embed")).astype(xq.dtype), *axes)
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
@@ -77,7 +80,7 @@ def _attn(p, xq, xkv, cfg, causal, ov=None, vidx=None):
     q, k, v = _qkv(p, xq, xkv, cfg, ov=ov, vidx=vidx)
     o = A.flash_attention(q, k, v, causal=causal)
     return linear(o.reshape(*xq.shape[:-1], cfg.q_dim), p["wo"],
-                  oget(ov, "wo"), vidx)
+                  oget(ov, "wo"), vidx, waxes=("embed", "q_heads"))
 
 
 # ---------------------------------------------------------------------------
@@ -123,18 +126,21 @@ def encode(params, frames: jax.Array, cfg, collect_io: bool = False,
             io["attn.wv"] = (hn, v.reshape(b, f, -1))
         o = A.flash_attention(q, k, v, causal=False
                               ).reshape(b, f, cfg.q_dim)
-        wo_out = linear(o, lp["attn"]["wo"], oget(ov_a, "wo"), vidx)
+        wo_out = linear(o, lp["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                        waxes=("embed", "q_heads"))
         _tap_linear(io, "attn.wo", o, None, wo_out)
         h = h + wo_out
         ov_m = oget(ovl, "mlp")
         hm = rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"), vidx),
                      cfg.norm_eps)
         mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in"),
-                                 vidx))
-        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx)
+                                 vidx, waxes=("ffn", "embed")))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx,
+                     waxes=("embed", "ffn"))
         if io is not None:
             io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
-                                         oget(ov_m, "w_in"), vidx))
+                                         oget(ov_m, "w_in"), vidx,
+                                         waxes=("ffn", "embed")))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         return h, io
@@ -181,7 +187,8 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             io["self_attn.wv"] = (hs, v.reshape(b, s, -1))
         o = A.flash_attention(q, k, v, causal=True)
         o = o.reshape(b, s, cfg.q_dim)
-        wo_out = linear(o, lp["self_attn"]["wo"], oget(ov_s, "wo"), vidx)
+        wo_out = linear(o, lp["self_attn"]["wo"], oget(ov_s, "wo"), vidx,
+                        waxes=("embed", "q_heads"))
         _tap_linear(io, "self_attn.wo", o, None, wo_out)
         h = h + wo_out
         ov_x = oget(ovl, "cross_attn")
@@ -196,18 +203,21 @@ def forward(params, batch, cfg, collect_kv: bool = False,
             io["cross_attn.wv"] = (enc_out, vx.reshape(b, f, -1))
         ox = A.flash_attention(qx, kx, vx, causal=False
                                ).reshape(b, s, cfg.q_dim)
-        xo_out = linear(ox, lp["cross_attn"]["wo"], oget(ov_x, "wo"), vidx)
+        xo_out = linear(ox, lp["cross_attn"]["wo"], oget(ov_x, "wo"), vidx,
+                        waxes=("embed", "q_heads"))
         _tap_linear(io, "cross_attn.wo", ox, None, xo_out)
         h = h + xo_out
         ov_m = oget(ovl, "mlp")
         hm = rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"), vidx),
                      cfg.norm_eps)
         mid = jax.nn.gelu(linear(hm, lp["mlp"]["w_in"], oget(ov_m, "w_in"),
-                                 vidx))
-        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx)
+                                 vidx, waxes=("ffn", "embed")))
+        out = linear(mid, lp["mlp"]["w_out"], oget(ov_m, "w_out"), vidx,
+                     waxes=("embed", "ffn"))
         if io is not None:
             io["mlp.w_in"] = (hm, linear(hm, lp["mlp"]["w_in"],
-                                         oget(ov_m, "w_in"), vidx))
+                                         oget(ov_m, "w_in"), vidx,
+                                         waxes=("ffn", "embed")))
             io["mlp.w_out"] = (mid, out)
         h = h + out
         ys = (k, v) if collect_kv else None
@@ -279,9 +289,11 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
     def cross_kv(lp, ovl):
         t = enc_out.shape[1]
         ov_x = oget(ovl, "cross_attn")
-        k = linear(enc_out, lp["cross_attn"]["wk"], oget(ov_x, "wk"), vidx
+        k = linear(enc_out, lp["cross_attn"]["wk"], oget(ov_x, "wk"), vidx,
+                   waxes=("kv_heads", "embed")
                    ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
-        v = linear(enc_out, lp["cross_attn"]["wv"], oget(ov_x, "wv"), vidx
+        v = linear(enc_out, lp["cross_attn"]["wv"], oget(ov_x, "wv"), vidx,
+                   waxes=("kv_heads", "embed")
                    ).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
         return k.astype(cache_dtype), v.astype(cache_dtype)
 
@@ -313,14 +325,15 @@ def decode_step(params, token, cache, cfg, overlay=None, variant_idx=None):
         o = A.decode_attention(q, sc_new["k"], sc_new["v"],
                                sc_new["slot_pos"], pos)
         h = h + linear(o.reshape(b, 1, cfg.q_dim), lp["self_attn"]["wo"],
-                       oget(ov_s, "wo"), vidx)
+                       oget(ov_s, "wo"), vidx, waxes=("embed", "q_heads"))
         hx = rmsnorm(h, psel(lp["ln_x"], oget(ovl, "ln_x"), vidx),
                      cfg.norm_eps)
-        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq"), vidx
+        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq"), vidx,
+                    waxes=("q_heads", "embed")
                     ).reshape(b, 1, cfg.num_heads, cfg.head_dim)
         ox = A.decode_attention(qx, ck, cv, frame_pos, pos + cfg.encoder_frames)
         h = h + linear(ox.reshape(b, 1, cfg.q_dim), lp["cross_attn"]["wo"],
-                       oget(ov_x, "wo"), vidx)
+                       oget(ov_x, "wo"), vidx, waxes=("embed", "q_heads"))
         h = h + mlp2_apply(lp["mlp"],
                            rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"),
                                            vidx), cfg.norm_eps),

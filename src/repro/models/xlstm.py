@@ -97,8 +97,10 @@ def _mlstm_pre(p, x, cfg, ov=None, vidx=None):
     """Shared projection work for both seq and step paths (pre-conv)."""
     hcount, hd = _mlstm_heads(cfg)
     xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
-    xm = linear(xi, p["w_up"], oget(ov, "w_up"), vidx)
-    z = linear(xi, p["w_gate"], oget(ov, "w_gate"), vidx)
+    xm = linear(xi, p["w_up"], oget(ov, "w_up"), vidx,
+                waxes=("ssm", "embed"))
+    z = linear(xi, p["w_gate"], oget(ov, "w_gate"), vidx,
+               waxes=("ssm", "embed"))
     return xm, z
 
 
@@ -121,18 +123,21 @@ def mlstm_block_apply(p, x, cfg, state: dict, ov=None, vidx=None):
     xm, z = _mlstm_pre(p, x, cfg, ov=ov, vidx=vidx)
     xc = jax.nn.silu(causal_conv(xm, _conv_w(p, "conv", ov, vidx)))
     xc = lc(xc, "act_batch", "act_seq", "act_ssm")
-    q = linear(xc, p["wq"], oget(ov, "wq"), vidx).reshape(b, s, hcount, hd)
-    k = linear(xc, p["wk"], oget(ov, "wk"), vidx
+    q = linear(xc, p["wq"], oget(ov, "wq"), vidx,
+               waxes=("ssm", None)).reshape(b, s, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk"), vidx, waxes=("ssm", None)
                ).reshape(b, s, hcount, hd) * hd ** -0.5
-    v = linear(xm, p["wv"], oget(ov, "wv"), vidx).reshape(b, s, hcount, hd)
-    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
+    v = linear(xm, p["wv"], oget(ov, "wv"), vidx,
+               waxes=("ssm", None)).reshape(b, s, hcount, hd)
+    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx,
+                    waxes=(None, "ssm"))
              + psel(p["b_if"], oget(ov, "b_if"), vidx).astype(x.dtype))
     ig, fg = jnp.split(gates, 2, axis=-1)              # (B,S,H)
     h_seq, cell = ssm.mlstm_chunkwise(q, k, v, ig, fg, state=state["cell"])
     h_seq = rmsnorm(h_seq, _out_norm_scale(p, ov, vidx, b, hcount, hd),
                     cfg.norm_eps)
     y = linear(h_seq.reshape(b, s, 2 * d) * jax.nn.silu(z), p["w_down"],
-               oget(ov, "w_down"), vidx)
+               oget(ov, "w_down"), vidx, waxes=("embed", "ssm"))
     # conv window for decode continuation
     di = 2 * d
     tail = jnp.concatenate(
@@ -148,18 +153,21 @@ def mlstm_block_step(p, x, cfg, state: dict, ov=None, vidx=None):
     conv_win, xc1 = conv_step(state["conv"].astype(xm.dtype), xm[:, 0],
                               _conv_w(p, "conv", ov, vidx))
     xc = jax.nn.silu(xc1)[:, None, :]
-    q = linear(xc, p["wq"], oget(ov, "wq"), vidx).reshape(b, hcount, hd)
-    k = linear(xc, p["wk"], oget(ov, "wk"), vidx
+    q = linear(xc, p["wq"], oget(ov, "wq"), vidx,
+               waxes=("ssm", None)).reshape(b, hcount, hd)
+    k = linear(xc, p["wk"], oget(ov, "wk"), vidx, waxes=("ssm", None)
                ).reshape(b, hcount, hd) * hd ** -0.5
-    v = linear(xm, p["wv"], oget(ov, "wv"), vidx).reshape(b, hcount, hd)
-    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
+    v = linear(xm, p["wv"], oget(ov, "wv"), vidx,
+               waxes=("ssm", None)).reshape(b, hcount, hd)
+    gates = (linear(xc, p["w_if"], oget(ov, "w_if"), vidx,
+                    waxes=(None, "ssm"))
              + psel(p["b_if"], oget(ov, "b_if"), vidx).astype(x.dtype))[:, 0]
     ig, fg = jnp.split(gates, 2, axis=-1)
     cell, h_t = ssm.mlstm_step(state["cell"], q, k, v, ig, fg)
     h_t = rmsnorm(h_t[:, None].reshape(b, 1, hcount, hd),
                   _out_norm_scale(p, ov, vidx, b, hcount, hd), cfg.norm_eps)
     y = linear(h_t.reshape(b, 1, 2 * d) * jax.nn.silu(z), p["w_down"],
-               oget(ov, "w_down"), vidx)
+               oget(ov, "w_down"), vidx, waxes=("embed", "ssm"))
     return x + y, {"cell": cell, "conv": conv_win.astype(jnp.float32)}
 
 
@@ -200,8 +208,10 @@ def _slstm_gate_pre(p, xi, xc, cfg, ov=None, vidx=None):
     s = xi.shape[1]
     h = cfg.num_heads
     hd = cfg.d_model // h
-    zo = linear(xi, p["w_zi"], oget(ov, "w_zi"), vidx)
-    if_ = linear(xc, p["w_if"], oget(ov, "w_if"), vidx)
+    zo = linear(xi, p["w_zi"], oget(ov, "w_zi"), vidx,
+                waxes=(None, "embed"))
+    if_ = linear(xc, p["w_if"], oget(ov, "w_if"), vidx,
+                 waxes=(None, "embed"))
     zx, ox = jnp.split(zo, 2, axis=-1)
     ix, fx = jnp.split(if_, 2, axis=-1)
     rs = lambda t: t.reshape(b, s, h, hd)
@@ -220,9 +230,11 @@ def _slstm_post(p, h_seq, x, cfg, ov=None, vidx=None):
     hn = rmsnorm(h_seq.reshape(b, s, d),
                  psel(p["out_norm"], oget(ov, "out_norm"), vidx),
                  cfg.norm_eps)
-    ff = linear(hn, p["w_ff1"], oget(ov, "w_ff1"), vidx)
+    ff = linear(hn, p["w_ff1"], oget(ov, "w_ff1"), vidx,
+                waxes=("ffn", "embed"))
     gate, up = jnp.split(ff, 2, axis=-1)
-    y = linear(jax.nn.silu(gate) * up, p["w_ff2"], oget(ov, "w_ff2"), vidx)
+    y = linear(jax.nn.silu(gate) * up, p["w_ff2"], oget(ov, "w_ff2"), vidx,
+               waxes=("embed", "ffn"))
     return x + y
 
 

@@ -82,10 +82,14 @@ def _hsel(p, key, ov, vidx):
 def _mamba_proj(p, x, cfg, ov=None, vidx=None):
     di, h, _, n = _dims(cfg)
     xi = rmsnorm(x, psel(p["ln"], oget(ov, "ln"), vidx), cfg.norm_eps)
-    z = linear(xi, p["w_z"], oget(ov, "w_z"), vidx)
-    xc = linear(xi, p["w_xc"], oget(ov, "w_xc"), vidx)
-    bc = linear(xi, p["w_bc"], oget(ov, "w_bc"), vidx)
-    dt_raw = linear(xi, p["w_dt"], oget(ov, "w_dt"), vidx)
+    z = linear(xi, p["w_z"], oget(ov, "w_z"), vidx,
+               waxes=("ssm", "embed"))
+    xc = linear(xi, p["w_xc"], oget(ov, "w_xc"), vidx,
+                waxes=("ssm", "embed"))
+    bc = linear(xi, p["w_bc"], oget(ov, "w_bc"), vidx,
+                waxes=("ffn_small", "embed"))
+    dt_raw = linear(xi, p["w_dt"], oget(ov, "w_dt"), vidx,
+                    waxes=("ffn_small", "embed"))
     return z, xc, bc, dt_raw
 
 
@@ -95,7 +99,8 @@ def _mamba_post(p, y, z, x, cfg, ov=None, vidx=None):
     y = y.reshape(b, s, di) * jax.nn.silu(z)
     y = rmsnorm(y, psel(p["gate_norm"], oget(ov, "gate_norm"), vidx),
                 cfg.norm_eps)
-    return x + linear(y, p["w_out"], oget(ov, "w_out"), vidx)
+    return x + linear(y, p["w_out"], oget(ov, "w_out"), vidx,
+                      waxes=("embed", "ssm"))
 
 
 def mamba_block_apply(p, x, cfg, state: dict, ov=None, vidx=None):
@@ -166,9 +171,12 @@ def shared_block_init(key, cfg) -> dict:
 def _shared_qkv(p, h2, cfg, positions, ov=None, vidx=None):
     b, s, _ = h2.shape
     hi = rmsnorm(h2, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
-    q = linear(hi, p["wq"], oget(ov, "wq"), vidx).reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = linear(hi, p["wk"], oget(ov, "wk"), vidx).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = linear(hi, p["wv"], oget(ov, "wv"), vidx).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    q = linear(hi, p["wq"], oget(ov, "wq"), vidx, waxes=("q_heads", "embed")
+               ).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(hi, p["wk"], oget(ov, "wk"), vidx, waxes=("kv_heads", "embed")
+               ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(hi, p["wv"], oget(ov, "wv"), vidx, waxes=("kv_heads", "embed")
+               ).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     from repro.models.layers import apply_rope
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -180,7 +188,7 @@ def shared_block_apply(p, x, x0, cfg, positions, ov=None, vidx=None):
     q, k, v = _shared_qkv(p, h2, cfg, positions, ov=ov, vidx=vidx)
     o = A.flash_attention(q, k, v, causal=True)
     x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
-                   oget(ov, "wo"), vidx)
+                   oget(ov, "wo"), vidx, waxes=("embed", "q_heads"))
     x = x + mlp_apply(p["mlp"],
                       rmsnorm(x, psel(p["ln2"], oget(ov, "ln2"), vidx),
                               cfg.norm_eps),
@@ -197,7 +205,7 @@ def shared_block_step(p, x, x0, cfg, cache: dict, pos, ov=None, vidx=None):
     o = A.decode_attention(q, new_cache["k"], new_cache["v"],
                            new_cache["slot_pos"], pos)
     x = x + linear(o.reshape(*x.shape[:-1], cfg.q_dim), p["wo"],
-                   oget(ov, "wo"), vidx)
+                   oget(ov, "wo"), vidx, waxes=("embed", "q_heads"))
     x = x + mlp_apply(p["mlp"],
                       rmsnorm(x, psel(p["ln2"], oget(ov, "ln2"), vidx),
                               cfg.norm_eps),

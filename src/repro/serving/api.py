@@ -37,8 +37,10 @@ Mesh-sharded deployments (DESIGN.md §11): pass ``mesh`` (axes
 ``param_axes`` (the logical-axes tree from ``models.param.split``) — the
 base params are placed tensor-parallel under the serving rules, every
 overlay/bank leaf lands on its derived sharding, and the engine runs
-data×model-parallel step jits.  The control/data-plane surface is
-unchanged.
+data×model-parallel step jits whose fused delta GEMMs lower as
+shard_map'd per-shard Pallas kernels (``kernel_dispatch="gspmd"``
+restores the PR-4 GSPMD lowering — DESIGN.md §12).  The
+control/data-plane surface is unchanged.
 """
 from __future__ import annotations
 
@@ -62,7 +64,8 @@ class Deployment:
                  max_len: int = 128, bank_size: int = 8,
                  max_resident: int = 8, max_retries: int = 1,
                  param_shardings=None, use_kernel: bool = True,
-                 mesh=None, param_axes=None):
+                 mesh=None, param_axes=None,
+                 kernel_dispatch: str = "shard_map"):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
         if scheduler == "continuous" and mode != "fused":
@@ -96,6 +99,11 @@ class Deployment:
             store = S.VariantStore(root_dir, base_fp=self.registry.base_fp)
         if store is not None and store.base_fp is None:
             store.base_fp = self.registry.base_fp
+        if store is not None and param_shardings is not None \
+                and store.param_shardings is None:
+            # incremental patches then materialise shard-local (the store's
+            # chain walk applies them on the derived leaf placements)
+            store.param_shardings = param_shardings
         self.store = store
         if store is not None:
             # hydrate EVERY persisted version (artifacts stay on disk
@@ -110,7 +118,8 @@ class Deployment:
         self.engine = ServingEngine(
             model, self.registry, batch_size=batch_size,
             prompt_len=prompt_len, max_len=max_len,
-            max_retries=max_retries, scheduler=scheduler, mesh=mesh)
+            max_retries=max_retries, scheduler=scheduler, mesh=mesh,
+            kernel_dispatch=kernel_dispatch)
 
     # -- control plane -----------------------------------------------------
     def publish(self, name: str, dm: DeltaModel, *,

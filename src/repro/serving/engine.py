@@ -41,10 +41,18 @@ persistent decode cache is pinned to its sharding via out_shardings, so
 step N+1 sees exactly the layout step N produced — no resharding, no
 recompiles.  Calls run under ``shard_ctx`` so model-internal logical
 constraints activate.
+
+Per-shard kernels (DESIGN.md §12): because the steps trace inside
+``shard_ctx``, the fused/banked delta GEMMs lower as shard_map'd Pallas
+kernels on each device's own weight/overlay tile (kernels/dispatch.py)
+instead of trusting GSPMD to partition the opaque kernel call;
+``kernel_dispatch="gspmd"`` pins the PR-4 global-kernel lowering for A/B
+parity and latency comparisons.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Optional
@@ -97,15 +105,26 @@ class ServingEngine:
     mesh: optional ``jax.sharding.Mesh`` with ("data", "model") axes (and
     optionally "pod") — every step jit gains explicit in/out shardings
     (batch data-parallel, weights/overlays model-parallel) and runs under
-    the serving rule context.  Requires registry.param_shardings."""
+    the serving rule context.  Requires registry.param_shardings.
+
+    kernel_dispatch: "shard_map" (default) lowers the fused/banked delta
+    GEMMs as per-shard Pallas kernels under shard_map (kernels/dispatch.py
+    — each device runs its own weight tile's kernel, DESIGN.md §12);
+    "gspmd" restores the PR-4 behaviour of handing the global kernel to
+    GSPMD to partition (the A/B baseline — on a real TPU mesh the opaque
+    kernel call cannot be partitioned, so this mode exists for parity and
+    latency comparison, benchmarks/shard_map_kernels.py).  Both modes must
+    emit bit-identical greedy tokens.  Ignored without a mesh."""
 
     def __init__(self, model: Model, registry: VariantRegistry, *,
                  batch_size: int = 4, prompt_len: int = 32,
                  max_len: int = 128, max_retries: int = 1,
                  greedy: bool = True, scheduler: str = "group",
-                 mesh=None):
+                 mesh=None, kernel_dispatch: str = "shard_map"):
         if scheduler not in ("group", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if kernel_dispatch not in ("shard_map", "gspmd"):
+            raise ValueError(f"unknown kernel_dispatch {kernel_dispatch!r}")
         self.model = model
         self.registry = registry
         self.batch_size = batch_size
@@ -114,6 +133,7 @@ class ServingEngine:
         self.max_retries = max_retries
         self.scheduler = scheduler
         self.mesh = mesh
+        self.kernel_dispatch = kernel_dispatch
         self._queue: collections.deque[Request] = collections.deque()
         self._done: dict[int, Request] = {}
         self._next_rid = 0
@@ -233,7 +253,13 @@ class ServingEngine:
             jitted = jax.jit(self._fns[kind], in_shardings=in_sh,
                              out_shardings=out_sh)
             self._jits[key] = jitted
-        with self.mesh, shard_ctx(self.mesh, self._rules):
+        # the dispatch decision is read at TRACE time inside shard_ctx:
+        # "shard_map" lets kernels/dispatch.py lower per-shard kernels,
+        # "gspmd" pins the PR-4 global-kernel path for A/B comparison
+        from repro.kernels import dispatch as _dp
+        cm = (_dp.no_dispatch() if self.kernel_dispatch == "gspmd"
+              else contextlib.nullcontext())
+        with self.mesh, shard_ctx(self.mesh, self._rules), cm:
             return jitted(*args)
 
     # -- API -----------------------------------------------------------------

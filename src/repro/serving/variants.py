@@ -473,9 +473,21 @@ class VariantRegistry:
                 self.base_params, dm, param_shardings=self.param_shardings)
             nbytes = L.fused_resident_bytes(self.base_params, params, overlay)
         else:
-            params, st = L.apply_artifact(
-                self.base_params, dm, param_shardings=self.param_shardings,
-                use_kernel=self.use_kernel)
+            # dense reconstruction under a mesh runs inside the serve-rule
+            # shard_ctx so the unpack kernel lowers per-shard for
+            # unstacked weights (kernels/dispatch.py; stacked entries
+            # stay on the vmapped global kernel)
+            import contextlib
+
+            from repro.distributed.sharding import rules_for, shard_ctx
+            ctx = (shard_ctx(self.mesh, rules_for("decode"))
+                   if self.mesh is not None else contextlib.nullcontext())
+            with ctx:
+                params, st = L.apply_artifact(
+                    self.base_params, dm,
+                    param_shardings=self.param_shardings,
+                    param_axes=self.param_axes,
+                    use_kernel=self.use_kernel)
             overlay, nbytes = None, self._dense_nbytes
         self.stats["swaps"] += 1
         self.stats["swap_seconds"] += st["seconds"]

@@ -138,3 +138,14 @@ def make_banked_decode_step(model: Model):
         return model.decode_step(params, token, cache, overlay=bank,
                                  variant_idx=variant_idx)
     return banked_decode_step
+
+
+def make_fused_decode_step(model: Model):
+    """Single-variant on-the-fly decode: the whole batch fuses ONE packed
+    delta overlay into every GEMM (residency mode "fused", DESIGN.md §6) —
+    the dry-run decode_fused cells lower this with the overlay leaves on
+    their derived shardings, exercising the shard_map'd per-shard delta
+    kernels (DESIGN.md §12)."""
+    def fused_decode_step(params, overlay, token, cache):
+        return model.decode_step(params, token, cache, overlay=overlay)
+    return fused_decode_step
