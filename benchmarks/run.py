@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   sharded_serving banked decode on a host mesh: parity + per-device bytes
   shard_map_kernels per-shard vs GSPMD-partitioned delta kernels: latency
            + kernel/token parity at forced 4 host devices (DESIGN.md §12)
+  admission_overlap async vs inline admission on a busy node: publish→
+           first-token, decode-stall ceiling, token parity (DESIGN.md §13)
   roofline dry-run roofline terms per (arch × shape × mesh)
 
 ``--strict`` exits nonzero when any section errors (CI gate — by default
@@ -66,10 +68,11 @@ def main() -> None:
                     help="comma-separated subset of sections to run")
     args = ap.parse_args()
 
-    from benchmarks import (axis_stats, continuous_batching, fused_serving,
-                            kernel_bench, load_time, roofline,
-                            shard_map_kernels, sharded_serving,
-                            table1_quality, table2_sizes, update_latency)
+    from benchmarks import (admission_overlap, axis_stats,
+                            continuous_batching, fused_serving, kernel_bench,
+                            load_time, roofline, shard_map_kernels,
+                            sharded_serving, table1_quality, table2_sizes,
+                            update_latency)
     sections = [                                      # cheap first
         ("table2", table2_sizes.run),
         ("kernel", kernel_bench.run),
@@ -80,6 +83,7 @@ def main() -> None:
         ("fused", fused_serving.run),
         ("continuous_batching", continuous_batching.run),
         ("update_latency", update_latency.run),
+        ("admission_overlap", admission_overlap.run),
         ("sharded_serving", sharded_serving.run),
         ("shard_map_kernels", shard_map_kernels.run),
         ("roofline", roofline.run),

@@ -121,9 +121,66 @@ def apply_artifact(base_params, dm: DeltaModel, *,
     return params, stats
 
 
+def stage_overlay_transfer(dm: DeltaModel, *, param_shardings=None
+                           ) -> tuple[DeltaModel, list]:
+    """Begin ASYNC per-module device transfers of a (host- or device-
+    resident) DeltaModel: every leaf is ``jax.device_put`` without a
+    fence, so the H2D copy of module k+1 overlaps whatever the serving
+    thread is executing (a decode step, the scatter of module k).
+
+    Returns ``(dm_on_device, futures)`` where ``futures`` is a list of
+    ``(module_path, leaves)`` in transfer order — await one module with
+    ``jax.block_until_ready(leaves)`` (or all of them via
+    ``wait_transfers``).  With ``param_shardings`` (the shadowed BASE
+    weights' shardings) each delta entry lands on its derived placement
+    (``delta_overlay.entry_shardings_from_weight`` — same derivation the
+    synchronous paths use), so a mesh admission scatter consumes
+    shard-local operands.
+
+    This is the staging half of the async admission pipeline
+    (serving/admission.py): an ingest thread calls it after the chunked
+    store read + patch chain + sha verification, and hands the returned
+    DeltaModel to the serving thread, whose only remaining work is the
+    donated bank scatter."""
+    from repro.models.delta_overlay import entry_shardings_from_weight
+    shard_flat = (flatten_params(param_shardings)
+                  if param_shardings is not None else None)
+    deltas, extras, futures = {}, {}, []
+    for path, e in dm.deltas.items():
+        ent_sh = None
+        if shard_flat is not None and path in shard_flat and not e.scalar:
+            ent_sh = entry_shardings_from_weight(shard_flat[path],
+                                                 e.packed.ndim)
+        if ent_sh is None:
+            leaves = [jax.device_put(e.packed), jax.device_put(e.v_row),
+                      jax.device_put(e.v_col), jax.device_put(e.use_row)]
+        else:
+            leaves = [jax.device_put(e.packed, ent_sh.packed),
+                      jax.device_put(e.v_row, ent_sh.v_row),
+                      jax.device_put(e.v_col, ent_sh.v_col),
+                      jax.device_put(e.use_row)]
+        deltas[path] = type(e)(packed=leaves[0], v_row=leaves[1],
+                               v_col=leaves[2], use_row=leaves[3],
+                               scalar=e.scalar)
+        futures.append((path, leaves))
+    for path, v in dm.extras.items():
+        arr = (jax.device_put(v, shard_flat[path])
+               if shard_flat is not None and path in shard_flat
+               else jax.device_put(v))
+        extras[path] = arr
+        futures.append((path, [arr]))
+    return DeltaModel(deltas=deltas, extras=extras), futures
+
+
+def wait_transfers(futures: list) -> None:
+    """Fence a ``stage_overlay_transfer`` future list (all modules)."""
+    for _, leaves in futures:
+        jax.block_until_ready(leaves)
+
+
 def device_put_overlay(base_params, dm: DeltaModel, *,
                        param_shardings=None, vec_dtype=jnp.float16,
-                       extras_dtype=jnp.float16):
+                       extras_dtype=jnp.float16, block: bool = True):
     """On-the-fly serving entry point: place a variant on device as a
     packed :mod:`repro.models.delta_overlay` tree — NO dense reconstruction.
 
@@ -136,7 +193,10 @@ def device_put_overlay(base_params, dm: DeltaModel, *,
 
     Returns (params_view, overlay, stats).  ``params_view`` pairs with
     ``overlay`` as the (base_params, overlay) arguments of model
-    forward/prefill/decode_step.
+    forward/prefill/decode_step.  ``block=False`` skips the final device
+    fence: the transfers stay in flight as ordinary jax futures and the
+    first consumer (or ``jax.block_until_ready``) awaits them — the
+    staged admission path uses this so transfers overlap decode steps.
     """
     from repro.models.delta_overlay import from_delta_entry, insert_entry
 
@@ -181,8 +241,10 @@ def device_put_overlay(base_params, dm: DeltaModel, *,
         else:
             out[path] = wb
     params_view = unflatten_like(base_params, out)
-    leaves = jax.tree.leaves(overlay_tree) or jax.tree.leaves(params_view)
-    jax.block_until_ready(leaves[0])
+    if block:
+        leaves = jax.tree.leaves(overlay_tree) or jax.tree.leaves(
+            params_view)
+        jax.block_until_ready(leaves[0])
     stats = {"seconds": time.perf_counter() - t0,
              "transferred_bytes": int(transferred)}
     return params_view, overlay_tree, stats

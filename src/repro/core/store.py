@@ -31,11 +31,14 @@ import hashlib
 import json
 import os
 import pathlib
-from typing import Optional
+import threading
+import zipfile
+from typing import Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import numpy.lib.format as _npformat
 
 from repro.core import delta as D
 from repro.core.calibration import DeltaEntry, DeltaModel
@@ -91,6 +94,170 @@ def read_manifest(in_dir: str) -> dict:
     return manifest
 
 
+# ---------------------------------------------------------------------------
+# streamed per-module ingest (the async admission pipeline's read side)
+# ---------------------------------------------------------------------------
+
+DEFAULT_CHUNK_BYTES = 4 << 20   # bounded read granularity per payload chunk
+
+
+def _device_put_copies() -> bool:
+    """Whether ``jax.device_put`` of a numpy array COPIES host memory on
+    this backend.  CPU zero-copies (the numpy buffer becomes the device
+    buffer), so a staging buffer handed to the device must never be
+    recycled there; accelerators copy across PCIe and the buffer is
+    reusable once the transfer future resolves.  Probed once."""
+    global _DEVICE_PUT_COPIES
+    if _DEVICE_PUT_COPIES is None:
+        probe = np.arange(32, dtype=np.uint8)
+        dev = jax.device_put(probe)
+        jax.block_until_ready(dev)
+        probe[0] ^= 0xFF
+        _DEVICE_PUT_COPIES = int(np.asarray(dev)[0]) != int(probe[0])
+    return _DEVICE_PUT_COPIES
+
+
+_DEVICE_PUT_COPIES: Optional[bool] = None
+
+
+class StagingPool:
+    """Reusable host staging buffers for streamed ingest.
+
+    ``take`` returns a buffer of the requested (shape, dtype), reusing a
+    released buffer of the same byte size when one exists; ``give``
+    releases a buffer back.  The pool keeps at most ``max_buffers`` per
+    size class, so an ingest pipeline's peak host RAM is O(largest module
+    × in-flight window), not O(artifact).
+
+    On zero-copy backends (CPU: ``jax.device_put`` aliases the numpy
+    buffer) ``give`` of a device-transferred buffer is refused by the
+    caller passing ``transferred=True`` — recycling it would rewrite live
+    bank weights."""
+
+    def __init__(self, max_buffers: int = 2):
+        self.max_buffers = max_buffers
+        self._free: dict[int, list] = {}
+        self.stats = {"takes": 0, "reuses": 0, "drops": 0}
+
+    def take(self, shape, dtype) -> np.ndarray:
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        self.stats["takes"] += 1
+        bucket = self._free.get(nbytes)
+        if bucket:
+            self.stats["reuses"] += 1
+            raw = bucket.pop()
+        else:
+            raw = np.empty(nbytes, np.uint8)
+        return raw.view(np.dtype(dtype))[: int(np.prod(shape))].reshape(shape)
+
+    def give(self, arr: np.ndarray, *, transferred: bool = False) -> None:
+        if transferred and not _device_put_copies():
+            # the "host" buffer IS the device buffer now — dropping our
+            # reference hands ownership to jax; recycling would corrupt
+            self.stats["drops"] += 1
+            return
+        raw = arr.view(np.uint8).reshape(-1)
+        base = raw.base if raw.base is not None else raw
+        bucket = self._free.setdefault(int(raw.nbytes), [])
+        if len(bucket) < self.max_buffers:
+            bucket.append(np.asarray(base).view(np.uint8).reshape(-1))
+        else:
+            self.stats["drops"] += 1
+
+
+def _stream_npz_member(zf: zipfile.ZipFile, member: str, *,
+                       chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                       pool: Optional[StagingPool] = None) -> np.ndarray:
+    """Read ONE .npy member of an (uncompressed) npz in bounded chunks
+    into a host array, checking truncation per chunk — a short stream
+    raises IOError at the first missing byte instead of np.load silently
+    mis-parsing (or buffering the whole payload first)."""
+    with zf.open(member) as f:
+        version = _npformat.read_magic(f)
+        if version == (1, 0):
+            shape, fortran, dtype = _npformat.read_array_header_1_0(f)
+        elif version == (2, 0):
+            shape, fortran, dtype = _npformat.read_array_header_2_0(f)
+        else:                       # exotic npy version: no streaming path
+            return _npformat.read_array(f)
+        count = int(np.prod(shape))
+        out = (pool.take(shape, dtype) if pool is not None
+               else np.empty(count, dtype).reshape(shape))
+        buf = out.reshape(-1).view(np.uint8)
+        nbytes = count * dtype.itemsize
+        got = 0
+        while got < nbytes:
+            want = min(int(chunk_bytes), nbytes - got)
+            n = f.readinto(memoryview(buf)[got:got + want])
+            if not n:
+                raise IOError(
+                    f"truncated artifact member {member}: got {got} of "
+                    f"{nbytes} bytes")
+            got += n
+        if fortran:                 # np.savez writes C-order; be tolerant
+            out = out.reshape(-1).reshape(shape[::-1]).T
+    return out
+
+
+def iter_artifact_modules(in_dir: str, *, verify: bool = True,
+                          chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                          pool: Optional[StagingPool] = None,
+                          pacer: Optional[Callable[[], None]] = None
+                          ) -> Iterator[tuple]:
+    """Stream a FULL artifact module by module: yields
+    ``("delta", path, info, {packed, v_row, v_col, use_row})`` then
+    ``("extra", path, info, array)``, all host numpy arrays read in
+    bounded chunks (peak host RAM is O(largest module), not O(artifact)).
+    Per-module sha verification happens here, host-side, so a consumer on
+    an ingest thread never hands a corrupt module to the device.
+
+    The manifest-level file-size check still runs first (catches container
+    truncation cheaply); the per-chunk check above catches member-level
+    truncation the container sizes cannot see.
+
+    ``pacer`` (if given) is called between module streams.  A background
+    ingest thread passes a short sleep here so it yields the host between
+    modules instead of monopolising cores for the whole read — on hosts
+    where ingest and decode dispatch share CPUs, this bounds how much of
+    the ingest any single decode step can absorb (serving-SLO pacing)."""
+    path = pathlib.Path(in_dir)
+    manifest = read_manifest(path)
+    if manifest.get("kind", "full") != "full":
+        raise ValueError(
+            f"{path} holds an incremental update patch (parent version "
+            f"{manifest.get('lineage', {}).get('parent_version')}); "
+            "materialise it via VariantStore.load")
+    if verify:
+        for fname, nbytes in manifest.get("files", {}).items():
+            actual = (path / fname).stat().st_size \
+                if (path / fname).exists() else -1
+            if actual != nbytes:
+                raise IOError(
+                    f"truncated artifact: {fname} is {actual} bytes, "
+                    f"manifest records {nbytes}")
+    with zipfile.ZipFile(path / "deltas.npz") as zf:
+        for p, info in manifest["deltas"].items():
+            key = p.replace(".", "__")
+            fields = {f: _stream_npz_member(zf, f"{key}__{f}.npy",
+                                            chunk_bytes=chunk_bytes,
+                                            pool=pool)
+                      for f in ("packed", "v_row", "v_col", "use_row")}
+            if verify and _sha(fields["packed"]) != info["sha"]:
+                raise IOError(f"corrupt mask for {p}")
+            yield "delta", p, info, fields
+            if pacer is not None:
+                pacer()
+    with zipfile.ZipFile(path / "extras.npz") as zf:
+        for p, info in manifest["extras"].items():
+            arr = _stream_npz_member(zf, p.replace(".", "__") + ".npy",
+                                     chunk_bytes=chunk_bytes, pool=pool)
+            if verify and _sha(arr) != info["sha"]:
+                raise IOError(f"corrupt extra for {p}")
+            yield "extra", p, info, arr
+            if pacer is not None:
+                pacer()
+
+
 def save_artifact(dm: DeltaModel, out_dir: str, *,
                   base_fp: Optional[str] = None,
                   meta: Optional[dict] = None,
@@ -141,52 +308,37 @@ def save_artifact(dm: DeltaModel, out_dir: str, *,
 
 
 def load_artifact(in_dir: str, *, expect_base_fp: Optional[str] = None,
-                  verify: bool = True) -> DeltaModel:
+                  verify: bool = True,
+                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                  pacer: Optional[Callable[[], None]] = None) -> DeltaModel:
     """Load a FULL artifact.  Accepts v1 (no size accounting), v2, and v3
     (lineage) manifests; patch artifacts need their parent and load through
-    ``VariantStore.load``."""
+    ``VariantStore.load``.
+
+    The payload is STREAMED per module in ``chunk_bytes`` reads with
+    per-chunk truncation checks (``iter_artifact_modules``) — the whole
+    artifact is never buffered in host RAM before device transfer, so
+    peak host footprint is O(largest module)."""
     path = pathlib.Path(in_dir)
     manifest = read_manifest(path)
-    if manifest.get("kind", "full") != "full":
-        raise ValueError(
-            f"{path} holds an incremental update patch (parent version "
-            f"{manifest.get('lineage', {}).get('parent_version')}); "
-            "materialise it via VariantStore.load")
-    if expect_base_fp and manifest.get("base_fingerprint") and \
+    if manifest.get("kind", "full") == "full" and expect_base_fp and \
+            manifest.get("base_fingerprint") and \
             manifest["base_fingerprint"] != expect_base_fp:
         raise ValueError(
             f"artifact built for base {manifest['base_fingerprint']}, "
             f"got {expect_base_fp}")
-    # truncation sanity check (store v2+): the manifest records each
-    # payload file's byte size — a partial copy/rsync shows up here before
-    # np.load chokes on (or silently accepts) a short file
-    if verify:
-        for fname, nbytes in manifest.get("files", {}).items():
-            actual = (path / fname).stat().st_size \
-                if (path / fname).exists() else -1
-            if actual != nbytes:
-                raise IOError(
-                    f"truncated artifact: {fname} is {actual} bytes, "
-                    f"manifest records {nbytes}")
-    dz = np.load(path / "deltas.npz")
-    ez = np.load(path / "extras.npz")
     deltas, extras = {}, {}
-    for p, info in manifest["deltas"].items():
-        key = p.replace(".", "__")
-        packed = dz[f"{key}__packed"]
-        if verify and _sha(packed) != info["sha"]:
-            raise IOError(f"corrupt mask for {p}")
-        deltas[p] = DeltaEntry(
-            packed=jnp.asarray(packed),
-            v_row=jnp.asarray(dz[f"{key}__v_row"]).astype(jnp.float32),
-            v_col=jnp.asarray(dz[f"{key}__v_col"]).astype(jnp.float32),
-            use_row=jnp.asarray(dz[f"{key}__use_row"]),
-            scalar=info["scalar"])
-    for p, info in manifest["extras"].items():
-        arr = ez[p.replace(".", "__")]
-        if verify and _sha(arr) != info["sha"]:
-            raise IOError(f"corrupt extra for {p}")
-        extras[p] = jnp.asarray(arr)
+    for kind, p, info, payload in iter_artifact_modules(
+            path, verify=verify, chunk_bytes=chunk_bytes, pacer=pacer):
+        if kind == "delta":
+            deltas[p] = DeltaEntry(
+                packed=jnp.asarray(payload["packed"]),
+                v_row=jnp.asarray(payload["v_row"]).astype(jnp.float32),
+                v_col=jnp.asarray(payload["v_col"]).astype(jnp.float32),
+                use_row=jnp.asarray(payload["use_row"]),
+                scalar=info["scalar"])
+        else:
+            extras[p] = jnp.asarray(payload)
     return DeltaModel(deltas=deltas, extras=extras)
 
 
@@ -354,6 +506,10 @@ class VariantStore:
         self.param_shardings = param_shardings
         self._cache: "collections.OrderedDict[tuple, DeltaModel]" = \
             collections.OrderedDict()
+        # publish (control thread) and load (admission-pipeline ingest
+        # thread) share the materialisation cache + index files: serialise
+        # them (reentrant: publish_update loads its parent)
+        self._lock = threading.RLock()
 
     # -- index -------------------------------------------------------------
     def _vdir(self, name: str, version: int) -> pathlib.Path:
@@ -428,6 +584,11 @@ class VariantStore:
         Crash-safe ordering: payload npz -> atomic manifest -> atomic
         index; an unfinished version never becomes visible."""
         self._check_name(name)
+        with self._lock:
+            return self._publish_locked(name, dm, meta=meta)
+
+    def _publish_locked(self, name: str, dm: DeltaModel, *,
+                        meta: Optional[dict] = None) -> int:
         idx, v = self._next_version(name)
         manifest = save_artifact(
             dm, self._vdir(name, v), base_fp=self.base_fp, meta=meta,
@@ -448,6 +609,11 @@ class VariantStore:
         version-to-version residual is small (BitDelta's observation), so
         the XOR planes RLE down and the fp16 diffs stay sparse."""
         self._check_name(name)
+        with self._lock:
+            return self._publish_update_locked(name, dm, meta=meta)
+
+    def _publish_update_locked(self, name: str, dm: DeltaModel, *,
+                               meta: Optional[dict] = None) -> int:
         parent_v = self.latest(name)
         parent = self.load(name, parent_v)
         idx, v = self._next_version(name)
@@ -467,6 +633,10 @@ class VariantStore:
         """Move the ``latest`` pointer back — constant time, no artifact
         IO.  Default target: the highest version id below the current
         pointer."""
+        with self._lock:
+            return self._rollback_locked(name, to_version)
+
+    def _rollback_locked(self, name: str, to_version: Optional[int]) -> int:
         idx = self._read_index(name)
         cur = int(idx["latest"])
         if to_version is None:
@@ -483,11 +653,25 @@ class VariantStore:
 
     # -- materialisation ---------------------------------------------------
     def load(self, name: str, version: Optional[int] = None, *,
-             verify: bool = True) -> DeltaModel:
+             verify: bool = True,
+             pacer: Optional[Callable[[], None]] = None) -> DeltaModel:
         """Materialise a version: load the nearest full ancestor, apply
         patches forward (one jitted op per module,
         ``loader.apply_update``).  Results are cached per (name, version)
-        — version dirs are immutable, so the cache never goes stale."""
+        — version dirs are immutable, so the cache never goes stale.
+
+        ``pacer`` propagates to the streamed artifact read and runs between
+        chain steps (see :func:`iter_artifact_modules`); note the store
+        lock is held across the pacing sleeps, so a pacing ingest delays
+        concurrent publishes, never corrupts them."""
+        with self._lock:
+            return self._load_locked(name, version, verify=verify,
+                                     pacer=pacer)
+
+    def _load_locked(self, name: str, version: Optional[int], *,
+                     verify: bool,
+                     pacer: Optional[Callable[[], None]] = None
+                     ) -> DeltaModel:
         from repro.core import loader as L
         v = self.latest(name) if version is None else int(version)
         if (name, v) in self._cache:
@@ -510,7 +694,7 @@ class VariantStore:
             info = self.version_info(name, step)
             if info["kind"] == "full":
                 dm = load_artifact(vdir, expect_base_fp=self.base_fp,
-                                   verify=verify)
+                                   verify=verify, pacer=pacer)
             else:
                 manifest, dpatch, epatch = load_update_patch(vdir,
                                                              verify=verify)
@@ -525,6 +709,8 @@ class VariantStore:
                 if verify:
                     self._verify_patched(manifest, dm, vdir)
             self._cache[(name, step)] = dm
+            if pacer is not None:
+                pacer()
         dm = self._cache[(name, v)]
         self._cache.move_to_end((name, v))
         # trim OUTSIDE the chain walk (a parent must never vanish before

@@ -52,10 +52,19 @@ def main():
                     help="mesh-mode delta-GEMM lowering: per-shard "
                          "shard_map kernels (default) or the PR-4 "
                          "GSPMD-partitioned global kernels")
+    ap.add_argument("--async-admission", action="store_true",
+                    help="ingest+stage variant artifacts on a background "
+                         "pipeline and commit between decode steps "
+                         "(publish/update return without blocking; "
+                         "requires --scheduler continuous)")
     args = ap.parse_args()
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
                  "(mixed batches serve from the packed overlay bank)")
+    if args.async_admission and args.scheduler != "continuous":
+        ap.error("--async-admission requires --scheduler continuous "
+                 "(staged overlays commit into the overlay bank between "
+                 "decode steps)")
 
     import jax
     import numpy as np
@@ -95,7 +104,8 @@ def main():
                      max_resident=max_resident,
                      bank_size=args.variants + 2,
                      mesh=mesh, param_axes=param_axes if mesh else None,
-                     kernel_dispatch=args.kernel_dispatch)
+                     kernel_dispatch=args.kernel_dispatch,
+                     async_admission=args.async_admission)
     tunes = {}
     for i in range(args.variants):
         tunes[f"v{i}"] = fine_tune(100 + i)
@@ -130,9 +140,12 @@ def main():
 
     print("metrics:", dep.metrics)
     print("registry:", dep.stats)
+    if dep.admission is not None:
+        print("admission:", dep.admission.stats)
     if mesh is not None and dep.registry.bank is not None:
         print("bank per-device bytes:",
               dep.registry.bank.per_device_nbytes())
+    dep.close()
 
 
 if __name__ == "__main__":

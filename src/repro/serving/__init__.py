@@ -1,3 +1,4 @@
+from repro.serving.admission import AdmissionPipeline  # noqa: F401
 from repro.serving.api import Deployment  # noqa: F401
 from repro.serving.engine import ServingEngine  # noqa: F401
 from repro.serving.variants import VariantRegistry  # noqa: F401

@@ -1,0 +1,318 @@
+"""Async admission pipeline: artifact ingest off the serving thread.
+
+The synchronous lifecycle (PR 3) admits a variant INLINE: the first
+request for a new version pays the full chain on the serving thread —
+chunked store read, XOR patch chain, sha verification, host→device
+transfer, bank scatter — and every in-flight decode lane stalls for the
+duration.  DeltaZip keeps decompression off the serving critical path for
+exactly this reason; BitDelta-sized artifacts only pay off operationally
+if admitting one never pauses traffic.
+
+This module threads a SECOND execution timeline through the stack
+(DESIGN.md §13): a background ingest worker runs stages (1)-(2), the
+serving thread keeps only stage (3):
+
+1. **ingest** (worker thread): ``VariantStore.load`` → chunked per-module
+   npz streaming (``store.iter_artifact_modules``, bounded ``readinto``
+   reads — peak host RAM O(largest module)), XOR patch-chain walk, and
+   per-module sha verification, all host-side; the worker yields the host
+   between module streams (``pacing_s``) so co-located decode keeps its
+   step-latency SLO even when ingest and dispatch share CPUs;
+2. **stage** (worker thread): ``loader.stage_overlay_transfer`` begins
+   per-module ``jax.device_put`` WITHOUT a fence — H2D copies ride in
+   flight as jax futures and overlap whatever the serving thread is
+   executing;
+3. **commit** (serving thread, between decode steps): the engine's
+   ``drain(max_admits=1)`` hook performs the one donated bank scatter
+   (``VariantRegistry._bank_admit(block=False)``) — jax data dependencies
+   order the next decode after the scatter, so the only on-thread cost is
+   dispatch.
+
+Tickets move ``queued → staging → staged → admitted | failed``.  A failed
+ticket is CONSUMED by the first ``poll`` that observes it (the caller
+re-queues with its own retry budget, mirroring the sync path's
+``max_retries`` semantics).  While a ticket is live its version key is
+marked ``staging`` on the overlay bank, so ``evict``/``rollback`` of a
+mid-ingest variant raise cleanly instead of racing the commit.
+
+Thread model: ONE daemon ingest worker (lazy-started) plus the
+serving/user thread.  The worker touches only the store (RLock'd), the
+registry's read-mostly version tables, and jax dispatch (thread-safe);
+every bank mutation happens on the serving thread inside ``drain``/
+``wait``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+from repro.core import loader as L
+
+
+@dataclasses.dataclass
+class AdmissionTicket:
+    """One variant version moving through the ingest pipeline."""
+    nameish: str                      # caller-facing request string
+    name: str
+    version: object                   # None for unversioned registrations
+    vkey: str                         # bank/resident key (name@vN)
+    state: str = "queued"             # queued|staging|staged|admitted|failed
+    error: Optional[str] = None
+    dm: object = None                 # staged DeltaModel (device futures)
+    futures: list = dataclasses.field(default_factory=list)
+    enqueued_at: float = 0.0
+    staged_at: float = 0.0
+
+
+_LIVE = ("queued", "staging", "staged")
+
+
+class AdmissionPipeline:
+    """Background ingest + between-step commit for overlay-bank admission.
+
+    ``prefetch`` enqueues ingest of a variant's current version (publish/
+    update call it so staging overlaps the traffic that is still draining);
+    ``poll`` reports progress (auto-prefetching unseen variants — the
+    engine's admission loop is the other entry point); ``drain`` commits
+    staged overlays into the bank, at most ``max_admits`` scatters per
+    call, bounding the on-thread work per decode step; ``wait`` blocks
+    until a variant (or everything) has settled — the ``wait=`` escape
+    hatch of the non-blocking control-plane verbs."""
+
+    def __init__(self, registry, *, pacing_s: float = 0.002):
+        self.registry = registry
+        # SLO pacing: the worker sleeps ``pacing_s`` between module streams
+        # of the chunked artifact read (store.iter_artifact_modules), so on
+        # hosts where ingest and decode share CPUs no single decode step
+        # absorbs the whole ingest.  Costs ~pacing_s x module-count of
+        # extra staging wall-time — which the pipeline hides anyway — and
+        # nothing on hosts with spare cores.  0 disables.
+        self.pacing_s = pacing_s
+        self._cond = threading.Condition()
+        self._tickets: dict[str, AdmissionTicket] = {}    # vkey -> ticket
+        self._work: collections.deque = collections.deque()
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        self.stats = {"prefetches": 0, "staged": 0, "commits": 0,
+                      "failures": 0, "stage_seconds": 0.0}
+
+    # -- enqueue -----------------------------------------------------------
+    def prefetch(self, nameish: str) -> Optional[str]:
+        """Begin ingest of ``nameish``'s CURRENT version (or an explicit
+        ``name@vN``).  Idempotent: already-resident versions and live
+        tickets return immediately.  Returns the version key (None for
+        the base, which needs no admission)."""
+        if nameish == "__base__":
+            return None
+        name, version = self.registry._parse(nameish)   # KeyError: unknown
+        vkey = self.registry._vkey(name, version)
+        bank = self.registry.bank
+        if bank is not None and vkey in bank._slots:
+            return vkey                                  # already admitted
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("admission pipeline is closed")
+            t = self._tickets.get(vkey)
+            if t is not None and t.state in _LIVE:
+                return vkey
+            t = AdmissionTicket(nameish=nameish, name=name, version=version,
+                                vkey=vkey, enqueued_at=time.perf_counter())
+            self._tickets[vkey] = t
+            # mark BEFORE the worker can observe the ticket: evict/rollback
+            # must refuse from the moment ingest is promised
+            self.registry._ensure_bank().mark_staging(vkey)
+            self._work.append(vkey)
+            self.stats["prefetches"] += 1
+            self._ensure_worker()
+            self._cond.notify_all()
+        return vkey
+
+    # -- progress ----------------------------------------------------------
+    def poll(self, nameish: str) -> str:
+        """Pipeline state for ``nameish``: ``admitted`` once its version is
+        bank-resident, else the live ticket state (``queued``/``staging``/
+        ``staged``), auto-prefetching variants never seen.  A FAILED ticket
+        is consumed here — deleted so a later poll re-ingests — and its
+        error re-raised for the caller's retry logic."""
+        name, version = self.registry._parse(nameish)
+        vkey = self.registry._vkey(name, version)
+        bank = self.registry.bank
+        if bank is not None and vkey in bank._slots:
+            return "admitted"
+        with self._cond:
+            t = self._tickets.get(vkey)
+            if t is not None and t.state == "failed":
+                del self._tickets[vkey]
+                raise RuntimeError(t.error)
+        if t is None:
+            self.prefetch(nameish)
+            return "queued"
+        return t.state
+
+    def staging(self, name: str) -> bool:
+        """A version of ``name`` is mid-pipeline (queued/staging/staged —
+        not yet committed, not failed).  Rollback/evict guard."""
+        with self._cond:
+            return any(t.name == name and t.state in _LIVE
+                       for t in self._tickets.values())
+
+    def admitting(self) -> list:
+        """Version keys currently mid-pipeline (status surfacing)."""
+        with self._cond:
+            return sorted(k for k, t in self._tickets.items()
+                          if t.state in _LIVE)
+
+    def in_flight(self) -> int:
+        with self._cond:
+            return sum(1 for t in self._tickets.values()
+                       if t.state in _LIVE)
+
+    def wait_progress(self, timeout: float) -> None:
+        """Block the serving thread until a ticket is ready to commit (or
+        has failed), at most ``timeout`` seconds — the engine's idle wait
+        when every queued request is behind ingest (no busy spin)."""
+        with self._cond:
+            if any(t.state in ("staged", "failed")
+                   for t in self._tickets.values()):
+                return
+            self._cond.wait(timeout)
+
+    # -- commit (serving thread) -------------------------------------------
+    def drain(self, max_admits: int = 1) -> int:
+        """Commit up to ``max_admits`` staged overlays into the bank (one
+        donated scatter each, dispatched WITHOUT a device fence).  Called
+        by the engine between decode steps — ``max_admits=1`` bounds the
+        per-step on-thread work to one scatter dispatch.  Returns the
+        number of commits."""
+        done = 0
+        while done < max_admits:
+            with self._cond:
+                t = next((t for t in self._tickets.values()
+                          if t.state == "staged"), None)
+            if t is None or not self._commit(t):
+                break
+            done += 1
+        return done
+
+    def _commit(self, t: AdmissionTicket) -> bool:
+        """One staged ticket → bank scatter.  RuntimeError (bank full,
+        every slot pinned) leaves the ticket staged for a later drain;
+        any other failure fails the ticket."""
+        try:
+            self.registry._bank_admit(t.vkey, t.dm, block=False)
+        except RuntimeError:
+            return False          # transient capacity pressure: retry later
+        except Exception as e:
+            with self._cond:
+                t.state, t.error = "failed", str(e)
+                self.registry._ensure_bank().unmark_staging(t.vkey)
+                self.stats["failures"] += 1
+                self._cond.notify_all()
+            return False
+        with self._cond:
+            t.state = "admitted"
+            # residency is now visible via the bank itself; the ticket is
+            # done (poll checks bank slots first)
+            del self._tickets[t.vkey]
+            self.registry.bank.unmark_staging(t.vkey)
+            self.stats["commits"] += 1
+            self._cond.notify_all()
+        return True
+
+    def wait(self, nameish: Optional[str] = None, *,
+             timeout: float = 30.0) -> None:
+        """Block until ``nameish`` (or, with None, every live ticket) has
+        been committed or failed — committing staged tickets on THIS
+        thread, so waiting works with or without an engine drain loop.
+        Raises the ingest error of a failed ticket; TimeoutError on
+        deadline."""
+        vkey = None
+        if nameish is not None and nameish != "__base__":
+            name, version = self.registry._parse(nameish)
+            vkey = self.registry._vkey(name, version)
+        deadline = time.monotonic() + timeout
+        while True:
+            self.drain(max_admits=1 << 30)
+            with self._cond:
+                if vkey is not None:
+                    t = self._tickets.get(vkey)
+                    if t is None:
+                        return                      # committed (or never live)
+                    if t.state == "failed":
+                        del self._tickets[vkey]
+                        raise RuntimeError(t.error)
+                else:
+                    failed = next((t for t in self._tickets.values()
+                                   if t.state == "failed"), None)
+                    if failed is not None:
+                        del self._tickets[failed.vkey]
+                        raise RuntimeError(failed.error)
+                    if not self._tickets:
+                        return
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"admission of {nameish or 'all variants'} did not "
+                        f"settle within {timeout:.1f}s")
+                self._cond.wait(min(remaining, 0.05))
+
+    def close(self) -> None:
+        """Stop the ingest worker (idempotent).  Live tickets are left
+        un-committed; the daemon thread exits at its next wakeup."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+            self._worker = None
+
+    # -- ingest worker -----------------------------------------------------
+    def _pace(self) -> None:
+        """Yield the host between module streams (see ``pacing_s``)."""
+        if self.pacing_s > 0:
+            time.sleep(self.pacing_s)
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._run, name="admission-ingest", daemon=True)
+            self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._work and not self._closed:
+                    self._cond.wait(1.0)
+                if self._closed:
+                    return
+                vkey = self._work.popleft()
+                t = self._tickets.get(vkey)
+                if t is None or t.state != "queued":
+                    continue
+                t.state = "staging"
+            try:
+                t0 = time.perf_counter()
+                # stages (1)+(2): chunked store read + patch chain + sha
+                # verify (host-side), then unfenced per-module H2D
+                # transfers — all off the serving thread
+                dm = self.registry._load(t.name, t.version,
+                                         pacer=self._pace)
+                dm_dev, futures = L.stage_overlay_transfer(
+                    dm, param_shardings=self.registry.param_shardings)
+                with self._cond:
+                    t.dm, t.futures = dm_dev, futures
+                    t.state, t.staged_at = "staged", time.perf_counter()
+                    self.stats["staged"] += 1
+                    self.stats["stage_seconds"] += t.staged_at - t0
+                    self._cond.notify_all()
+            except Exception as e:      # noqa: BLE001 — ticket carries it
+                with self._cond:
+                    t.state, t.error = "failed", str(e)
+                    self.stats["failures"] += 1
+                    bank = self.registry.bank
+                    if bank is not None:
+                        bank.unmark_staging(t.vkey)
+                    self._cond.notify_all()

@@ -65,7 +65,8 @@ class Deployment:
                  max_resident: int = 8, max_retries: int = 1,
                  param_shardings=None, use_kernel: bool = True,
                  mesh=None, param_axes=None,
-                 kernel_dispatch: str = "shard_map"):
+                 kernel_dispatch: str = "shard_map",
+                 async_admission: bool = False):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
         if scheduler == "continuous" and mode != "fused":
@@ -115,18 +116,35 @@ class Deployment:
                     self.registry.set_version(name, v,
                                               self._store_ref(name, v))
                 self.registry.set_version(name, store.latest(name))
+        self.admission = None
+        if async_admission:
+            if scheduler != "continuous":
+                raise ValueError(
+                    "async_admission requires scheduler='continuous' "
+                    "(staged overlays commit into the overlay bank "
+                    "between decode steps)")
+            from repro.serving.admission import AdmissionPipeline
+            self.admission = AdmissionPipeline(self.registry)
+            self.registry.admission = self.admission
         self.engine = ServingEngine(
             model, self.registry, batch_size=batch_size,
             prompt_len=prompt_len, max_len=max_len,
             max_retries=max_retries, scheduler=scheduler, mesh=mesh,
-            kernel_dispatch=kernel_dispatch)
+            kernel_dispatch=kernel_dispatch, admission=self.admission)
 
     # -- control plane -----------------------------------------------------
     def publish(self, name: str, dm: DeltaModel, *,
                 mode: Optional[str] = None,
-                meta: Optional[dict] = None) -> int:
+                meta: Optional[dict] = None, wait: bool = False) -> int:
         """Publish ``dm`` as the next FULL version of ``name`` and point
-        serving at it.  Returns the new version id."""
+        serving at it.  Returns the new version id.
+
+        With async admission the call is NON-BLOCKING: ingest + staging of
+        the new version starts immediately on the pipeline (overlapping
+        any in-flight decode) and the version commits into the bank
+        between decode steps; ``wait=True`` blocks until it is resident
+        (the escape hatch for callers that need the old synchronous
+        contract)."""
         if mode == "dense" and self.engine.scheduler == "continuous":
             raise ValueError(
                 "per-variant mode='dense' cannot serve under the "
@@ -139,15 +157,18 @@ class Deployment:
             v = self.registry.next_version(name)
             artifact = dm
         self.registry.set_version(name, v, artifact, mode=mode)
+        self._after_swap(name, wait)
         return v
 
     def update(self, name: str, dm: DeltaModel, *,
-               meta: Optional[dict] = None) -> int:
+               meta: Optional[dict] = None, wait: bool = False) -> int:
         """Incremental publish + atomic hot-swap: ``dm`` becomes the next
         version — shipped as an XOR/RLE patch against the current latest
         when a store backs this deployment — and the serving pointer moves.
         Requests admitted after this call serve the new version; in-flight
-        requests finish on the old version's pinned bank slot."""
+        requests finish on the old version's pinned bank slot.  With async
+        admission the patch-chain walk and staging run off-thread
+        (``wait=True`` blocks until the new version is bank-resident)."""
         if self.store is not None:
             v = self.store.publish_update(name, dm, meta=meta)
             artifact = self._store_ref(name, v)
@@ -157,19 +178,48 @@ class Deployment:
             v = self.registry.next_version(name)
             artifact = dm
         self.registry.set_version(name, v, artifact)
+        self._after_swap(name, wait)
         return v
 
-    def rollback(self, name: str, to_version: Optional[int] = None) -> int:
+    def rollback(self, name: str, to_version: Optional[int] = None, *,
+                 wait: bool = False) -> int:
         """Constant-time pointer move back to ``to_version`` (default:
         previous version).  Artifacts are untouched; if the target version
-        is still device-resident the next admission is a cache hit."""
+        is still device-resident the next admission is a cache hit.
+
+        Raises RuntimeError while a version of ``name`` is mid-ingest on
+        the async admission pipeline: rolling back under a staging
+        admission would race the commit — wait for it to land (or fail)
+        first."""
+        if self.admission is not None and self.admission.staging(name):
+            raise RuntimeError(
+                f"variant {name!r} has a version mid-admission; wait for "
+                "it to land before rolling back")
         if self.store is not None:
             v = self.store.rollback(name, to_version)
             # the registry may not have seen this version yet (e.g. a
             # fresh Deployment over an existing store directory)
             self.registry.set_version(name, v, self._store_ref(name, v))
-            return v
-        return self.registry.rollback(name, to_version)
+        else:
+            v = self.registry.rollback(name, to_version)
+        self._after_swap(name, wait)
+        return v
+
+    def _after_swap(self, name: str, wait: bool) -> None:
+        """Post-pointer-move admission policy: async deployments start
+        ingest of the new current version IMMEDIATELY (staging overlaps
+        in-flight decode — publish→first-token no longer pays the inline
+        load); ``wait=True`` restores the blocking contract on both
+        paths."""
+        if self.admission is not None:
+            self.admission.prefetch(name)
+            if wait:
+                self.admission.wait(name)
+        elif wait:
+            if self.engine.scheduler == "continuous":
+                self.registry.bank_resolve(name)
+            else:
+                self.registry.resolve(name)
 
     def current(self, name: str) -> Optional[int]:
         """Version the serving pointer resolves to right now."""
@@ -182,11 +232,29 @@ class Deployment:
     def variants(self) -> list:
         return self.registry.registered()
 
+    def admitting(self) -> list:
+        """Version keys currently mid-ingest on the async admission
+        pipeline (empty for synchronous deployments)."""
+        return [] if self.admission is None else self.admission.admitting()
+
+    def close(self) -> None:
+        """Stop the async admission worker (no-op for synchronous
+        deployments).  Idempotent; tests and benchmarks call it so ingest
+        threads never outlive their deployment."""
+        if self.admission is not None:
+            self.admission.close()
+
     def _store_ref(self, name: str, version: int):
         """Lazy materialisation closure: the registry loads (and the store
-        caches) the version only when a request actually needs it."""
+        caches) the version only when a request actually needs it.  The
+        closure advertises ``accepts_pacer`` so a background ingest can
+        thread its SLO-pacing hook down to the streamed artifact read."""
         store = self.store
-        return lambda: store.load(name, version)
+
+        def ref(pacer=None):
+            return store.load(name, version, pacer=pacer)
+        ref.accepts_pacer = True
+        return ref
 
     # -- data plane --------------------------------------------------------
     def submit(self, tokens, variant: str = "__base__",
@@ -208,7 +276,9 @@ class Deployment:
     def status(self, rid: int) -> dict:
         """Lifecycle view of one request — never raises.  ``version`` is
         the variant version the request resolved at admission (stable
-        across later updates/rollbacks of the variant)."""
+        across later updates/rollbacks of the variant).  ``status`` may be
+        ``admitting``: the request's variant is mid-ingest on the async
+        admission pipeline (queued behind staging, not unknown)."""
         r = self.engine.request(rid)
         if r is None:
             return {"status": "unknown", "rid": rid}

@@ -81,6 +81,9 @@ class Request:
     served_version: Optional[int] = None   # variant version resolved at
                                            # admission (None: base or
                                            # unversioned registration)
+    first_token_at: Optional[float] = None   # perf_counter at the first
+                                             # emitted token (TTFT metric:
+                                             # benchmarks/admission_overlap)
 
 
 @dataclasses.dataclass
@@ -120,11 +123,17 @@ class ServingEngine:
                  batch_size: int = 4, prompt_len: int = 32,
                  max_len: int = 128, max_retries: int = 1,
                  greedy: bool = True, scheduler: str = "group",
-                 mesh=None, kernel_dispatch: str = "shard_map"):
+                 mesh=None, kernel_dispatch: str = "shard_map",
+                 admission=None):
         if scheduler not in ("group", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if kernel_dispatch not in ("shard_map", "gspmd"):
             raise ValueError(f"unknown kernel_dispatch {kernel_dispatch!r}")
+        if admission is not None and scheduler != "continuous":
+            raise ValueError(
+                "async admission requires scheduler='continuous' (staged "
+                "overlays commit into the overlay bank between decode "
+                "steps; the group scheduler admits dense residents inline)")
         self.model = model
         self.registry = registry
         self.batch_size = batch_size
@@ -134,6 +143,11 @@ class ServingEngine:
         self.scheduler = scheduler
         self.mesh = mesh
         self.kernel_dispatch = kernel_dispatch
+        # optional serving/admission.AdmissionPipeline: variants are
+        # ingested+staged off-thread and committed between decode steps
+        # (drain hook in _serve_continuous) instead of loaded inline at
+        # bank_acquire; queued requests behind ingest report "admitting"
+        self.admission = admission
         self._queue: collections.deque[Request] = collections.deque()
         self._done: dict[int, Request] = {}
         self._next_rid = 0
@@ -208,7 +222,14 @@ class ServingEngine:
         self.metrics = {"batches": 0, "tokens_generated": 0,
                         "prefills": 0, "failed": 0, "admitted": 0,
                         "retired": 0, "decode_steps": 0,
-                        "prefill_seconds": 0.0, "decode_seconds": 0.0}
+                        "prefill_seconds": 0.0, "decode_seconds": 0.0,
+                        "async_admits": 0}
+        # benchmark hook (benchmarks/admission_overlap.py): with
+        # record_step_times=True every decode step appends
+        # (perf_counter_at_end, seconds, admission_in_flight) — the
+        # stall-ceiling evidence
+        self.record_step_times = False
+        self.step_times: list = []
 
     # -- sharded step dispatch -----------------------------------------------
     def _arg_sharding(self, role: str, arg):
@@ -289,7 +310,10 @@ class ServingEngine:
         return None
 
     def status(self, rid: int) -> str:
-        """queued | running | done | failed | unknown — never raises."""
+        """queued | admitting | running | done | failed | unknown — never
+        raises.  ``admitting`` means the request's variant is mid-ingest
+        on the async admission pipeline (queued behind staging, NOT an
+        unknown variant)."""
         r = self.request(rid)
         return "unknown" if r is None else r.status
 
@@ -374,6 +398,8 @@ class ServingEngine:
                 # occupy a batch lane but neither emit nor count
                 if step < r.max_new_tokens:
                     r.out_tokens.append(int(host_tok[i]))
+                    if r.first_token_at is None:
+                        r.first_token_at = time.perf_counter()
                     n_active += 1
             self.metrics["tokens_generated"] += n_active
             if step + 1 >= n_steps:
@@ -428,9 +454,30 @@ class ServingEngine:
         max_retries then fail; a fully-pinned bank re-queues the head and
         waits for retirements."""
         newly: list = []
+        skipped: list = []
         free = [i for i in range(self.batch_size) if self._slots[i] is None]
         while free and self._queue:
             r = self._queue.popleft()
+            if self.admission is not None and r.variant != "__base__":
+                # async path: never load on the serving thread — consult
+                # the pipeline (auto-prefetching unseen variants) and skip
+                # the request while its version is still ingesting
+                try:
+                    state = self.admission.poll(r.variant)
+                except Exception as e:   # ingest failed: same retry budget
+                    r.retries += 1       # as the sync artifact-load path
+                    if r.retries > self.max_retries:
+                        r.status, r.error = "failed", str(e)
+                        self._done[r.rid] = r
+                        self.metrics["failed"] += 1
+                    else:
+                        r.status = "queued"
+                        self._queue.append(r)
+                    continue
+                if state != "admitted":
+                    r.status = "admitting"
+                    skipped.append(r)
+                    continue
             try:
                 # admission-time resolution: a queued request follows the
                 # serving pointer at THIS moment — a version published (or
@@ -461,6 +508,9 @@ class ServingEngine:
             r.status = "running"
             newly.append(i)
             self.metrics["admitted"] += 1
+        # skipped (mid-admission) requests return to the FRONT in their
+        # original order: admission order stays FIFO once staging lands
+        self._queue.extendleft(reversed(skipped))
         return newly
 
     def _prefill_admitted(self, newly: list) -> None:
@@ -499,6 +549,13 @@ class ServingEngine:
         # drains fully instead of stranding requests mid-flight
         stalls = 0
         while (self._queue or self.active()) and stalls < max_rounds:
+            # admission drain hook: commit AT MOST ONE staged overlay per
+            # step (one donated scatter dispatch, no fence) — the bounded
+            # on-thread cost of async admission (DESIGN.md §13)
+            drained = 0
+            if self.admission is not None:
+                drained = self.admission.drain(max_admits=1)
+                self.metrics["async_admits"] += drained
             failed0 = self.metrics["failed"]
             newly = self._admit_free_slots()
             if newly:
@@ -508,7 +565,18 @@ class ServingEngine:
                     break
                 # admissions failed this round; retry (counts as a stall
                 # unless requests were failed — retries terminate)
-                stalls = 0 if self.metrics["failed"] > failed0 else stalls + 1
+                if self.metrics["failed"] > failed0 or drained:
+                    stalls = 0
+                elif self.admission is not None \
+                        and self.admission.in_flight():
+                    # every queued request is behind ingest and no lane is
+                    # decoding: sleep on pipeline progress, don't busy-spin
+                    # (terminates: ingest stages, fails, or commits once
+                    # retirements release pins)
+                    self.admission.wait_progress(0.05)
+                    stalls = 0
+                else:
+                    stalls += 1
                 continue
             stalls = 0
             # ONE host sync per step: every active slot has exactly one
@@ -519,6 +587,8 @@ class ServingEngine:
                 if s is None:
                     continue
                 s.request.out_tokens.append(int(host_tok[i]))
+                if s.request.first_token_at is None:
+                    s.request.first_token_at = time.perf_counter()
                 s.remaining -= 1
                 self.metrics["tokens_generated"] += 1
                 if s.remaining <= 0:
@@ -541,13 +611,23 @@ class ServingEngine:
             bank = self.registry.bank.tree if self.registry.bank else None
             if self._variant_idx_dev is None:
                 self._variant_idx_dev = jnp.asarray(self._variant_idx)
+            admission_busy = drained > 0 or (
+                self.admission is not None
+                and self.admission.in_flight() > 0)
             t0 = time.perf_counter()
             self._next_tok, self._cache = self._call(
                 "decode_banked", self.registry.base_params, bank,
                 self._variant_idx_dev, self._next_tok, self._cache)
             jax.block_until_ready(self._next_tok)
-            self.metrics["decode_seconds"] += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.metrics["decode_seconds"] += dt
             self.metrics["decode_steps"] += 1
+            if self.record_step_times:
+                # steps overlapping admission inherit the scatter the jax
+                # dependency chain ordered before them — exactly the stall
+                # the benchmark's 2x ceiling gates
+                self.step_times.append(
+                    (time.perf_counter(), dt, admission_busy))
         self.metrics["batches"] += 1
 
     def _prompt_batch(self, requests: dict) -> dict:

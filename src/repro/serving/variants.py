@@ -37,6 +37,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 import time
 from typing import Optional
 
@@ -144,6 +145,9 @@ class OverlayBank:
         self._lru: "collections.OrderedDict[str, None]" = \
             collections.OrderedDict()
         self._free = list(range(size - 1, 0, -1))   # pop() -> lowest slot
+        # variants mid-ingest on the admission pipeline: not yet in a slot,
+        # but eviction/rollback must see them (DESIGN.md §13)
+        self._staging: set = set()
         self.stats = {"admits": 0, "evictions": 0}
 
     # -- structure ---------------------------------------------------------
@@ -232,6 +236,33 @@ class OverlayBank:
         self._rebuild()
         return slot, payload
 
+    def admit_async(self, name: str, dm: DeltaModel):
+        """``admit`` without the caller-side device fence: returns
+        ``(slot, payload_bytes, fence)`` where ``fence()`` blocks until
+        the admission scatter has landed.  The async admission pipeline
+        dispatches the scatter between decode steps and lets jax data
+        dependencies order the next decode after it — the fence is only
+        for callers (tests, stats) that need a wall-clock boundary."""
+        slot, payload = self.admit(name, dm)
+        leaves = jax.tree.leaves(self.tree) if self.tree is not None else []
+        if leaves:
+            def fence(leaf=leaves[0]):
+                jax.block_until_ready(leaf)
+        else:
+            def fence():
+                return None
+        return slot, payload, fence
+
+    # -- staging marks (async admission pipeline, DESIGN.md §13) -----------
+    def mark_staging(self, name: str) -> None:
+        self._staging.add(name)
+
+    def unmark_staging(self, name: str) -> None:
+        self._staging.discard(name)
+
+    def staging(self, name: str) -> bool:
+        return name in self._staging
+
     def pin(self, name: str) -> None:
         if name != "__base__":
             self._pins[name] = self._pins.get(name, 0) + 1
@@ -245,7 +276,13 @@ class OverlayBank:
 
     def evict(self, name: str) -> None:
         """Free a slot for reuse; refuses while the variant is pinned
-        (mid-flight requests reference its slot index)."""
+        (mid-flight requests reference its slot index) or still staging
+        on the admission pipeline (its slot does not exist yet — evicting
+        mid-ingest would race the commit)."""
+        if self.staging(name):
+            raise RuntimeError(
+                f"variant {name!r} is staging on the admission pipeline; "
+                "wait for the admission to land before evicting")
         if name not in self._slots:
             return
         if self.pinned(name):
@@ -333,6 +370,12 @@ class VariantRegistry:
         self.mode = mode
         self.bank_size = bank_size
         self.bank: Optional[OverlayBank] = None   # created on first use
+        # serving thread and the admission ingest worker both touch the
+        # bank lazily — creation must be raced-once (DESIGN.md §13)
+        self._bank_lock = threading.Lock()
+        # attached by serving/api.Deployment when async admission is on;
+        # evict/rollback consult it for mid-ingest variants
+        self.admission = None
         self._bank_evictions_seen = 0
         self._versions: dict[str, dict] = {}   # name -> {version: artifact}
         self._current: dict[str, Optional[int]] = {}   # serving pointer
@@ -516,6 +559,40 @@ class VariantRegistry:
         return params
 
     # -- banked resolution (mixed-variant batches) -------------------------
+    def _ensure_bank(self) -> OverlayBank:
+        """Lazily create the overlay bank, raced-once: the serving thread
+        (bank_resolve) and the admission ingest worker (mark_staging at
+        enqueue) may both arrive first."""
+        with self._bank_lock:
+            if self.bank is None:
+                self.bank = OverlayBank(self.base_params, self.bank_size,
+                                        mesh=self.mesh,
+                                        param_axes=self.param_axes)
+            return self.bank
+
+    def _bank_admit(self, vkey: str, dm: DeltaModel, *,
+                    block: bool = True) -> int:
+        """Scatter ``dm`` into the bank under ``vkey`` and book the swap
+        stats (one shared path for synchronous bank_resolve and the async
+        admission pipeline's commit).  ``block=False`` skips the device
+        fence — the scatter is dispatched and jax data dependencies order
+        the next decode step after it, so the serving thread never waits
+        on the copy."""
+        bank = self._ensure_bank()
+        before = bank.nbytes()
+        t0 = time.perf_counter()
+        slot, payload, fence = bank.admit_async(vkey, dm)
+        if block:
+            fence()
+        self.stats["swaps"] += 1
+        self.stats["swap_seconds"] += time.perf_counter() - t0
+        self.stats["transferred_bytes"] += payload
+        self.stats["resident_bytes"] += bank.nbytes() - before
+        self.stats["evictions"] += (bank.stats["evictions"]
+                                    - self._bank_evictions_seen)
+        self._bank_evictions_seen = bank.stats["evictions"]
+        return slot
+
     def bank_resolve(self, nameish: str) -> int:
         """Admit the CURRENT version of ``nameish`` (or an explicit
         ``name@vN``) into the overlay bank (created on demand) and return
@@ -523,18 +600,15 @@ class VariantRegistry:
         '__base__' is always slot 0.  Swap/residency stats migrate to the
         bank: ``resident_bytes`` tracks the bank allocation (charged when
         the bank grows, not per admitted variant)."""
-        if self.bank is None:
-            self.bank = OverlayBank(self.base_params, self.bank_size,
-                                    mesh=self.mesh,
-                                    param_axes=self.param_axes)
+        bank = self._ensure_bank()
         if nameish == "__base__":
             return 0
         name, version = self._parse(nameish)
         vkey = self._vkey(name, version)
-        if vkey in self.bank._slots:
+        if vkey in bank._slots:
             self.stats["hits"] += 1
-            return self.bank.admit(vkey, None)[0]   # LRU touch, no payload
-        if self.bank.tree is not None and not self.bank.has_capacity():
+            return bank.admit(vkey, None)[0]   # LRU touch, no payload
+        if bank.tree is not None and not bank.has_capacity():
             # refuse BEFORE the disk load: a fully-pinned bank would
             # otherwise re-read + re-verify the artifact every scheduler
             # step while waiting for a retirement to free a pin
@@ -542,18 +616,7 @@ class VariantRegistry:
                 "overlay bank full: every resident is pinned by an "
                 "in-flight request")
         dm = self._load(name, version)
-        before = self.bank.nbytes()
-        t0 = time.perf_counter()
-        slot, payload = self.bank.admit(vkey, dm)
-        jax.block_until_ready(jax.tree.leaves(self.bank.tree)[0])
-        self.stats["swaps"] += 1
-        self.stats["swap_seconds"] += time.perf_counter() - t0
-        self.stats["transferred_bytes"] += payload
-        self.stats["resident_bytes"] += self.bank.nbytes() - before
-        self.stats["evictions"] += (self.bank.stats["evictions"]
-                                    - self._bank_evictions_seen)
-        self._bank_evictions_seen = self.bank.stats["evictions"]
-        return slot
+        return self._bank_admit(vkey, dm, block=True)
 
     def bank_acquire(self, nameish: str) -> tuple:
         """Admit AND pin in one step: returns (slot, version_key).  The
@@ -596,14 +659,21 @@ class VariantRegistry:
     def resident_nbytes(self, nameish: str) -> int:
         return self._resident[self._bank_key(nameish)].nbytes
 
-    def _load(self, name: str, version=None) -> DeltaModel:
+    def _load(self, name: str, version=None, pacer=None) -> DeltaModel:
         art = self._versions[name][version]
         if isinstance(art, DeltaModel):
             return art
         try:
             if callable(art):
-                return art()    # lazy store materialisation
-            return S.load_artifact(str(art), expect_base_fp=self._base_fp)
+                # lazy store materialisation; pacing callables advertise
+                # themselves (Deployment._store_ref) — arbitrary user
+                # callables keep the plain zero-arg contract
+                if pacer is not None and getattr(art, "accepts_pacer",
+                                                 False):
+                    return art(pacer=pacer)
+                return art()
+            return S.load_artifact(str(art), expect_base_fp=self._base_fp,
+                                   pacer=pacer)
         except Exception:
             # fault tolerance: corrupt/missing artifact must not take the
             # node down — record and retry without integrity gating so the
@@ -615,8 +685,13 @@ class VariantRegistry:
         """Evict a variant's device residency by name (current version),
         explicit ``name@vN``, or raw version key."""
         key = self._bank_key(nameish)
-        # pin check FIRST: refusing a pinned (mid-flight) banked variant
-        # must not half-evict — the dense resident and stats stay intact
+        # staging/pin checks FIRST: refusing a mid-ingest or pinned
+        # (mid-flight) banked variant must not half-evict — the dense
+        # resident and stats stay intact
+        if self.bank is not None and self.bank.staging(key):
+            raise RuntimeError(
+                f"variant {key!r} is staging on the admission pipeline; "
+                "wait for the admission to land before evicting")
         if self.bank is not None and self.bank.pinned(key):
             raise RuntimeError(
                 f"variant {key!r} is pinned by in-flight requests; "

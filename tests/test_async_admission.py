@@ -1,0 +1,239 @@
+"""Async admission pipeline (DESIGN.md §13): staged off-thread ingest,
+between-step commit, `admitting` status surfacing, and the lifecycle
+guards (evict/rollback while staging) under concurrency.
+
+Correctness bar: a variant admitted ASYNCHRONOUSLY — ingest and H2D
+staging overlapping in-flight decode of other lanes — must yield greedy
+tokens BIT-IDENTICAL to the synchronous inline-admission path, and the
+PR-3 lifecycle invariants (version pinning, rollback, failed-artifact
+retry budgets) must hold with the second execution timeline running.
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import store as S
+from repro.models import build_model
+from repro.models.param import split
+from repro.serving import Deployment
+
+PROMPT = np.arange(1, 7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft1 = jax.tree.map(lambda b, p: b + 0.05 * p, base, pert)
+    ft2 = jax.tree.map(lambda b, p: b + 0.08 * p, base, pert)
+    return model, base, C.compress(base, ft1), C.compress(base, ft2)
+
+
+def _dep(model, base, root=None, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("bank_size", 4)
+    return Deployment(model, base, root_dir=root, **kw)
+
+
+def _serve(dep, variant, n=4):
+    rid = dep.submit(PROMPT, variant=variant, max_new_tokens=n)
+    dep.drain()
+    assert dep.result(rid).status == "done"
+    return dep.result(rid).out_tokens
+
+
+# ---------------------------------------------------------------------------
+# parity: async-admitted variants produce bit-identical greedy tokens
+# ---------------------------------------------------------------------------
+
+def test_async_admission_token_parity(setup, tmp_path):
+    """Store-backed publish/update served through the async pipeline must
+    emit exactly the sync path's tokens, and actually commit off the
+    inline path (async_admits > 0)."""
+    model, base, dm1, dm2 = setup
+    tokens = {}
+    for mode in ("sync", "async"):
+        dep = _dep(model, base, root=tmp_path / mode,
+                   async_admission=(mode == "async"))
+        dep.publish("prod", dm1)
+        t1 = _serve(dep, "prod", 5)
+        dep.update("prod", dm2)
+        t2 = _serve(dep, "prod", 5)
+        tokens[mode] = (t1, t2)
+        if mode == "async":
+            assert dep.metrics["async_admits"] >= 2
+            assert dep.admission.stats["failures"] == 0
+        dep.close()
+    assert tokens["async"] == tokens["sync"]
+
+
+def test_async_admission_overlaps_inflight_decode(setup):
+    """The point of the pipeline: while OTHER lanes decode, a new variant
+    ingests+stages in the background — decode steps run with admission in
+    flight (no stop-the-world), and the variant's tokens still match a
+    clean-room serve."""
+    model, base, dm1, _ = setup
+    dep = _dep(model, base, async_admission=True)
+
+    def slow_artifact():
+        time.sleep(0.15)          # pretend the store read/patch chain
+        return dm1                # takes a while (it runs OFF-thread)
+    dep.registry.set_version("slow", 1, slow_artifact)
+
+    dep.engine.record_step_times = True
+    r_base = [dep.submit(PROMPT, variant="__base__", max_new_tokens=64)
+              for _ in range(2)]
+    rid = dep.submit(PROMPT, variant="slow", max_new_tokens=5)
+    dep.drain()
+    assert all(dep.result(r).status == "done" for r in r_base)
+    assert dep.result(rid).status == "done"
+    # decode made progress during ingest: some steps ran with a live
+    # admission (the base lanes never waited for the 150 ms artifact)
+    assert any(busy for _, _, busy in dep.engine.step_times)
+    assert dep.metrics["async_admits"] == 1
+    dep.close()
+
+    ref = _dep(model, base)
+    ref.publish("slow", dm1)
+    assert dep.result(rid).out_tokens == _serve(ref, "slow", 5)
+
+
+# ---------------------------------------------------------------------------
+# control-plane semantics: non-blocking verbs, wait= escape hatch, status
+# ---------------------------------------------------------------------------
+
+def test_publish_nonblocking_with_wait_escape_hatch(setup, tmp_path):
+    model, base, dm1, dm2 = setup
+    dep = _dep(model, base, root=tmp_path / "s", async_admission=True)
+    v1 = dep.publish("prod", dm1)
+    # non-blocking: the version is NOT bank-resident at return (commit
+    # happens between decode steps or in wait) but ingest was enqueued
+    assert dep.registry.bank is None or \
+        f"prod@v{v1}" not in dep.registry.bank._slots
+    dep.admission.wait("prod")
+    assert f"prod@v{v1}" in dep.registry.bank._slots
+    # wait=True restores the blocking contract in one call
+    v2 = dep.update("prod", dm2, wait=True)
+    assert f"prod@v{v2}" in dep.registry.bank._slots
+    dep.close()
+
+
+def test_admitting_status_surfaced(setup):
+    """A request queued behind ingest reports ``admitting`` — distinct
+    from ``queued`` (no admission pending) and from ``unknown``."""
+    model, base, dm1, _ = setup
+    dep = _dep(model, base, async_admission=True)
+    dep.publish("prod", dm1)
+    rid = dep.submit(PROMPT, variant="prod", max_new_tokens=3)
+    # one admission pass, no drain: the variant is still staging (commits
+    # only happen in the drain hook), so the request must be skipped and
+    # surfaced as admitting, and the pipeline as in flight
+    dep.engine._admit_free_slots()
+    assert dep.engine.status(rid) == "admitting"
+    assert dep.status(rid)["status"] == "admitting"
+    assert dep.admitting() == ["prod@v1"]
+    dep.drain()
+    assert dep.engine.status(rid) == "done"
+    assert dep.admitting() == []
+    dep.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle guards under concurrency
+# ---------------------------------------------------------------------------
+
+def test_evict_while_staging_raises(setup):
+    model, base, dm1, _ = setup
+    dep = _dep(model, base, async_admission=True)
+
+    def slow_artifact():
+        time.sleep(0.2)
+        return dm1
+    dep.registry.set_version("prod", 1, slow_artifact)
+    dep.admission.prefetch("prod")
+    with pytest.raises(RuntimeError, match="staging"):
+        dep.registry.evict("prod")
+    dep.admission.wait("prod")            # admission lands ...
+    dep.registry.evict("prod")            # ... then eviction is clean
+    assert "prod@v1" not in dep.registry.bank._slots
+    dep.close()
+
+
+def test_rollback_while_staging_raises(setup):
+    model, base, dm1, dm2 = setup
+    dep = _dep(model, base, async_admission=True)
+    dep.publish("prod", dm1, wait=True)
+    t1 = _serve(dep, "prod", 4)
+
+    def slow_v2():
+        time.sleep(0.2)
+        return dm2
+    dep.registry.set_version("prod", 2, slow_v2)
+    dep.admission.prefetch("prod")
+    with pytest.raises(RuntimeError, match="mid-admission"):
+        dep.rollback("prod")
+    dep.admission.wait("prod")
+    assert dep.rollback("prod") == 1      # clean once the admission lands
+    assert _serve(dep, "prod", 4) == t1   # rollback re-serves v1 exactly
+    dep.close()
+
+
+def test_ingest_failure_respects_retry_budget(setup, tmp_path):
+    """A corrupt artifact failing on the INGEST THREAD must fail the
+    request through the same max_retries budget as the sync path — and
+    the node keeps serving other variants."""
+    model, base, dm1, _ = setup
+    st = S.VariantStore(tmp_path / "s", base_fp=S.base_fingerprint(base))
+    st.publish("bad", dm1)
+    # truncate the payload AFTER publish: the chunked reader must raise
+    blob = tmp_path / "s" / "bad" / "v0001" / "deltas.npz"
+    blob.write_bytes(blob.read_bytes()[: blob.stat().st_size // 2])
+    dep = _dep(model, base, root=tmp_path / "s", async_admission=True,
+               max_retries=1)
+    dep.publish("good", C.compress(base, jax.tree.map(
+        lambda b: b, base)))               # identity delta, valid artifact
+    rid_bad = dep.submit(PROMPT, variant="bad", max_new_tokens=3)
+    rid_good = dep.submit(PROMPT, variant="good", max_new_tokens=3)
+    dep.drain()
+    assert dep.result(rid_bad).status == "failed"
+    assert "truncated" in dep.result(rid_bad).error
+    assert dep.result(rid_good).status == "done"
+    assert dep.admission.stats["failures"] >= 1
+    # a failed ticket never leaves a stale staging mark behind
+    assert not dep.registry.bank.staging("bad@v1")
+    dep.close()
+
+
+def test_version_pinning_survives_async_hot_swap(setup):
+    """PR-3 invariant under the second timeline: a lane decoding v1 when
+    an ASYNC update lands finishes on v1's pinned slot; post-swap
+    admissions serve v2."""
+    model, base, dm1, dm2 = setup
+    dep = _dep(model, base, async_admission=True)
+    dep.publish("prod", dm1, wait=True)
+    rid_old = dep.submit(PROMPT, variant="prod", max_new_tokens=5)
+    dep.engine._prefill_admitted(dep.engine._admit_free_slots())
+    assert dep.registry.bank.pinned("prod@v1")
+    dep.update("prod", dm2)                # non-blocking hot-swap
+    rid_new = dep.submit(PROMPT, variant="prod", max_new_tokens=5)
+    dep.drain()
+    assert dep.status(rid_old)["version"] == 1
+    assert dep.status(rid_new)["version"] == 2
+    ref1 = _dep(model, base)
+    ref1.publish("prod", dm1)
+    assert dep.result(rid_old).out_tokens == _serve(ref1, "prod", 5)
+    ref2 = _dep(model, base)
+    ref2.publish("prod", dm2)
+    assert dep.result(rid_new).out_tokens == _serve(ref2, "prod", 5)
+    dep.close()

@@ -423,6 +423,32 @@ def test_bank_nbytes_stable_across_admit_evict_admit(setup):
     assert reg.stats["resident_bytes"] == charged == reg.bank.nbytes()
 
 
+def test_full_lifecycle_parity_under_async_admission(setup, tmp_path):
+    """The whole PR-3 lifecycle — publish, incremental update + hot-swap,
+    rollback — replayed with the ASYNC admission pipeline must emit
+    bit-identical greedy tokens to the synchronous control plane, with
+    every admission landing through the between-step commit hook."""
+    model, base, dm1, dm2, _ = setup
+
+    def lifecycle(async_adm, root):
+        dep = _dep(model, base, root=root, async_admission=async_adm)
+        dep.publish("prod", dm1)
+        t1 = _serve(dep, "prod", 5)
+        dep.update("prod", dm2)
+        t2 = _serve(dep, "prod", 5)
+        if async_adm:
+            dep.admission.wait()          # no live tickets across rollback
+        dep.rollback("prod")
+        t3 = _serve(dep, "prod", 5)
+        dep.close()
+        return t1, t2, t3
+
+    sync_toks = lifecycle(False, tmp_path / "sync")
+    async_toks = lifecycle(True, tmp_path / "async")
+    assert async_toks == sync_toks
+    assert sync_toks[2] == sync_toks[0]   # rollback re-serves v1 exactly
+
+
 def test_registry_set_version_drops_stale_dense_resident(setup):
     """Hot-swapping a dense-resident variant frees the old version's full
     materialised copy (stats stay balanced); the bank path instead keeps
