@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
            + kernel/token parity at forced 4 host devices (DESIGN.md §12)
   admission_overlap async vs inline admission on a busy node: publish→
            first-token, decode-stall ceiling, token parity (DESIGN.md §13)
+  compile_cache cold vs warm restart-to-first-token through the
+           persistent compile cache, in forced subprocesses: speedup,
+           zero-warm-compiles, token parity (DESIGN.md §14)
   roofline dry-run roofline terms per (arch × shape × mesh)
 
 ``--strict`` exits nonzero when any section errors (CI gate — by default
@@ -68,7 +71,7 @@ def main() -> None:
                     help="comma-separated subset of sections to run")
     args = ap.parse_args()
 
-    from benchmarks import (admission_overlap, axis_stats,
+    from benchmarks import (admission_overlap, axis_stats, compile_cache,
                             continuous_batching, fused_serving, kernel_bench,
                             load_time, roofline, shard_map_kernels,
                             sharded_serving, table1_quality, table2_sizes,
@@ -84,6 +87,7 @@ def main() -> None:
         ("continuous_batching", continuous_batching.run),
         ("update_latency", update_latency.run),
         ("admission_overlap", admission_overlap.run),
+        ("compile_cache", compile_cache.run),
         ("sharded_serving", sharded_serving.run),
         ("shard_map_kernels", shard_map_kernels.run),
         ("roofline", roofline.run),

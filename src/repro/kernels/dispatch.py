@@ -42,6 +42,7 @@ an optimisation layer: it must never change results, only layouts.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import math
@@ -159,14 +160,97 @@ def plan_matmul(mesh, rules: dict, waxes, m: Optional[int], n: int,
 # shard_map and keying on everything the trace depends on restores the
 # compile-once behaviour of the global @jax.jit wrappers.  Mesh and Plan
 # are hashable; shapes/dtypes/statics are plain tuples.
-_compiled: dict = {}
+#
+# The memo is LRU-BOUNDED: a long-lived multi-variant server sees a new
+# key per (shape, mesh, plan) combination and an unbounded dict would
+# grow with every novel workload shape for the life of the process.
+# Eviction only drops the python wrapper — executables already inlined
+# into an engine step jit, or held by a caller, stay alive.
+_MEMO_CAP = 256
+_compiled: "collections.OrderedDict" = collections.OrderedDict()
+memo_stats = {"hits": 0, "misses": 0, "evictions": 0,
+              "persist_hits": 0, "persist_compiles": 0,
+              "compile_seconds": 0.0}
+
+
+def memo_info() -> dict:
+    """Dispatch-memo observability: counters + current occupancy
+    (engine.status() and benchmarks/run.py surface this)."""
+    return {**memo_stats, "entries": len(_compiled), "cap": _MEMO_CAP}
+
+
+def set_memo_cap(cap: int) -> None:
+    """Resize the memo bound (tests); evicts LRU down to ``cap``."""
+    global _MEMO_CAP
+    if cap < 1:
+        raise ValueError("memo cap must be >= 1")
+    _MEMO_CAP = cap
+    while len(_compiled) > _MEMO_CAP:
+        _compiled.popitem(last=False)
+        memo_stats["evictions"] += 1
+
+
+def _persist_parts(key) -> tuple:
+    """Map one memo key to process-stable persistent-cache parts: the
+    Mesh hashes per-process, so it is replaced by its (axes, shape,
+    device-kind) fingerprint; Plans and aval tuples repr stably."""
+    from repro.core import compile_cache as CC
+    return tuple(CC.mesh_fp(p) if isinstance(p, jax.sharding.Mesh)
+                 else repr(p) for p in key)
+
+
+class _CachedFn:
+    """One memo entry: the wrapped jit plus, for EAGER callers, a
+    compiled stage resolved through the ambient persistent cache
+    (core/compile_cache.py).  Dispatch entry points are usually traced
+    inside an outer step jit — there the wrapped call inlines and the
+    outer executable owns the compile — but eager callers (the
+    registry's mesh dense reconstruction) pay a real per-process
+    compile that a warm cache turns into a deserialize."""
+
+    __slots__ = ("key", "jitted", "compiled")
+
+    def __init__(self, key, fn):
+        self.key = key
+        self.jitted = jax.jit(fn)
+        self.compiled = None
+
+    def __call__(self, *args):
+        if self.compiled is not None:
+            return self.compiled(*args)
+        if any(isinstance(a, jax.core.Tracer) for a in args):
+            return self.jitted(*args)
+        from repro.core import compile_cache as CC
+        cc = CC.get_default()
+        if cc is None:
+            return self.jitted(*args)
+        parts = ("dispatch",) + _persist_parts(self.key)
+        compiled = cc.get(parts)
+        if compiled is None:
+            import time
+            t0 = time.perf_counter()
+            compiled = self.jitted.lower(*args).compile()
+            memo_stats["compile_seconds"] += time.perf_counter() - t0
+            memo_stats["persist_compiles"] += 1
+            cc.put(cc.key(*parts), compiled)
+        else:
+            memo_stats["persist_hits"] += 1
+        self.compiled = compiled
+        return compiled(*args)
 
 
 def _cached_jit(key, build):
     fn = _compiled.get(key)
-    if fn is None:
-        fn = jax.jit(build())
-        _compiled[key] = fn
+    if fn is not None:
+        _compiled.move_to_end(key)
+        memo_stats["hits"] += 1
+        return fn
+    memo_stats["misses"] += 1
+    fn = _CachedFn(key, build())
+    _compiled[key] = fn
+    while len(_compiled) > _MEMO_CAP:
+        _compiled.popitem(last=False)
+        memo_stats["evictions"] += 1
     return fn
 
 

@@ -39,7 +39,7 @@ RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             opt_flags: tuple = ()) -> dict:
+             opt_flags: tuple = (), cache_dir=None) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -194,12 +194,39 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # --opt gspmd_kernels pins the PR-4 GSPMD-partitioned lowering
     dp_ctx = (_dp.no_dispatch() if "gspmd_kernels" in opt_flags
               else contextlib.nullcontext())
+    cc_cache, cc_how = None, None
+    if cache_dir:
+        # --populate-cache: the dry-run doubles as the fleet's cache
+        # warmer (DESIGN.md §14) — a later serve/warmup with the same
+        # env + avals deserializes instead of compiling.  set_default
+        # lets the dispatch-layer shard_map kernels persist too.
+        from repro.core import compile_cache as CCm
+        cc_cache = CCm.CompileCache(cache_dir)
+        CCm.set_default(cc_cache)
+        cc_parts = ("dryrun-cell", arch, shape_name, meta["mesh"],
+                    tuple(sorted(opt_flags)), CCm.aval_fp(args),
+                    CCm.sharding_fp(shardings),
+                    CCm.sharding_fp(out_shardings))
     with mesh, shard_ctx(mesh, rules), dp_ctx:
-        lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-        hlo_text = compiled.as_text()
+        compiled = hlo_text = None
+        if cc_cache is not None:
+            compiled = cc_cache.get(cc_parts)
+            if compiled is not None:
+                try:
+                    hlo_text = compiled.as_text()
+                    cc_how, t_lower = "hit", 0.0
+                    t_compile = cc_cache.stats["deserialize_seconds"]
+                except Exception:
+                    compiled = None   # loadable but not inspectable
+        if compiled is None:
+            lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            hlo_text = compiled.as_text()
+            if cc_cache is not None:
+                cc_how = "compiled"
+                cc_cache.put(cc_parts, compiled)
         summary = H.cost_summary(compiled, hlo_text)
         # trip-count-aware static analysis (cost_analysis counts while
         # bodies once — useless for scanned models); this is the roofline
@@ -228,6 +255,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     terms = H.roofline_terms(summary["flops"], summary["bytes_accessed"],
                              summary["collectives"]["total_wire_bytes"],
                              model_flops_per_device=model_flops / n_chips)
+    if cc_how is not None:
+        meta["cache"] = cc_how
     return {**meta, "status": "ok", "lower_s": round(t_lower, 2),
             "compile_s": round(t_compile, 2), "n_chips": n_chips,
             "model_flops_total": model_flops,
@@ -242,7 +271,8 @@ def cell_path(arch, shape, multi_pod, tag="") -> pathlib.Path:
     return RESULTS_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
 
 
-def run_all(multi_pod_only=None, force=False, tag="") -> int:
+def run_all(multi_pod_only=None, force=False, tag="",
+            cache_dir=None) -> int:
     """Subprocess-per-cell sweep; resumable. Returns #failures."""
     from repro.configs import cells
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
@@ -263,6 +293,8 @@ def run_all(multi_pod_only=None, force=False, tag="") -> int:
             cmd.append("--multi-pod")
         if tag:
             cmd += ["--tag", tag]
+        if cache_dir:
+            cmd += ["--populate-cache", str(cache_dir)]
         print(f"[{i+1}/{len(todo)}] {arch} × {shape} × "
               f"{'multi' if mp else 'single'} ...", flush=True)
         t0 = time.time()
@@ -295,15 +327,21 @@ def main():
     ap.add_argument("--opt", action="append", default=[],
                     help="optimization flags (repeatable), e.g. "
                          "--opt kv_seq_shard")
+    ap.add_argument("--populate-cache", default=None, metavar="DIR",
+                    help="persist every compiled cell executable into "
+                         "this compile-cache dir (DESIGN.md §14) so a "
+                         "matching serve --warmup deserializes it")
     args = ap.parse_args()
 
     if args.all:
-        sys.exit(1 if run_all(force=args.force, tag=args.tag) else 0)
+        sys.exit(1 if run_all(force=args.force, tag=args.tag,
+                              cache_dir=args.populate_cache) else 0)
 
     assert args.arch and args.shape, "--arch/--shape required without --all"
     try:
         res = run_cell(args.arch, args.shape, args.multi_pod,
-                       opt_flags=tuple(args.opt))
+                       opt_flags=tuple(args.opt),
+                       cache_dir=args.populate_cache)
     except Exception:
         res = {"arch": args.arch, "shape": args.shape,
                "mesh": "2x16x16" if args.multi_pod else "16x16",
@@ -313,7 +351,8 @@ def main():
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(res, indent=2))
     print(json.dumps({k: res[k] for k in res
-                      if k in ("arch", "shape", "mesh", "status", "compile_s")}))
+                      if k in ("arch", "shape", "mesh", "status",
+                               "compile_s", "cache")}))
     if res["status"] == "error":
         print(res.get("traceback", res.get("reason", "")), file=sys.stderr)
         sys.exit(1)

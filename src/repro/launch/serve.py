@@ -57,6 +57,14 @@ def main():
                          "pipeline and commit between decode steps "
                          "(publish/update return without blocking; "
                          "requires --scheduler continuous)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every decode step pair before "
+                         "serving (DESIGN.md §14) — with --compile-cache "
+                         "a warm restart deserializes instead of "
+                         "recompiling")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent compile-cache directory (also "
+                         "honours REPRO_COMPILE_CACHE_DIR)")
     args = ap.parse_args()
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
@@ -105,7 +113,9 @@ def main():
                      bank_size=args.variants + 2,
                      mesh=mesh, param_axes=param_axes if mesh else None,
                      kernel_dispatch=args.kernel_dispatch,
-                     async_admission=args.async_admission)
+                     async_admission=args.async_admission,
+                     warmup=args.warmup,
+                     compile_cache_dir=args.compile_cache)
     tunes = {}
     for i in range(args.variants):
         tunes[f"v{i}"] = fine_tune(100 + i)
@@ -140,6 +150,10 @@ def main():
 
     print("metrics:", dep.metrics)
     print("registry:", dep.stats)
+    st = dep.status()
+    print("compiles:", st["steps"])
+    if st["compile_cache"] is not None:
+        print("compile-cache:", st["compile_cache"])
     if dep.admission is not None:
         print("admission:", dep.admission.stats)
     if mesh is not None and dep.registry.bank is not None:

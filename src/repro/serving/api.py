@@ -66,7 +66,9 @@ class Deployment:
                  param_shardings=None, use_kernel: bool = True,
                  mesh=None, param_axes=None,
                  kernel_dispatch: str = "shard_map",
-                 async_admission: bool = False):
+                 async_admission: bool = False,
+                 eager: bool = False, warmup: bool = False,
+                 compile_cache_dir=None):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
         if scheduler == "continuous" and mode != "fused":
@@ -106,16 +108,27 @@ class Deployment:
             # chain walk applies them on the derived leaf placements)
             store.param_shardings = param_shardings
         self.store = store
+        # persistent compile cache (core/compile_cache.py): explicit dir
+        # builds a deployment-scoped cache; None lets the engine/bank
+        # fall back to the REPRO_COMPILE_CACHE_DIR ambient default
+        self.compile_cache = None
+        if compile_cache_dir is not None:
+            from repro.core.compile_cache import CompileCache
+            self.compile_cache = CompileCache(compile_cache_dir)
+        self.registry.compile_cache = self.compile_cache
+        # restart hydration is LAZY by default: a store-backed node
+        # registers a name's version lineage on FIRST reference (request
+        # admission, explicit ``name@vN``, rollback) via the registry's
+        # hydrator hook — so restart time is dominated by warmup, not by
+        # walking every persisted lineage index.  ``eager=True`` restores
+        # the PR-3 behaviour of hydrating everything up front.
+        self._hydrated: set = set()
         if store is not None:
-            # hydrate EVERY persisted version (artifacts stay on disk
-            # until a request materialises them): a restarted node serves
-            # each variant at its durable `latest` pointer, and explicit
-            # ``name@vN`` addressing / rollback targets keep working
-            for name in store.names():
-                for v in store.versions(name):
-                    self.registry.set_version(name, v,
-                                              self._store_ref(name, v))
-                self.registry.set_version(name, store.latest(name))
+            if eager:
+                for name in store.names():
+                    self._hydrate(name)
+            else:
+                self.registry.hydrator = self._hydrate
         self.admission = None
         if async_admission:
             if scheduler != "continuous":
@@ -130,7 +143,30 @@ class Deployment:
             model, self.registry, batch_size=batch_size,
             prompt_len=prompt_len, max_len=max_len,
             max_retries=max_retries, scheduler=scheduler, mesh=mesh,
-            kernel_dispatch=kernel_dispatch, admission=self.admission)
+            kernel_dispatch=kernel_dispatch, admission=self.admission,
+            compile_cache=self.compile_cache)
+        if warmup:
+            # AOT-compile every step pair for the declared shapes BEFORE
+            # traffic; with a compile cache this is a deserialize on a
+            # warm restart (DESIGN.md §14)
+            self.engine.warmup()
+
+    def _hydrate(self, name: str) -> bool:
+        """Register every persisted version of ``name`` from the store
+        (idempotent per name; False when the store doesn't know it).
+        Installed as ``registry.hydrator`` under lazy hydration, so an
+        unknown-name resolution retries once after this runs."""
+        if self.store is None or name in self._hydrated:
+            return False
+        try:
+            versions = self.store.versions(name)
+        except Exception:
+            return False
+        self._hydrated.add(name)
+        for v in versions:
+            self.registry.set_version(name, v, self._store_ref(name, v))
+        self.registry.set_version(name, self.store.latest(name))
+        return True
 
     # -- control plane -----------------------------------------------------
     def publish(self, name: str, dm: DeltaModel, *,
@@ -221,6 +257,12 @@ class Deployment:
             else:
                 self.registry.resolve(name)
 
+    def warmup(self) -> dict:
+        """AOT-compile all step pairs for this deployment's shapes now
+        (same as constructing with ``warmup=True``); returns the
+        per-pair outcome ("hit" | "compiled")."""
+        return self.engine.warmup()
+
     def current(self, name: str) -> Optional[int]:
         """Version the serving pointer resolves to right now."""
         return self.registry.current_version(name)
@@ -230,7 +272,13 @@ class Deployment:
                 else self.registry.versions(name))
 
     def variants(self) -> list:
-        return self.registry.registered()
+        """Servable variant names.  Under lazy hydration the registry
+        only knows referenced names, so the store's directory listing
+        (names only — no index/artifact reads) fills in the rest."""
+        names = set(self.registry.registered())
+        if self.store is not None:
+            names.update(self.store.names())
+        return ["__base__"] + sorted(names - {"__base__"})
 
     def admitting(self) -> list:
         """Version keys currently mid-ingest on the async admission
@@ -273,12 +321,16 @@ class Deployment:
     def result(self, rid: int) -> Request:
         return self.engine.result(rid)
 
-    def status(self, rid: int) -> dict:
-        """Lifecycle view of one request — never raises.  ``version`` is
-        the variant version the request resolved at admission (stable
-        across later updates/rollbacks of the variant).  ``status`` may be
-        ``admitting``: the request's variant is mid-ingest on the async
-        admission pipeline (queued behind staging, not unknown)."""
+    def status(self, rid: Optional[int] = None) -> dict:
+        """With ``rid``: lifecycle view of one request — never raises.
+        ``version`` is the variant version the request resolved at
+        admission (stable across later updates/rollbacks); ``status``
+        may be ``admitting`` (mid-ingest on the async pipeline).
+        Without ``rid``: the engine observability snapshot — scheduler
+        occupancy, step-executable / compile-cache / dispatch-memo
+        counters (DESIGN.md §14)."""
+        if rid is None:
+            return self.engine.status()
         r = self.engine.request(rid)
         if r is None:
             return {"status": "unknown", "rid": rid}

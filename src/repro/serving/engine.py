@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core import compile_cache as CC
 from repro.distributed.sharding import (resolve_spec, rules_for, shard_ctx,
                                         tree_shardings)
 from repro.models.model_zoo import Model
@@ -124,7 +125,7 @@ class ServingEngine:
                  max_len: int = 128, max_retries: int = 1,
                  greedy: bool = True, scheduler: str = "group",
                  mesh=None, kernel_dispatch: str = "shard_map",
-                 admission=None):
+                 admission=None, compile_cache=None):
         if scheduler not in ("group", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if kernel_dispatch not in ("shard_map", "gspmd"):
@@ -187,11 +188,21 @@ class ServingEngine:
                                           "batch"),
                        "decode_banked": ("params", "overlay", "token",
                                          "token", "cache")}
-        self._jits: dict = {}
-        if mesh is None:
-            for kind, fn in self._fns.items():
-                self._jits[kind] = jax.jit(fn)
-        else:
+        # executable store: ONE AOT-compiled executable per (kind,
+        # overlay structure) — the wrapped→lowered→compiled split
+        # (DESIGN.md §14).  The overlay is the only argument whose
+        # STRUCTURE varies between calls of one kind; every other aval
+        # is fixed by the engine's shape contract, and the Compiled
+        # object itself validates avals at call time, so a violated
+        # assumption raises instead of mis-serving.
+        self._exe: dict = {}
+        # persistent compile cache (core/compile_cache.py): explicit
+        # handle wins, else the process-ambient REPRO_COMPILE_CACHE_DIR
+        # default; None serves compile-per-process like before
+        self.compile_cache = (compile_cache if compile_cache is not None
+                              else CC.get_default())
+        self.warmed = False
+        if mesh is not None:
             if registry.param_shardings is None:
                 raise ValueError(
                     "a sharded engine needs registry.param_shardings "
@@ -223,7 +234,10 @@ class ServingEngine:
                         "prefills": 0, "failed": 0, "admitted": 0,
                         "retired": 0, "decode_steps": 0,
                         "prefill_seconds": 0.0, "decode_seconds": 0.0,
-                        "async_admits": 0}
+                        "async_admits": 0,
+                        "step_compiles": 0, "step_cache_hits": 0,
+                        "step_compile_seconds": 0.0,
+                        "warmup_seconds": 0.0}
         # benchmark hook (benchmarks/admission_overlap.py): with
         # record_step_times=True every decode step appends
         # (perf_counter_at_end, seconds, admission_in_flight) — the
@@ -252,36 +266,87 @@ class ServingEngine:
                 for k, v in arg.items()}
         raise ValueError(role)
 
-    def _call(self, kind: str, *args):
-        """Run one compiled step.  Without a mesh this is the plain jit;
-        with a mesh the jit is built per OVERLAY structure with explicit
-        in/out shardings (batch lanes data-parallel, weights/overlays
-        model-parallel, cache pinned in place) and runs inside the mesh +
-        serving-rules context so logical constraints apply.  The overlay
-        is the only argument whose structure varies between calls of one
-        kind, so the cache key flattens just that tree — not the full
-        params+cache pytrees — on the per-token hot path."""
+    def _trace_ctx(self):
+        """Context the step functions LOWER inside: mesh + serving-rule
+        shard_ctx (so logical constraints apply and kernels/dispatch.py
+        sees the pair at trace time) + the kernel-dispatch pin.  The
+        contexts decide how the trace lowers; the resulting executable
+        is context-free at call time, which is what lets a deserialized
+        one skip tracing entirely."""
         if self.mesh is None:
-            return self._jits[kind](*args)
-        key = (kind, jax.tree_util.tree_structure(args[1]))
-        jitted = self._jits.get(key)
-        if jitted is None:
-            in_sh = tuple(self._arg_sharding(role, arg)
-                          for role, arg in zip(self._roles[kind], args))
-            out_sh = ((self._logits_sh, self._cache_sh)
-                      if kind.startswith("prefill")
-                      else (self._tok_sh, self._cache_sh))
-            jitted = jax.jit(self._fns[kind], in_shardings=in_sh,
-                             out_shardings=out_sh)
-            self._jits[key] = jitted
-        # the dispatch decision is read at TRACE time inside shard_ctx:
-        # "shard_map" lets kernels/dispatch.py lower per-shard kernels,
-        # "gspmd" pins the PR-4 global-kernel path for A/B comparison
+            return contextlib.nullcontext()
         from repro.kernels import dispatch as _dp
-        cm = (_dp.no_dispatch() if self.kernel_dispatch == "gspmd"
-              else contextlib.nullcontext())
-        with self.mesh, shard_ctx(self.mesh, self._rules), cm:
-            return jitted(*args)
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(shard_ctx(self.mesh, self._rules))
+        if self.kernel_dispatch == "gspmd":
+            # "shard_map" lets kernels/dispatch.py lower per-shard
+            # kernels; "gspmd" pins the PR-4 global-kernel path for A/B
+            stack.enter_context(_dp.no_dispatch())
+        return stack
+
+    def _stage_jit(self, kind: str, args):
+        """The WRAPPED stage: the step jit, with explicit in/out
+        shardings on a mesh (batch lanes data-parallel, weights and
+        overlays model-parallel, cache pinned in place)."""
+        if self.mesh is None:
+            return jax.jit(self._fns[kind])
+        in_sh = tuple(self._arg_sharding(role, arg)
+                      for role, arg in zip(self._roles[kind], args))
+        out_sh = ((self._logits_sh, self._cache_sh)
+                  if kind.startswith("prefill")
+                  else (self._tok_sh, self._cache_sh))
+        return jax.jit(self._fns[kind], in_shardings=in_sh,
+                       out_shardings=out_sh)
+
+    def _persist_parts(self, kind: str, args) -> tuple:
+        """Persistent-cache key parts for one step executable: the model
+        config (two architectures can share avals but not programs), the
+        engine's shape contract, the dispatch mode, mesh + sharding
+        fingerprints, and every argument's avals.  Library versions,
+        backend, devices and a source-tree hash ride in
+        ``CompileCache.key`` — a stale entry can only miss."""
+        in_sh = "none"
+        if self.mesh is not None:
+            in_sh = CC.sharding_fp(tuple(
+                self._arg_sharding(role, arg)
+                for role, arg in zip(self._roles[kind], args)))
+        return ("engine-step", kind, repr(self.model.cfg),
+                self.batch_size, self.prompt_len, self.max_len,
+                self.kernel_dispatch, CC.mesh_fp(self.mesh), in_sh,
+                tuple(CC.aval_fp(a) for a in args))
+
+    def _get_exe(self, kind: str, args):
+        """One step executable through the staged path: in-process hit →
+        persistent-cache deserialize → ``lower().compile()`` (persisted
+        for the next restart).  The in-process key flattens just the
+        overlay tree — not the full params+cache pytrees — on the
+        per-token hot path."""
+        key = (kind, jax.tree_util.tree_structure(args[1]))
+        exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        cc = self.compile_cache
+        if cc is not None:
+            exe = cc.get(self._persist_parts(kind, args))
+            if exe is not None:
+                self.metrics["step_cache_hits"] += 1
+                self._exe[key] = exe
+                return exe
+        jitted = self._stage_jit(kind, args)
+        t0 = time.perf_counter()
+        with self._trace_ctx():
+            exe = jitted.lower(*args).compile()
+        self.metrics["step_compiles"] += 1
+        self.metrics["step_compile_seconds"] += time.perf_counter() - t0
+        if cc is not None:
+            cc.put(cc.key(*self._persist_parts(kind, args)), exe)
+        self._exe[key] = exe
+        return exe
+
+    def _call(self, kind: str, *args):
+        """Run one step executable (resolving it on first use)."""
+        return self._get_exe(kind, args)(*args)
 
     # -- API -----------------------------------------------------------------
     def submit(self, tokens, variant: str = "__base__",
@@ -309,19 +374,164 @@ class ServingEngine:
                 return r
         return None
 
-    def status(self, rid: int) -> str:
-        """queued | admitting | running | done | failed | unknown — never
-        raises.  ``admitting`` means the request's variant is mid-ingest
-        on the async admission pipeline (queued behind staging, NOT an
-        unknown variant)."""
-        r = self.request(rid)
-        return "unknown" if r is None else r.status
+    def status(self, rid: Optional[int] = None):
+        """With ``rid``: that request's lifecycle string (queued |
+        admitting | running | done | failed | unknown — never raises;
+        ``admitting`` means the variant is mid-ingest on the async
+        admission pipeline).  Without ``rid``: the ENGINE observability
+        snapshot — scheduler occupancy, step-executable counters,
+        persistent-compile-cache and dispatch-memo stats (the restart
+        SLO evidence benchmarks/compile_cache.py gates on)."""
+        if rid is not None:
+            r = self.request(rid)
+            return "unknown" if r is None else r.status
+        from repro.kernels import dispatch as _dp
+        cc = self.compile_cache
+        return {
+            "scheduler": self.scheduler,
+            "pending": self.pending(),
+            "active": self.active(),
+            "warmed": self.warmed,
+            "steps": {"executables": len(self._exe),
+                      "compiles": self.metrics["step_compiles"],
+                      "cache_hits": self.metrics["step_cache_hits"],
+                      "compile_seconds":
+                          self.metrics["step_compile_seconds"]},
+            "compile_cache": None if cc is None else dict(cc.stats),
+            "dispatch_memo": _dp.memo_info(),
+            "metrics": dict(self.metrics),
+        }
 
     def pending(self) -> int:
         return len(self._queue)
 
     def active(self) -> int:
         return sum(1 for s in self._slots if s is not None)
+
+    def warmup(self, pairs=("plain", "fused", "banked")) -> dict:
+        """AOT-compile the step executables for the declared shapes
+        BEFORE accepting traffic (ROADMAP "compile-once serving"): the
+        plain pair (base model / dense residents), the fused pair
+        (single-variant packed overlay + params view) and the banked
+        pair (the continuous scheduler's overlay bank + per-row
+        variant_idx), plus the admission cache-merge.  With a
+        persistent compile cache attached, a warm restart resolves
+        every pair by DESERIALIZING — zero compiles on the path to the
+        first token; cold, the compiles happen here instead of inside
+        the first request's latency.
+
+        The overlay/bank abstract twins derive from the base params'
+        calibration targets (``core/calibration.is_target`` — the same
+        recipe ``compress`` uses), so runtime trees of compressed
+        variants hit the warmed executables structurally; on a mesh
+        every twin leaf carries the same derived sharding the runtime
+        device-put places it on.  Returns {pair/kind: "compiled" |
+        "hit"} ("hit": resolved without a fresh compile — in-process or
+        persistent)."""
+        from repro.core.calibration import (flatten_params, is_target,
+                                            unflatten_like)
+        from repro.models import delta_overlay as DO
+
+        t0 = time.perf_counter()
+        reg = self.registry
+        base = reg.base_params
+        bs = self.batch_size
+        base_flat = flatten_params(base)
+        delta_paths = sorted(p for p, l in base_flat.items()
+                             if is_target(p, l))
+        ds = set(delta_paths)
+        extra_paths = sorted(p for p in base_flat if p not in ds)
+        cache = jax.eval_shape(
+            lambda: self.model.init_cache(bs, self.max_len))
+        batch = self._prompt_batch({})
+        token = jnp.zeros((bs,), jnp.int32)
+        outcomes: dict = {}
+
+        def warm(tag, kind, args):
+            c0 = self.metrics["step_compiles"]
+            self._get_exe(kind, args)
+            outcomes[f"{tag}/{kind}"] = (
+                "compiled" if self.metrics["step_compiles"] > c0
+                else "hit")
+
+        if "plain" in pairs:
+            warm("plain", "prefill", (base, None, batch))
+            warm("plain", "decode", (base, None, token, cache))
+        if "fused" in pairs and delta_paths:
+            # params VIEW: target paths alias the base weight, every
+            # other leaf is the variant's fp16 extra
+            # (loader.device_put_overlay's layout)
+            view = unflatten_like(base, {
+                p: (l if p in ds
+                    else jax.ShapeDtypeStruct(l.shape, jnp.float16))
+                for p, l in base_flat.items()})
+            ov = DO.overlay_struct(base_flat, delta_paths)
+            if self.mesh is not None:
+                ov = self._shard_struct(
+                    ov, delta_paths,
+                    {p: DO.entry_shardings_from_weight(
+                        sh, base_flat[p].ndim)
+                     for p, sh in flatten_params(
+                         reg.param_shardings).items() if p in ds})
+            warm("fused", "prefill", (view, ov, batch))
+            warm("fused", "decode", (view, ov, token, cache))
+        if "banked" in pairs and delta_paths:
+            nb = reg.bank_size
+            bank = DO.overlay_struct(base_flat, delta_paths, extra_paths,
+                                     bank_size=nb)
+            if self.mesh is not None:
+                bank = self._shard_struct(
+                    bank, delta_paths + extra_paths,
+                    DO.overlay_shardings(
+                        reg.param_axes, base_flat, delta_paths,
+                        extra_paths, self._rules, self.mesh,
+                        bank_size=nb))
+            vidx = jnp.zeros((bs,), jnp.int32)
+            # pre-first-admission state: the continuous scheduler serves
+            # base-only traffic with bank=None until a variant lands
+            warm("banked-empty", "prefill_banked",
+                 (base, None, vidx, batch))
+            warm("banked-empty", "decode_banked",
+                 (base, None, vidx, token, cache))
+            warm("banked", "prefill_banked", (base, bank, vidx, batch))
+            warm("banked", "decode_banked",
+                 (base, bank, vidx, token, cache))
+            if self.scheduler == "continuous":
+                if self._merge_jit is None:
+                    self._merge_jit = self._make_merge()
+                outcomes["banked/merge"] = self._merge_jit.aot(
+                    cache, cache, jax.ShapeDtypeStruct((bs,), jnp.bool_))
+        self.metrics["warmup_seconds"] += time.perf_counter() - t0
+        self.warmed = True
+        return outcomes
+
+    @staticmethod
+    def _shard_struct(struct: dict, paths, flat_shardings: dict) -> dict:
+        """Attach per-leaf shardings to an abstract overlay/bank tree so
+        ``_arg_sharding('overlay', ...)`` reads from the twin exactly
+        what the runtime device-put trees carry."""
+        from repro.models import delta_overlay as DO
+
+        def node_at(tree, path):
+            for part in path.split("."):
+                tree = tree[part]
+            return tree
+
+        out: dict = {}
+        for p in paths:
+            leaf = node_at(struct, p)
+            sh = flat_shardings[p]
+            if isinstance(leaf, DO.OverlayEntry):
+                leaf = DO.OverlayEntry(*(
+                    jax.ShapeDtypeStruct(f.shape, f.dtype, sharding=s)
+                    for f, s in ((leaf.packed, sh.packed),
+                                 (leaf.v_row, sh.v_row),
+                                 (leaf.v_col, sh.v_col))))
+            else:
+                leaf = jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                            sharding=sh)
+            DO.insert_entry(out, p, leaf)
+        return out
 
     def run_until_drained(self, max_rounds: int = 1000) -> dict:
         if self.scheduler == "continuous":
@@ -427,25 +637,35 @@ class ServingEngine:
         mask = np.zeros(self.batch_size, bool)
         mask[admit_rows] = True
         if self._merge_jit is None:
-            bs = self.batch_size
-            specs = jax.tree.leaves(self.model.cache_pspecs(),
-                                    is_leaf=lambda x: isinstance(x, tuple))
-
-            @jax.jit
-            def merge(old, fresh, mask):
-                old_leaves, treedef = jax.tree_util.tree_flatten(old)
-                fresh_leaves, _ = jax.tree_util.tree_flatten(fresh)
-                assert len(specs) == len(old_leaves) == len(fresh_leaves), \
-                    "cache_pspecs out of sync with the cache structure"
-                out = []
-                for o, f, sp in zip(old_leaves, fresh_leaves, specs):
-                    shape = [1] * o.ndim
-                    shape[sp.index("act_batch")] = bs
-                    out.append(jnp.where(mask.reshape(shape), f, o))
-                return jax.tree_util.tree_unflatten(treedef, out)
-
-            self._merge_jit = merge
+            self._merge_jit = self._make_merge()
         return self._merge_jit(old, fresh, jnp.asarray(mask))
+
+    def _make_merge(self):
+        """The admission cache-merge jit, staged through the persistent
+        cache like the step pairs (it compiles on the SECOND admission
+        wave — steady-state latency, not first-token, but a restart
+        should not re-pay it either)."""
+        bs = self.batch_size
+        specs = jax.tree.leaves(self.model.cache_pspecs(),
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        def merge(old, fresh, mask):
+            old_leaves, treedef = jax.tree_util.tree_flatten(old)
+            fresh_leaves, _ = jax.tree_util.tree_flatten(fresh)
+            assert len(specs) == len(old_leaves) == len(fresh_leaves), \
+                "cache_pspecs out of sync with the cache structure"
+            out = []
+            for o, f, sp in zip(old_leaves, fresh_leaves, specs):
+                shape = [1] * o.ndim
+                shape[sp.index("act_batch")] = bs
+                out.append(jnp.where(mask.reshape(shape), f, o))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        return CC.CachedCallable(
+            jax.jit(merge),
+            ("engine-merge", repr(self.model.cfg), bs, self.max_len,
+             CC.mesh_fp(self.mesh)),
+            cache=self.compile_cache)
 
     def _admit_free_slots(self) -> list:
         """Pop queued requests into free lanes: resolve each variant to a

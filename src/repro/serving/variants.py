@@ -44,6 +44,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compile_cache as CCm
 from repro.core import loader as L
 from repro.core import store as S
 from repro.core.calibration import DeltaModel, flatten_params
@@ -120,7 +121,8 @@ class OverlayBank:
     """
 
     def __init__(self, base_params, size: int, *, vec_dtype=jnp.float16,
-                 mesh=None, param_axes=None, rules=None):
+                 mesh=None, param_axes=None, rules=None,
+                 compile_cache=None):
         if size < 2:
             raise ValueError("bank needs >= 2 slots (base + 1 variant)")
         if mesh is not None and param_axes is None:
@@ -138,8 +140,11 @@ class OverlayBank:
         self._base_flat = flatten_params(base_params)
         self._flat: Optional[dict] = None   # path -> banked leaf
         self.tree: Optional[dict] = None    # nested view of _flat
-        self._write = functools.partial(_bank_write_jit,
-                                        vec_dtype=vec_dtype)
+        # admission scatter staged through the persistent compile cache:
+        # the first admit after a restart is on the restart-to-first-
+        # token path, so its compile is worth a deserialize too
+        self._cc = compile_cache
+        self._write = self._staged_write(_bank_write_jit)
         self._slots: dict[str, int] = {}
         self._pins: dict[str, int] = {}
         self._lru: "collections.OrderedDict[str, None]" = \
@@ -149,6 +154,16 @@ class OverlayBank:
         # but eviction/rollback must see them (DESIGN.md §13)
         self._staging: set = set()
         self.stats = {"admits": 0, "evictions": 0}
+
+    def _staged_write(self, jitted, *, sh_fp: bool = False):
+        """Route the admission-scatter jit through the compile cache with
+        ``vec_dtype`` baked as its static; no cache attached → plain jit."""
+        parts = ("bank-write", self.size, CCm.mesh_fp(self.mesh),
+                 CCm.sharding_fp(self.shardings) if sh_fp else "none")
+        wrapped = CCm.CachedCallable(
+            jitted, parts,
+            cache=self._cc if self._cc is not None else "ambient")
+        return functools.partial(wrapped, vec_dtype=self.vec_dtype)
 
     # -- structure ---------------------------------------------------------
     def _ensure_tree(self, dm: DeltaModel) -> None:
@@ -174,9 +189,9 @@ class OverlayBank:
                 bank_size=self.size)
             flat = {path: jax.device_put(leaf, self.shardings[path])
                     for path, leaf in flat.items()}
-            self._write = functools.partial(
+            self._write = self._staged_write(
                 _make_bank_write(out_shardings=self.shardings),
-                vec_dtype=self.vec_dtype)
+                sh_fp=True)
         self._flat = flat
         self._template_deltas = set(dm.deltas)
         self._template_extras = set(dm.extras)
@@ -376,6 +391,12 @@ class VariantRegistry:
         # attached by serving/api.Deployment when async admission is on;
         # evict/rollback consult it for mid-ingest variants
         self.admission = None
+        # lazy-hydration hook (serving/api.Deployment): called with a
+        # base variant name when _parse misses; True -> retry the parse
+        self.hydrator = None
+        # optional core/compile_cache.CompileCache for the bank's
+        # admission-scatter executable (None -> process-ambient default)
+        self.compile_cache = None
         self._bank_evictions_seen = 0
         self._versions: dict[str, dict] = {}   # name -> {version: artifact}
         self._current: dict[str, Optional[int]] = {}   # serving pointer
@@ -398,7 +419,25 @@ class VariantRegistry:
     def _parse(self, nameish: str) -> tuple:
         """Resolve a request-facing variant string to (name, version):
         a plain name follows the current serving pointer; an explicit
-        ``name@vN`` pins that version regardless of the pointer."""
+        ``name@vN`` pins that version regardless of the pointer.
+
+        Unknown names consult the ``hydrator`` hook once before raising
+        — serving/api.Deployment installs it under LAZY restart
+        hydration, so a store-backed name (or an unregistered version of
+        a known name) registers its persisted lineage on first
+        reference instead of at construction."""
+        try:
+            return self._parse_known(nameish)
+        except KeyError:
+            if self.hydrator is None:
+                raise
+            base = nameish.rpartition("@v")[0] if "@v" in nameish \
+                else nameish
+            if not self.hydrator(base):
+                raise
+            return self._parse_known(nameish)
+
+    def _parse_known(self, nameish: str) -> tuple:
         if nameish == "__base__" or nameish in self._versions:
             return nameish, self._current.get(nameish)
         if "@v" in nameish:
@@ -567,7 +606,8 @@ class VariantRegistry:
             if self.bank is None:
                 self.bank = OverlayBank(self.base_params, self.bank_size,
                                         mesh=self.mesh,
-                                        param_axes=self.param_axes)
+                                        param_axes=self.param_axes,
+                                        compile_cache=self.compile_cache)
             return self.bank
 
     def _bank_admit(self, vkey: str, dm: DeltaModel, *,

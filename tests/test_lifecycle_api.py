@@ -354,6 +354,55 @@ def test_deployment_store_backed_lifecycle(setup, tmp_path):
     assert _serve(cold, "prod") == t1
 
 
+def test_deployment_lazy_hydration_defers_store_reads(setup, tmp_path):
+    """Restart hydration is LAZY by default (DESIGN.md §14): constructing
+    a Deployment over an existing store does ZERO per-name index/artifact
+    reads — a name's lineage registers on FIRST reference, and names that
+    are never requested are never read.  ``eager=True`` restores the old
+    hydrate-everything-up-front behaviour."""
+    model, base, dm1, dm2, _ = setup
+    seed = _dep(model, base, root=tmp_path / "store")
+    seed.publish("a", dm1)
+    seed.publish("b", dm2)
+    t_a = _serve(seed, "a")
+
+    def spy_store():
+        calls = {}
+        st = S.VariantStore(tmp_path / "store")
+        orig_idx, orig_load = st._read_index, st.load
+
+        def idx(name):
+            calls[f"index:{name}"] = calls.get(f"index:{name}", 0) + 1
+            return orig_idx(name)
+
+        def load(name, version=None, *, pacer=None):
+            calls[f"load:{name}"] = calls.get(f"load:{name}", 0) + 1
+            return orig_load(name, version, pacer=pacer)
+
+        st._read_index, st.load = idx, load
+        return st, calls
+
+    st, calls = spy_store()
+    dep = Deployment(model, base, store=st, batch_size=2, prompt_len=8,
+                     max_len=32, bank_size=4)
+    assert calls == {}                       # construction reads nothing
+    assert dep.variants() == ["__base__", "a", "b"]   # names() only
+    assert calls == {}
+    assert _serve(dep, "a") == t_a           # first reference hydrates
+    assert calls.get("load:a", 0) >= 1
+    assert "load:b" not in calls and "index:b" not in calls
+    assert dep.current("a") == 1             # hydration is idempotent...
+    assert calls.get("load:a") == 1          # ...and artifact loads don't repeat
+    _serve(dep, "b")                         # b reads only when referenced
+    assert calls.get("load:b", 0) >= 1
+
+    st2, calls2 = spy_store()
+    Deployment(model, base, store=st2, batch_size=2, prompt_len=8,
+               max_len=32, bank_size=4, eager=True)
+    assert calls2.get("index:a", 0) >= 1     # eager walks every lineage
+    assert calls2.get("index:b", 0) >= 1
+
+
 def test_store_rejects_path_traversal_names(setup, tmp_path):
     _, base, dm1, _, _ = setup
     st = S.VariantStore(tmp_path / "store")
