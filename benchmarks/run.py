@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   serving  multi-tenant hot-swap engine throughput
   fused    on-the-fly (packed-overlay) vs swap-then-dense serving
   continuous mixed-variant continuous batching vs grouped-by-variant
+  speculative_decoding base-as-draft speculative rounds vs plain
+           continuous decode: speedup, acceptance, exact token parity
+           (DESIGN.md §15)
   update_latency incremental publish_update + hot-swap vs full republish
   sharded_serving banked decode on a host mesh: parity + per-device bytes
   shard_map_kernels per-shard vs GSPMD-partitioned delta kernels: latency
@@ -74,8 +77,8 @@ def main() -> None:
     from benchmarks import (admission_overlap, axis_stats, compile_cache,
                             continuous_batching, fused_serving, kernel_bench,
                             load_time, roofline, shard_map_kernels,
-                            sharded_serving, table1_quality, table2_sizes,
-                            update_latency)
+                            sharded_serving, speculative_decoding,
+                            table1_quality, table2_sizes, update_latency)
     sections = [                                      # cheap first
         ("table2", table2_sizes.run),
         ("kernel", kernel_bench.run),
@@ -85,6 +88,7 @@ def main() -> None:
         ("serving", serving_bench),
         ("fused", fused_serving.run),
         ("continuous_batching", continuous_batching.run),
+        ("speculative_decoding", speculative_decoding.run),
         ("update_latency", update_latency.run),
         ("admission_overlap", admission_overlap.run),
         ("compile_cache", compile_cache.run),

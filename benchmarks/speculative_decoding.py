@@ -1,0 +1,134 @@
+"""Base-as-draft speculative decoding vs plain continuous decoding.
+
+The paper's premise — per-axis 1-bit deltas keep every variant CLOSE to
+the shared base — is exactly the high-acceptance regime speculative
+decoding wants, and the draft model is FREE: the base weights are already
+resident on-device next to every overlay (bank slot 0).  Each round
+drafts k tokens per lane on the cheap overlay-free path and verifies all
+of them through the lane's banked overlay in ONE call (serving/
+speculative.py, DESIGN.md §15), so a lane pays one dispatch + host sync
+per up-to-(k+1) emitted tokens instead of one per token.
+
+Measures, on identical skewed 8-variant traffic at toy sizes (variants a
+small step from the base — the shipped-delta regime).  The workload is
+the MoE family, where the economics are starkest: a banked MoE decode
+step pays the banked delta-GEMM machinery once per EXPERT, so a verify
+call amortises all of it over k+1 tokens while the drafts skip it
+entirely (at toy scale the dense families' banked/plain cost ratio is too
+small for drafting to pay — the speedup is family- and scale-dependent,
+the exactness is not):
+
+* end-to-end drain throughput per scheduler (continuous vs speculative at
+  draft_k=4) and the speedup ratio;
+* measured acceptance rate (accepted drafts / offered drafts);
+* EXACT per-request token parity — speculative decoding must be a pure
+  performance transform, bit-identical greedy streams;
+* acceptance: parity always; speedup >= 1.3x whenever the measured
+  acceptance rate clears 0.7 (low acceptance legitimately caps the win),
+  and never a regression below plain continuous decoding.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+TRAFFIC = ["v0", "v1", "v0", "v2", "v3", "v0", "v4", "v5",
+           "v1", "v6", "v7", "v2", "v0", "v3", "v1", "v4"]
+MAX_NEW = 40    # decode-heavy: the round amortisation is a decode-path
+BATCH = 16      # claim, keep the (shared) prefill cost from diluting it
+DRAFT_K = 4
+
+
+def _engine(scheduler: str):
+    from benchmarks.common import tiny_pair
+    from repro.core import calibration as C
+    from repro.serving import ServingEngine, VariantRegistry
+
+    model, base, ft, _, _ = tiny_pair("deepseek-moe-16b", layers=2,
+                                      base_steps=20, ft_steps=10)
+    reg = VariantRegistry(base, mode="fused", max_resident=16, bank_size=9)
+    for i in range(8):
+        # each tenant a SMALL distinct step from the base — the frequent-
+        # update serving regime the paper targets (and the acceptance the
+        # draft/verify loop converts into fewer dispatches)
+        ft_i = jax.tree.map(lambda b, f, s=i: b + 0.04 * (1 + 0.1 * s)
+                            * (f - b), base, ft)
+        reg.register(f"v{i}", C.compress(base, ft_i))
+    eng = ServingEngine(model, reg, batch_size=BATCH, prompt_len=16,
+                        max_len=64, scheduler=scheduler, draft_k=DRAFT_K,
+                        spec_adaptive=False)   # fixed k: measure draft_k=4
+    return reg, eng
+
+
+def _drain(eng) -> dict:
+    before = dict(eng.metrics)
+    rids = [eng.submit(np.arange(1, 9), variant=v, max_new_tokens=MAX_NEW)
+            for v in TRAFFIC]
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = [eng.result(r).out_tokens for r in rids]
+    assert all(eng.result(r).status == "done" for r in rids)
+    delta = {k: eng.metrics[k] - before[k]
+             for k in eng.metrics if isinstance(before[k], (int, float))}
+    return {"seconds": dt, "tokens": toks,
+            "generated": sum(len(t) for t in toks),
+            "metrics": delta}
+
+
+def run() -> list:
+    from benchmarks.common import row
+
+    out = []
+    results = {}
+    for sched in ("continuous", "speculative"):
+        reg, eng = _engine(sched)
+        # warm outside the timed drain: compile every step executable and
+        # make all 8 variants bank-resident (steady-state is the claim)
+        eng.warmup()
+        warm = [eng.submit(np.arange(1, 9), variant=f"v{i % 8}",
+                           max_new_tokens=2 if i < 8 else 4)
+                for i in range(BATCH + 1)]
+        eng.run_until_drained()
+        assert all(eng.result(w).status == "done" for w in warm)
+        results[sched] = _drain(eng)
+        m = results[sched]["metrics"]
+        tput = results[sched]["generated"] / results[sched]["seconds"]
+        extra = ""
+        if sched == "speculative":
+            acc = (m["spec_accepted"] / m["spec_drafted"]
+                   if m["spec_drafted"] else 0.0)
+            results["acceptance"] = acc
+            extra = (f"draft_k={DRAFT_K};rounds={m['spec_rounds']};"
+                     f"acceptance={acc:.3f};")
+        out.append(row(
+            f"speculative_decoding/{sched}",
+            results[sched]["seconds"] * 1e6,
+            f"tokens={results[sched]['generated']};"
+            f"tput_tps={tput:.1f};dispatches={m['decode_steps']};"
+            f"decode_s={m['decode_seconds']:.3f};" + extra
+            + f"resident_bytes={reg.stats['resident_bytes']}"))
+
+    parity = (results["speculative"]["tokens"]
+              == results["continuous"]["tokens"])
+    speedup = (results["continuous"]["seconds"]
+               / results["speculative"]["seconds"])
+    acc = results["acceptance"]
+    # the 1.3x bar only binds when acceptance clears 0.7 — below that the
+    # traffic genuinely diverges from the base and the win shrinks with
+    # it; regression below plain continuous is never acceptable
+    pass_13 = speedup >= 1.3 or acc < 0.7
+    out.append(row(
+        "speculative_decoding/speedup_vs_continuous", 0,
+        f"speedup={speedup:.2f};acceptance={acc:.3f};"
+        f"pass_ge_1_3={pass_13};"
+        f"pass_no_regression={speedup >= 1.0};"
+        f"token_parity={parity}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -13,6 +13,17 @@ DESIGN.md §9); group batches one variant at a time.  --updates N performs
 N incremental publish_update + hot-swap cycles on the first variant
 mid-workload (DESIGN.md §10), then rolls the last one back.
 
+--speculative layers base-as-draft speculative decoding on the continuous
+scheduler (DESIGN.md §15): each round drafts --draft-k tokens per lane
+with the resident base weights and verifies all of them through the
+lane's banked variant overlay in ONE call — token streams stay bit-exact
+with plain continuous decode, and the printed acceptance rate shows how
+often base and variant agree (the paper's small-delta premise)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
+        --reduced --mode fused --speculative --draft-k 4 \
+        --variants 3 --requests 12 --warmup
+
 --mesh DATA,MODEL serves the whole deployment data×model-parallel
 (DESIGN.md §11): base weights and every overlay/bank leaf land
 tensor-parallel over ``model``, decode lanes span ``data``.  Needs
@@ -52,6 +63,14 @@ def main():
                     help="mesh-mode delta-GEMM lowering: per-shard "
                          "shard_map kernels (default) or the PR-4 "
                          "GSPMD-partitioned global kernels")
+    ap.add_argument("--speculative", action="store_true",
+                    help="base-as-draft speculative decoding on the "
+                         "continuous scheduler (requires --mode fused; "
+                         "DESIGN.md §15) — bit-exact tokens, fewer "
+                         "dispatches per emitted token")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative draft length (adaptive ladder "
+                         "down-shifts under low acceptance)")
     ap.add_argument("--async-admission", action="store_true",
                     help="ingest+stage variant artifacts on a background "
                          "pipeline and commit between decode steps "
@@ -66,6 +85,12 @@ def main():
                     help="persistent compile-cache directory (also "
                          "honours REPRO_COMPILE_CACHE_DIR)")
     args = ap.parse_args()
+    if args.speculative:
+        if args.mode != "fused":
+            ap.error("--speculative requires --mode fused (verify runs "
+                     "through the packed overlay bank)")
+        args.scheduler = "continuous"   # Deployment(speculative=True)
+                                        # upgrades it to "speculative"
     if args.scheduler == "continuous" and args.mode != "fused":
         ap.error("--scheduler continuous requires --mode fused "
                  "(mixed batches serve from the packed overlay bank)")
@@ -114,6 +139,7 @@ def main():
                      mesh=mesh, param_axes=param_axes if mesh else None,
                      kernel_dispatch=args.kernel_dispatch,
                      async_admission=args.async_admission,
+                     speculative=args.speculative, draft_k=args.draft_k,
                      warmup=args.warmup,
                      compile_cache_dir=args.compile_cache)
     tunes = {}
@@ -151,6 +177,11 @@ def main():
     print("metrics:", dep.metrics)
     print("registry:", dep.stats)
     st = dep.status()
+    if "speculative" in st:
+        sp = st["speculative"]
+        print(f"speculative: acceptance={sp['acceptance']:.3f} "
+              f"rounds={sp['rounds']} current_k={sp['current_k']} "
+              f"ttft_mean={st['ttft']['mean_seconds']:.4f}s")
     print("compiles:", st["steps"])
     if st["compile_cache"] is not None:
         print("compile-cache:", st["compile_cache"])

@@ -321,6 +321,44 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, hq, hd).astype(q.dtype)
 
 
+def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array,
+                     window: int = 0) -> jax.Array:
+    """T-query generalisation of ``decode_attention`` for speculative
+    verify (DESIGN.md §15): q (B, S, Hq, hd) holds S teacher-forced
+    queries per row, where query t sits at absolute position pos[b] + t.
+    Caches/slot_pos/pos as in ``decode_attention``.
+
+    Each query slice must reproduce ``decode_attention`` BIT-EXACTLY —
+    the engine's draft/verify parity contract (accepted tokens equal the
+    non-speculative greedy chain) rides on it — so the arithmetic is the
+    same: fp32-accumulated dots over storage-dtype operands, fp32 softmax
+    stats, exact-zero masking via NEG_INF (exp underflows to 0.0 for
+    masked slots, so stale post-rewind entries contribute nothing).
+    """
+    b, s, hq, hd = q.shape
+    _, t, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = ((q.astype(jnp.float32) * hd ** -0.5)
+          .astype(k_cache.dtype).reshape(b, s, hkv, g, hd))
+    logits = jnp.einsum("bskgh,btkh->bskgt", qf, k_cache,
+                        preferred_element_type=jnp.float32)
+    sp = jnp.broadcast_to(jnp.asarray(slot_pos, jnp.int32), (b, t))
+    qpos = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+            + jnp.arange(s, dtype=jnp.int32)[None, :])       # (B, S)
+    valid = (sp[:, None, :] >= 0) & (sp[:, None, :] <= qpos[:, :, None])
+    if window > 0:
+        valid &= sp[:, None, :] > qpos[:, :, None] - window
+    logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p_norm = (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype)
+    out = jnp.einsum("bskgt,btkh->bskgh", p_norm, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # KV cache
 # ---------------------------------------------------------------------------
@@ -372,6 +410,28 @@ def cache_insert(cache: dict, k_new: jax.Array, v_new: jax.Array,
     return {"k": k, "v": v, "slot_pos": sp}
 
 
+def cache_insert_multi(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                       pos) -> dict:
+    """Teacher-forced multi-token insert: (B, n, Hkv, hd) lands at PER-ROW
+    absolute positions pos[b]..pos[b]+n-1 (speculative verify — lanes sit
+    at different depths, so the prefill path's scalar-offset
+    dynamic_update_slice cannot serve).  Non-ring caches only: slot index
+    == absolute position, which is what makes rewind a pure ``pos``
+    retreat (stale slots mask out via slot_pos <= pos and are overwritten
+    before they could become readable again)."""
+    b, t = cache["k"].shape[:2]
+    n = k_new.shape[1]
+    dtype = cache["k"].dtype
+    pos_b = _row_pos(pos, b)
+    posn = pos_b[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(posn, 0, t - 1)
+    rows = jnp.arange(b)[:, None]
+    k = cache["k"].at[rows, idx].set(k_new.astype(dtype))
+    v = cache["v"].at[rows, idx].set(v_new.astype(dtype))
+    sp = cache["slot_pos"].at[rows, idx].set(posn)
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
 def cache_insert_stacked(caches: dict, layer_idx, k_new: jax.Array,
                          v_new: jax.Array, pos, ring: bool = False) -> dict:
     """In-place-style single-token insert into a STACKED (L, B, T, H, hd)
@@ -388,6 +448,25 @@ def cache_insert_stacked(caches: dict, layer_idx, k_new: jax.Array,
     k = caches["k"].at[layer_idx, rows, idx].set(k_new[:, 0].astype(dtype))
     v = caches["v"].at[layer_idx, rows, idx].set(v_new[:, 0].astype(dtype))
     sp = caches["slot_pos"].at[layer_idx, rows, idx].set(pos_b)
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
+def cache_insert_stacked_multi(caches: dict, layer_idx, k_new: jax.Array,
+                               v_new: jax.Array, pos) -> dict:
+    """``cache_insert_multi`` against a STACKED (L, B, T, H, hd) cache at
+    (layer_idx, b, pos[b]..pos[b]+n-1) — the speculative verify analogue
+    of ``cache_insert_stacked`` (the write is n tokens per lane, still KB
+    against the full cache, so XLA aliases the scan carry)."""
+    b, t = caches["k"].shape[1:3]
+    n = k_new.shape[1]
+    dtype = caches["k"].dtype
+    pos_b = _row_pos(pos, b)
+    posn = pos_b[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(posn, 0, t - 1)
+    rows = jnp.arange(b)[:, None]
+    k = caches["k"].at[layer_idx, rows, idx].set(k_new.astype(dtype))
+    v = caches["v"].at[layer_idx, rows, idx].set(v_new.astype(dtype))
+    sp = caches["slot_pos"].at[layer_idx, rows, idx].set(posn)
     return {"k": k, "v": v, "slot_pos": sp}
 
 

@@ -55,6 +55,59 @@ class Model:
                                      overlay=overlay,
                                      variant_idx=variant_idx)
 
+    # -- speculative verify (DESIGN.md §15) --------------------------------
+    # verify_step teacher-forces T tokens per row over the LIVE decode
+    # cache (per-row positions) and returns (logits (B,T,V), rewind_state);
+    # verify_rewind(rewind_state, keep) drops the rejected suffix — the
+    # cache each lane would hold after consuming only its first keep[b]
+    # tokens.  Both are bit-exact with T sequential decode_step calls:
+    # attention families run a parallel teacher-forced pass (decode-exact
+    # arithmetic per query — attention.verify_attention); recurrent-state
+    # families (ssm/hybrid) scan decode_step itself, because their
+    # sequence paths (e.g. xlstm's chunkwise mlstm) are NOT numerically
+    # interchangeable with the stepwise recurrence, and snapshot the state
+    # after every step so rewind is a per-row gather.
+    def verify_step(self, params, tokens, cache, overlay=None,
+                    variant_idx=None):
+        if hasattr(self._mod, "verify_step"):
+            logits, new_cache = self._mod.verify_step(
+                params, tokens, cache, self.cfg, overlay=overlay,
+                variant_idx=variant_idx)
+            return logits, ("pos", new_cache, tokens.shape[1])
+
+        def body(state, tok):
+            lg, new_state = self._mod.decode_step(
+                params, tok, state, self.cfg, overlay=overlay,
+                variant_idx=variant_idx)
+            return new_state, (lg, new_state)
+
+        _, (logits, snaps) = jax.lax.scan(body, cache,
+                                          jnp.swapaxes(tokens, 0, 1))
+        return jnp.swapaxes(logits, 0, 1), ("snap", snaps, None)
+
+    def verify_rewind(self, rewind_state, keep):
+        """keep (B,) int32 in [1, T]: tokens each lane actually consumed."""
+        mode, payload, span = rewind_state
+        if mode == "pos":
+            return self._mod.rewind_cache(payload, keep, span)
+        # snapshot select: leaf (T, ...) -> per-row slice at keep[b] - 1,
+        # the batch axis located via the state pspecs ("act_batch")
+        specs = jax.tree.leaves(self.cache_pspecs(),
+                                is_leaf=lambda x: isinstance(x, tuple))
+        leaves, treedef = jax.tree_util.tree_flatten(payload)
+        assert len(specs) == len(leaves), \
+            "cache_pspecs out of sync with the snapshot structure"
+        out = []
+        for leaf, sp in zip(leaves, specs):
+            ba = sp.index("act_batch") + 1          # +1: leading step axis
+            shape = [1] * leaf.ndim
+            shape[ba] = leaf.shape[ba]
+            idx = jnp.broadcast_to(
+                (keep - 1).astype(jnp.int32).reshape(shape),
+                (1,) + leaf.shape[1:])
+            out.append(jnp.take_along_axis(leaf, idx, axis=0)[0])
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     # -- caches ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         cfg = self.cfg

@@ -434,6 +434,131 @@ def decode_step(params, token, cache, cfg, overlay=None, variant_idx=None):
 
 
 # ---------------------------------------------------------------------------
+# speculative verify: T teacher-forced tokens over the live decode cache
+# ---------------------------------------------------------------------------
+
+def _verify_block(p, x, cfg, layer_cache, pat_entry, pos, ov=None,
+                  vidx=None):
+    """``_decode_block`` generalised to T tokens per row: the T new K/V
+    land at per-row positions pos..pos+T-1 and every query attends the
+    cache through ``verify_attention`` (bit-exact per query slice with
+    the decode path)."""
+    ov_a = oget(ov, "attn")
+    t = x.shape[1]
+    h = rmsnorm(x, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    positions = _decode_pos_q(pos) + jnp.arange(t, dtype=jnp.int32)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions,
+                            pat_entry["theta"], ov=ov_a, vidx=vidx)
+    new_cache = A.cache_insert_multi(layer_cache, k, v, pos)
+    o = A.verify_attention(q, new_cache["k"], new_cache["v"],
+                           new_cache["slot_pos"], pos, window=0)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                   waxes=("embed", "q_heads"))
+    x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
+    return x, new_cache
+
+
+def _verify_block_stacked(p, x, cfg, caches, idx, pat_entry, pos, ov=None,
+                          vidx=None):
+    """``_decode_block_stacked`` generalised to T tokens per row."""
+    ov_a = oget(ov, "attn")
+    t = x.shape[1]
+    h = rmsnorm(x, psel(p["ln1"], oget(ov, "ln1"), vidx), cfg.norm_eps)
+    positions = _decode_pos_q(pos) + jnp.arange(t, dtype=jnp.int32)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions,
+                            pat_entry["theta"], ov=ov_a, vidx=vidx)
+    caches = A.cache_insert_stacked_multi(caches, idx, k, v, pos)
+    view = A.cache_layer_view(caches, idx)
+    o = A.verify_attention(q, view["k"], view["v"], view["slot_pos"], pos,
+                           window=0)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim)
+    x = x + linear(o, p["attn"]["wo"], oget(ov_a, "wo"), vidx,
+                   waxes=("embed", "q_heads"))
+    x, _ = _ffn_part(p, x, cfg, ov=ov, vidx=vidx)
+    return x, caches
+
+
+def verify_step(params, tokens, cache, cfg, overlay=None, variant_idx=None):
+    """tokens (B, T) teacher-forced -> (logits (B, T, V), cache advanced
+    by T).  The k-token verify of speculative decoding (DESIGN.md §15):
+    structurally the decode scan with T-token activations, so logits[:,t]
+    is bit-exact with the T sequential ``decode_step`` calls that consume
+    tokens[:, :t+1] — rejected suffixes rewind via ``rewind_cache``.
+
+    Windowed (ring) layers are rejected: a ring write wraps modulo the
+    window, so rejected-token inserts would clobber in-window history
+    that a ``pos`` retreat cannot restore."""
+    if any(e["window"] > 0 for e in layer_pattern(cfg)):
+        raise ValueError(
+            "verify_step requires windowless KV caches (ring buffers "
+            "cannot rewind rejected speculative writes)")
+    vidx = variant_idx
+    pos = cache["pos"]
+    b, t = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
+    x = lc(x, "act_batch", None, "act_embed")
+    pat = layer_pattern(cfg)
+
+    new_cache = {"pos": pos + t, "slots": None}
+    if "pre_layers" in params:
+        pre = params["pre_layers"]
+        ov_pre = oget(overlay, "pre_layers")
+        n_pre = jax.tree.leaves(pre)[0].shape[0]
+        pre_out = []
+        for i in range(n_pre):
+            pi = jax.tree.map(lambda a: a[i], pre)
+            ov_i = jax.tree.map(lambda a: a[i], ov_pre)
+            ci = jax.tree.map(lambda a: a[i], cache["pre"])
+            x, ci_new = _verify_block(
+                pi, x, cfg, ci, {"window": 0, "theta": cfg.rope_theta}, pos,
+                ov=ov_i, vidx=vidx)
+            pre_out.append(ci_new)
+        new_cache["pre"] = jax.tree.map(lambda *a: jnp.stack(a), *pre_out)
+
+    n_pre = cfg.moe_first_dense if cfg.family == "moe" else 0
+    n_scan = cfg.num_layers - n_pre
+    n_super = n_scan // len(pat)
+    sup_params = jax.tree.map(
+        lambda a: a.reshape(n_super, len(pat), *a.shape[1:]), params["layers"])
+    sup_overlay = jax.tree.map(
+        lambda a: a.reshape(n_super, len(pat), *a.shape[1:]),
+        oget(overlay, "layers"))
+
+    def body(carry, xs):
+        h, slots = carry
+        lp, ovl, idx = xs
+        new_slots = []
+        for j, entry in enumerate(pat):
+            pj = jax.tree.map(lambda a: a[j], lp)
+            ovj = jax.tree.map(lambda a: a[j], ovl)
+            h, cj = _verify_block_stacked(pj, h, cfg, slots[j], idx,
+                                          entry, pos, ov=ovj, vidx=vidx)
+            new_slots.append(cj)
+        return (h, new_slots), None
+
+    (x, new_slots), _ = jax.lax.scan(
+        body, (x, list(cache["slots"])),
+        (sup_params, sup_overlay, jnp.arange(n_super)))
+    new_cache["slots"] = new_slots
+
+    x = rmsnorm(x, psel(params["final_norm"], oget(overlay, "final_norm"),
+                        vidx), cfg.norm_eps)
+    logits = _unembed(params, x, cfg, ov=overlay, vidx=vidx)
+    return logits, new_cache
+
+
+def rewind_cache(cache, keep, span: int):
+    """Drop the last span - keep[b] verify positions per row: ``pos``
+    retreats and nothing else moves.  Non-ring caches index slots by
+    absolute position, so the rejected entries (slot_pos > new pos) are
+    masked out of every later attention read and are overwritten by the
+    next write at their position before they could ever validate."""
+    return dict(cache, pos=cache["pos"] - (span - keep))
+
+
+# ---------------------------------------------------------------------------
 # prefill: full forward + cache build
 # ---------------------------------------------------------------------------
 

@@ -304,6 +304,69 @@ def prefill(params, batch, cfg, max_len: int, cache_dtype=jnp.bfloat16,
     return logits[:, -1, :], cache
 
 
+def verify_step(params, tokens, cache, cfg, overlay=None, variant_idx=None):
+    """tokens (B, T) teacher-forced over the live decode cache ->
+    (logits (B, T, V), cache advanced by T) — the speculative verify
+    (DESIGN.md §15).  Structurally ``decode_step`` with T-token
+    activations: self-attention reads through ``verify_attention``
+    (bit-exact per query with the decode path), cross-attention sees all
+    encoder frames for every query exactly as decode does, and rejected
+    suffixes rewind via ``rewind_cache`` (a pure ``pos`` retreat —
+    whisper's self cache is never windowed)."""
+    vidx = variant_idx
+    pos = cache["pos"]                      # (B,) per-lane positions
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.compute_dtype,
+                     bank=oget(overlay, "embed"), vidx=vidx)
+    pos_table = sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+    posn = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = x + jnp.take(pos_table, posn, axis=0).astype(x.dtype)
+    frame_pos = jnp.arange(cfg.encoder_frames, dtype=jnp.int32)
+
+    def body(h, xs):
+        lp, ovl, sc, ck, cv = xs
+        ov_s = oget(ovl, "self_attn")
+        ov_x = oget(ovl, "cross_attn")
+        hs = rmsnorm(h, psel(lp["ln1"], oget(ovl, "ln1"), vidx),
+                     cfg.norm_eps)
+        q, k, v = _qkv(lp["self_attn"], hs, hs, cfg, ov=ov_s, vidx=vidx)
+        sc_new = A.cache_insert_multi(sc, k, v, pos)
+        o = A.verify_attention(q, sc_new["k"], sc_new["v"],
+                               sc_new["slot_pos"], pos)
+        h = h + linear(o.reshape(b, s, cfg.q_dim), lp["self_attn"]["wo"],
+                       oget(ov_s, "wo"), vidx, waxes=("embed", "q_heads"))
+        hx = rmsnorm(h, psel(lp["ln_x"], oget(ovl, "ln_x"), vidx),
+                     cfg.norm_eps)
+        qx = linear(hx, lp["cross_attn"]["wq"], oget(ov_x, "wq"), vidx,
+                    waxes=("q_heads", "embed")
+                    ).reshape(b, s, cfg.num_heads, cfg.head_dim)
+        ox = A.verify_attention(qx, ck, cv, frame_pos,
+                                pos + cfg.encoder_frames)
+        h = h + linear(ox.reshape(b, s, cfg.q_dim), lp["cross_attn"]["wo"],
+                       oget(ov_x, "wo"), vidx, waxes=("embed", "q_heads"))
+        h = h + mlp2_apply(lp["mlp"],
+                           rmsnorm(h, psel(lp["ln2"], oget(ovl, "ln2"),
+                                           vidx), cfg.norm_eps),
+                           ov=oget(ovl, "mlp"), vidx=vidx)
+        return h, sc_new
+
+    x, self_new = jax.lax.scan(
+        body, x, (params["dec_layers"], oget(overlay, "dec_layers"),
+                  cache["self"], cache["cross_k"], cache["cross_v"]))
+    x = rmsnorm(x, psel(params["dec_norm"], oget(overlay, "dec_norm"),
+                        vidx), cfg.norm_eps)
+    logits = unembed_logits(x, params["embed"],
+                            bank=oget(overlay, "embed"), vidx=vidx)
+    new_cache = dict(cache, pos=pos + s, **{"self": self_new})
+    return logits, new_cache
+
+
+def rewind_cache(cache, keep, span: int):
+    """Drop the last span - keep[b] verify positions per row (see
+    transformer.rewind_cache — same non-ring slot_pos masking argument)."""
+    return dict(cache, pos=cache["pos"] - (span - keep))
+
+
 def decode_step(params, token, cache, cfg, overlay=None, variant_idx=None):
     vidx = variant_idx
     pos = cache["pos"]                      # (B,) per-lane positions

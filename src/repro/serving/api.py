@@ -67,16 +67,23 @@ class Deployment:
                  mesh=None, param_axes=None,
                  kernel_dispatch: str = "shard_map",
                  async_admission: bool = False,
+                 speculative: bool = False, draft_k: int = 4,
                  eager: bool = False, warmup: bool = False,
                  compile_cache_dir=None):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
-        if scheduler == "continuous" and mode != "fused":
+        if speculative:
+            if scheduler not in ("continuous", "speculative"):
+                raise ValueError(
+                    "speculative=True layers on the continuous slot "
+                    "scheduler; drop scheduler='group'")
+            scheduler = "speculative"
+        if scheduler in ("continuous", "speculative") and mode != "fused":
             # mirror launch/serve.py: the continuous slot scheduler admits
             # through the overlay bank, which is fused-only — accepting
             # mode="dense" here would silently serve fused residents
             raise ValueError(
-                "scheduler='continuous' requires mode='fused' (mixed "
+                f"scheduler={scheduler!r} requires mode='fused' (mixed "
                 "batches serve from the packed overlay bank); use "
                 "scheduler='group' for dense residency")
         if mesh is not None:
@@ -131,11 +138,11 @@ class Deployment:
                 self.registry.hydrator = self._hydrate
         self.admission = None
         if async_admission:
-            if scheduler != "continuous":
+            if scheduler not in ("continuous", "speculative"):
                 raise ValueError(
-                    "async_admission requires scheduler='continuous' "
-                    "(staged overlays commit into the overlay bank "
-                    "between decode steps)")
+                    "async_admission requires the continuous slot "
+                    "scheduler (staged overlays commit into the overlay "
+                    "bank between decode steps)")
             from repro.serving.admission import AdmissionPipeline
             self.admission = AdmissionPipeline(self.registry)
             self.registry.admission = self.admission
@@ -144,7 +151,7 @@ class Deployment:
             prompt_len=prompt_len, max_len=max_len,
             max_retries=max_retries, scheduler=scheduler, mesh=mesh,
             kernel_dispatch=kernel_dispatch, admission=self.admission,
-            compile_cache=self.compile_cache)
+            compile_cache=self.compile_cache, draft_k=draft_k)
         if warmup:
             # AOT-compile every step pair for the declared shapes BEFORE
             # traffic; with a compile cache this is a deserialize on a
@@ -181,7 +188,8 @@ class Deployment:
         between decode steps; ``wait=True`` blocks until it is resident
         (the escape hatch for callers that need the old synchronous
         contract)."""
-        if mode == "dense" and self.engine.scheduler == "continuous":
+        if mode == "dense" and self.engine.scheduler in ("continuous",
+                                                         "speculative"):
             raise ValueError(
                 "per-variant mode='dense' cannot serve under the "
                 "continuous scheduler (overlay-bank admission is "
@@ -252,7 +260,7 @@ class Deployment:
             if wait:
                 self.admission.wait(name)
         elif wait:
-            if self.engine.scheduler == "continuous":
+            if self.engine.scheduler in ("continuous", "speculative"):
                 self.registry.bank_resolve(name)
             else:
                 self.registry.resolve(name)
@@ -334,10 +342,18 @@ class Deployment:
         r = self.engine.request(rid)
         if r is None:
             return {"status": "unknown", "rid": rid}
-        return {"status": r.status, "rid": rid, "variant": r.variant,
-                "version": r.served_version,
-                "tokens_generated": len(r.out_tokens),
-                "error": r.error}
+        out = {"status": r.status, "rid": rid, "variant": r.variant,
+               "version": r.served_version,
+               "tokens_generated": len(r.out_tokens),
+               "first_token_at": r.first_token_at,
+               "ttft_seconds": (None if r.first_token_at is None
+                                else r.first_token_at - r.submitted_at),
+               "error": r.error}
+        if r.drafted:
+            # speculative lanes: fraction of offered drafts this request
+            # accepted (its base/variant agreement rate)
+            out["acceptance"] = r.accepted / r.drafted
+        return out
 
     def pending(self) -> int:
         return self.engine.pending()

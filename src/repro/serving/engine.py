@@ -85,6 +85,12 @@ class Request:
     first_token_at: Optional[float] = None   # perf_counter at the first
                                              # emitted token (TTFT metric:
                                              # benchmarks/admission_overlap)
+    submitted_at: float = 0.0     # perf_counter at submit() — with
+                                  # first_token_at this is the TTFT the
+                                  # engine/Deployment status surfaces
+    drafted: int = 0              # speculative scheduler: draft tokens
+    accepted: int = 0             # offered / accepted for THIS request
+                                  # (the per-lane acceptance rate)
 
 
 @dataclasses.dataclass
@@ -125,16 +131,26 @@ class ServingEngine:
                  max_len: int = 128, max_retries: int = 1,
                  greedy: bool = True, scheduler: str = "group",
                  mesh=None, kernel_dispatch: str = "shard_map",
-                 admission=None, compile_cache=None):
-        if scheduler not in ("group", "continuous"):
+                 admission=None, compile_cache=None,
+                 draft_k: int = 4, spec_adaptive: bool = True):
+        if scheduler not in ("group", "continuous", "speculative"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if kernel_dispatch not in ("shard_map", "gspmd"):
             raise ValueError(f"unknown kernel_dispatch {kernel_dispatch!r}")
-        if admission is not None and scheduler != "continuous":
+        if admission is not None and scheduler == "group":
             raise ValueError(
                 "async admission requires scheduler='continuous' (staged "
                 "overlays commit into the overlay bank between decode "
                 "steps; the group scheduler admits dense residents inline)")
+        if scheduler == "speculative":
+            from repro.models.transformer import layer_pattern
+            if model.cfg.family in ("dense", "moe", "vlm") and any(
+                    e["window"] > 0 for e in layer_pattern(model.cfg)):
+                raise ValueError(
+                    "scheduler='speculative' requires windowless KV "
+                    "caches: sliding-window layers ring-buffer their "
+                    "writes, so rewinding rejected draft tokens would "
+                    "clobber in-window history (DESIGN.md §15)")
         self.model = model
         self.registry = registry
         self.batch_size = batch_size
@@ -188,6 +204,19 @@ class ServingEngine:
                                           "batch"),
                        "decode_banked": ("params", "overlay", "token",
                                          "token", "cache")}
+        # speculative rounds (serving/speculative.py): one executable per
+        # draft length on the adaptive ladder — each k is a compile-time
+        # scan length.  Same signature/roles as decode_banked, so the
+        # sharded staging + compile cache + warmup machinery carry over.
+        self.spec = None
+        if scheduler == "speculative":
+            from repro.serving import speculative as SPEC
+            self.spec = SPEC.AcceptanceTracker(draft_k,
+                                               adaptive=spec_adaptive)
+            for k in self.spec.ladder:
+                self._fns[f"spec_k{k}"] = SPEC.make_round_fn(model, k)
+                self._roles[f"spec_k{k}"] = ("params", "overlay", "token",
+                                             "token", "cache")
         # executable store: ONE AOT-compiled executable per (kind,
         # overlay structure) — the wrapped→lowered→compiled split
         # (DESIGN.md §14).  The overlay is the only argument whose
@@ -237,7 +266,20 @@ class ServingEngine:
                         "async_admits": 0,
                         "step_compiles": 0, "step_cache_hits": 0,
                         "step_compile_seconds": 0.0,
-                        "warmup_seconds": 0.0}
+                        "warmup_seconds": 0.0,
+                        "spec_rounds": 0, "spec_drafted": 0,
+                        "spec_accepted": 0,
+                        "ttft_count": 0, "ttft_seconds_sum": 0.0,
+                        "ttft_seconds_max": 0.0}
+        # warmup registry (extensible — register_warmup): each entry
+        # builds its step pairs from the shared abstract-twin context, so
+        # new step kinds (e.g. the speculative ladder) warm through the
+        # same AOT/persistent-cache path as the core pairs
+        self._warmup_reg = {"plain": self._warm_plain,
+                            "fused": self._warm_fused,
+                            "banked": self._warm_banked}
+        if self.spec is not None:
+            self._warmup_reg["speculative"] = self._warm_speculative
         # benchmark hook (benchmarks/admission_overlap.py): with
         # record_step_times=True every decode step appends
         # (perf_counter_at_end, seconds, admission_in_flight) — the
@@ -293,9 +335,15 @@ class ServingEngine:
             return jax.jit(self._fns[kind])
         in_sh = tuple(self._arg_sharding(role, arg)
                       for role, arg in zip(self._roles[kind], args))
-        out_sh = ((self._logits_sh, self._cache_sh)
-                  if kind.startswith("prefill")
-                  else (self._tok_sh, self._cache_sh))
+        if kind.startswith("prefill"):
+            out_sh = (self._logits_sh, self._cache_sh)
+        elif kind.startswith("spec_k"):
+            # (ver (B,T), n_acc (B,), next_tok (B,), cache): the token
+            # matrix shards its rows like the lane vector, T replicated
+            out_sh = (self._logits_sh, self._tok_sh, self._tok_sh,
+                      self._cache_sh)
+        else:
+            out_sh = (self._tok_sh, self._cache_sh)
         return jax.jit(self._fns[kind], in_shardings=in_sh,
                        out_shardings=out_sh)
 
@@ -355,8 +403,21 @@ class ServingEngine:
         self._next_rid += 1
         self._queue.append(Request(rid=rid, tokens=np.asarray(tokens),
                                    variant=variant,
-                                   max_new_tokens=max_new_tokens))
+                                   max_new_tokens=max_new_tokens,
+                                   submitted_at=time.perf_counter()))
         return rid
+
+    def _note_first_token(self, r: Request) -> None:
+        """Stamp TTFT at a request's first emitted token and fold it into
+        the engine aggregates ``status()`` surfaces."""
+        if r.first_token_at is not None:
+            return
+        r.first_token_at = time.perf_counter()
+        ttft = r.first_token_at - r.submitted_at
+        self.metrics["ttft_count"] += 1
+        self.metrics["ttft_seconds_sum"] += ttft
+        self.metrics["ttft_seconds_max"] = max(
+            self.metrics["ttft_seconds_max"], ttft)
 
     def result(self, rid: int) -> Request:
         return self._done[rid]
@@ -387,7 +448,8 @@ class ServingEngine:
             return "unknown" if r is None else r.status
         from repro.kernels import dispatch as _dp
         cc = self.compile_cache
-        return {
+        n_ttft = self.metrics["ttft_count"]
+        snap = {
             "scheduler": self.scheduler,
             "pending": self.pending(),
             "active": self.active(),
@@ -399,8 +461,18 @@ class ServingEngine:
                           self.metrics["step_compile_seconds"]},
             "compile_cache": None if cc is None else dict(cc.stats),
             "dispatch_memo": _dp.memo_info(),
+            # TTFT aggregates (submit -> first emitted token), fed by
+            # Request.first_token_at — benchmarks read latency from here
+            # instead of poking request internals
+            "ttft": {"count": n_ttft,
+                     "mean_seconds": (self.metrics["ttft_seconds_sum"]
+                                      / n_ttft if n_ttft else 0.0),
+                     "max_seconds": self.metrics["ttft_seconds_max"]},
             "metrics": dict(self.metrics),
         }
+        if self.spec is not None:
+            snap["speculative"] = self.spec.snapshot()
+        return snap
 
     def pending(self) -> int:
         return len(self._queue)
@@ -408,17 +480,30 @@ class ServingEngine:
     def active(self) -> int:
         return sum(1 for s in self._slots if s is not None)
 
-    def warmup(self, pairs=("plain", "fused", "banked")) -> dict:
+    def register_warmup(self, name: str, builder) -> None:
+        """Register (or replace) a warmup entry: ``builder(ctx)`` is
+        called from ``warmup()`` with the shared abstract-twin context
+        (see ``_warmup_ctx``) and warms its step kinds via
+        ``ctx["warm"](tag, kind, args)``.  This is how new step kinds
+        join the AOT/persistent-cache path without editing ``warmup()``
+        — the speculative ladder registers itself exactly this way."""
+        self._warmup_reg[name] = builder
+
+    def warmup(self, pairs=None) -> dict:
         """AOT-compile the step executables for the declared shapes
-        BEFORE accepting traffic (ROADMAP "compile-once serving"): the
-        plain pair (base model / dense residents), the fused pair
-        (single-variant packed overlay + params view) and the banked
+        BEFORE accepting traffic (ROADMAP "compile-once serving").
+        ``pairs`` selects entries from the warmup REGISTRY
+        (``register_warmup``); None warms every registered entry — by
+        default the plain pair (base model / dense residents), the fused
+        pair (single-variant packed overlay + params view), the banked
         pair (the continuous scheduler's overlay bank + per-row
-        variant_idx), plus the admission cache-merge.  With a
-        persistent compile cache attached, a warm restart resolves
-        every pair by DESERIALIZING — zero compiles on the path to the
-        first token; cold, the compiles happen here instead of inside
-        the first request's latency.
+        variant_idx) plus the admission cache-merge, and — under
+        ``scheduler="speculative"`` — one speculative round per draft
+        length on the adaptive ladder, in bank-resident AND bank-empty
+        flavours.  With a persistent compile cache attached, a warm
+        restart resolves every entry by DESERIALIZING — zero compiles on
+        the path to the first token; cold, the compiles happen here
+        instead of inside the first request's latency.
 
         The overlay/bank abstract twins derive from the base params'
         calibration targets (``core/calibration.is_target`` — the same
@@ -428,11 +513,28 @@ class ServingEngine:
         device-put places it on.  Returns {pair/kind: "compiled" |
         "hit"} ("hit": resolved without a fresh compile — in-process or
         persistent)."""
-        from repro.core.calibration import (flatten_params, is_target,
-                                            unflatten_like)
-        from repro.models import delta_overlay as DO
-
+        pairs = tuple(self._warmup_reg) if pairs is None else tuple(pairs)
+        unknown = [p for p in pairs if p not in self._warmup_reg]
+        if unknown:
+            raise ValueError(
+                f"unknown warmup pairs {unknown!r}; registered: "
+                f"{sorted(self._warmup_reg)} (add new step kinds with "
+                "register_warmup)")
         t0 = time.perf_counter()
+        ctx = self._warmup_ctx()
+        for name in pairs:
+            self._warmup_reg[name](ctx)
+        self.metrics["warmup_seconds"] += time.perf_counter() - t0
+        self.warmed = True
+        return ctx["outcomes"]
+
+    def _warmup_ctx(self) -> dict:
+        """Shared abstract-twin context the warmup builders draw from:
+        the base params, fixed-shape batch/token/cache stand-ins, the
+        delta/extra path split, and the ``warm`` closure that resolves
+        one executable and records "compiled" | "hit"."""
+        from repro.core.calibration import flatten_params, is_target
+
         reg = self.registry
         base = reg.base_params
         bs = self.batch_size
@@ -441,10 +543,6 @@ class ServingEngine:
                              if is_target(p, l))
         ds = set(delta_paths)
         extra_paths = sorted(p for p in base_flat if p not in ds)
-        cache = jax.eval_shape(
-            lambda: self.model.init_cache(bs, self.max_len))
-        batch = self._prompt_batch({})
-        token = jnp.zeros((bs,), jnp.int32)
         outcomes: dict = {}
 
         def warm(tag, kind, args):
@@ -454,56 +552,100 @@ class ServingEngine:
                 "compiled" if self.metrics["step_compiles"] > c0
                 else "hit")
 
-        if "plain" in pairs:
-            warm("plain", "prefill", (base, None, batch))
-            warm("plain", "decode", (base, None, token, cache))
-        if "fused" in pairs and delta_paths:
-            # params VIEW: target paths alias the base weight, every
-            # other leaf is the variant's fp16 extra
-            # (loader.device_put_overlay's layout)
-            view = unflatten_like(base, {
-                p: (l if p in ds
-                    else jax.ShapeDtypeStruct(l.shape, jnp.float16))
-                for p, l in base_flat.items()})
-            ov = DO.overlay_struct(base_flat, delta_paths)
-            if self.mesh is not None:
-                ov = self._shard_struct(
-                    ov, delta_paths,
-                    {p: DO.entry_shardings_from_weight(
-                        sh, base_flat[p].ndim)
-                     for p, sh in flatten_params(
-                         reg.param_shardings).items() if p in ds})
-            warm("fused", "prefill", (view, ov, batch))
-            warm("fused", "decode", (view, ov, token, cache))
-        if "banked" in pairs and delta_paths:
-            nb = reg.bank_size
-            bank = DO.overlay_struct(base_flat, delta_paths, extra_paths,
-                                     bank_size=nb)
-            if self.mesh is not None:
-                bank = self._shard_struct(
-                    bank, delta_paths + extra_paths,
-                    DO.overlay_shardings(
-                        reg.param_axes, base_flat, delta_paths,
-                        extra_paths, self._rules, self.mesh,
-                        bank_size=nb))
-            vidx = jnp.zeros((bs,), jnp.int32)
-            # pre-first-admission state: the continuous scheduler serves
-            # base-only traffic with bank=None until a variant lands
-            warm("banked-empty", "prefill_banked",
-                 (base, None, vidx, batch))
-            warm("banked-empty", "decode_banked",
+        return {"base": base, "base_flat": base_flat, "ds": ds,
+                "delta_paths": delta_paths, "extra_paths": extra_paths,
+                "batch": self._prompt_batch({}),
+                "token": jnp.zeros((bs,), jnp.int32),
+                "vidx": jnp.zeros((bs,), jnp.int32),
+                "cache": jax.eval_shape(
+                    lambda: self.model.init_cache(bs, self.max_len)),
+                "warm": warm, "outcomes": outcomes}
+
+    def _warm_plain(self, ctx) -> None:
+        warm = ctx["warm"]
+        warm("plain", "prefill", (ctx["base"], None, ctx["batch"]))
+        warm("plain", "decode", (ctx["base"], None, ctx["token"],
+                                 ctx["cache"]))
+
+    def _warm_fused(self, ctx) -> None:
+        from repro.core.calibration import flatten_params, unflatten_like
+        from repro.models import delta_overlay as DO
+        if not ctx["delta_paths"]:
+            return
+        ds = ctx["ds"]
+        base_flat = ctx["base_flat"]
+        # params VIEW: target paths alias the base weight, every other
+        # leaf is the variant's fp16 extra (loader.device_put_overlay's
+        # layout)
+        view = unflatten_like(ctx["base"], {
+            p: (l if p in ds
+                else jax.ShapeDtypeStruct(l.shape, jnp.float16))
+            for p, l in base_flat.items()})
+        ov = DO.overlay_struct(base_flat, ctx["delta_paths"])
+        if self.mesh is not None:
+            ov = self._shard_struct(
+                ov, ctx["delta_paths"],
+                {p: DO.entry_shardings_from_weight(
+                    sh, base_flat[p].ndim)
+                 for p, sh in flatten_params(
+                     self.registry.param_shardings).items() if p in ds})
+        warm = ctx["warm"]
+        warm("fused", "prefill", (view, ov, ctx["batch"]))
+        warm("fused", "decode", (view, ov, ctx["token"], ctx["cache"]))
+
+    def _bank_struct(self, ctx):
+        """Abstract twin of the runtime overlay bank (structure + avals +
+        derived shardings) — the banked and speculative warmup entries
+        share it."""
+        from repro.models import delta_overlay as DO
+        nb = self.registry.bank_size
+        bank = DO.overlay_struct(ctx["base_flat"], ctx["delta_paths"],
+                                 ctx["extra_paths"], bank_size=nb)
+        if self.mesh is not None:
+            bank = self._shard_struct(
+                bank, ctx["delta_paths"] + ctx["extra_paths"],
+                DO.overlay_shardings(
+                    self.registry.param_axes, ctx["base_flat"],
+                    ctx["delta_paths"], ctx["extra_paths"], self._rules,
+                    self.mesh, bank_size=nb))
+        return bank
+
+    def _warm_banked(self, ctx) -> None:
+        if not ctx["delta_paths"]:
+            return
+        bank = self._bank_struct(ctx)
+        warm = ctx["warm"]
+        base, token, cache = ctx["base"], ctx["token"], ctx["cache"]
+        vidx, batch = ctx["vidx"], ctx["batch"]
+        # pre-first-admission state: the continuous scheduler serves
+        # base-only traffic with bank=None until a variant lands
+        warm("banked-empty", "prefill_banked", (base, None, vidx, batch))
+        warm("banked-empty", "decode_banked",
+             (base, None, vidx, token, cache))
+        warm("banked", "prefill_banked", (base, bank, vidx, batch))
+        warm("banked", "decode_banked", (base, bank, vidx, token, cache))
+        if self.scheduler in ("continuous", "speculative"):
+            if self._merge_jit is None:
+                self._merge_jit = self._make_merge()
+            ctx["outcomes"]["banked/merge"] = self._merge_jit.aot(
+                cache, cache,
+                jax.ShapeDtypeStruct((self.batch_size,), jnp.bool_))
+
+    def _warm_speculative(self, ctx) -> None:
+        """One speculative round per ladder rung (each k is its own scan
+        length, hence its own executable), in both the bank-resident and
+        the pre-first-admission (bank=None) flavours — the two new step
+        shapes the scheduler dispatches."""
+        warm = ctx["warm"]
+        base, token, cache = ctx["base"], ctx["token"], ctx["cache"]
+        vidx = ctx["vidx"]
+        bank = self._bank_struct(ctx) if ctx["delta_paths"] else None
+        for k in self.spec.ladder:
+            warm("spec-empty", f"spec_k{k}",
                  (base, None, vidx, token, cache))
-            warm("banked", "prefill_banked", (base, bank, vidx, batch))
-            warm("banked", "decode_banked",
-                 (base, bank, vidx, token, cache))
-            if self.scheduler == "continuous":
-                if self._merge_jit is None:
-                    self._merge_jit = self._make_merge()
-                outcomes["banked/merge"] = self._merge_jit.aot(
-                    cache, cache, jax.ShapeDtypeStruct((bs,), jnp.bool_))
-        self.metrics["warmup_seconds"] += time.perf_counter() - t0
-        self.warmed = True
-        return outcomes
+            if bank is not None:
+                warm("spec", f"spec_k{k}",
+                     (base, bank, vidx, token, cache))
 
     @staticmethod
     def _shard_struct(struct: dict, paths, flat_shardings: dict) -> dict:
@@ -534,6 +676,9 @@ class ServingEngine:
         return out
 
     def run_until_drained(self, max_rounds: int = 1000) -> dict:
+        if self.scheduler == "speculative":
+            self._serve_speculative(max_rounds)
+            return self.metrics
         if self.scheduler == "continuous":
             self._serve_continuous(max_rounds)
             return self.metrics
@@ -608,8 +753,7 @@ class ServingEngine:
                 # occupy a batch lane but neither emit nor count
                 if step < r.max_new_tokens:
                     r.out_tokens.append(int(host_tok[i]))
-                    if r.first_token_at is None:
-                        r.first_token_at = time.perf_counter()
+                    self._note_first_token(r)
                     n_active += 1
             self.metrics["tokens_generated"] += n_active
             if step + 1 >= n_steps:
@@ -762,6 +906,18 @@ class ServingEngine:
                                    self._next_tok)
         self._cache = self._merge_admitted(self._cache, fresh, newly)
 
+    def _retire(self, i: int) -> None:
+        """Release lane ``i``: mark its request done, unpin the bank slot
+        it decoded from, and free the lane for the next admission wave."""
+        s = self._slots[i]
+        s.request.status = "done"
+        self._done[s.request.rid] = s.request
+        self.registry.bank_unpin(s.vkey)
+        self._slots[i] = None
+        self._variant_idx[i] = 0
+        self._variant_idx_dev = None
+        self.metrics["retired"] += 1
+
     def _serve_continuous(self, max_rounds: int) -> None:
         # max_rounds bounds STALLED rounds (no admission, no token, no
         # failure), not decode steps — productive rounds are already
@@ -807,8 +963,7 @@ class ServingEngine:
                 if s is None:
                     continue
                 s.request.out_tokens.append(int(host_tok[i]))
-                if s.request.first_token_at is None:
-                    s.request.first_token_at = time.perf_counter()
+                self._note_first_token(s.request)
                 s.remaining -= 1
                 self.metrics["tokens_generated"] += 1
                 if s.remaining <= 0:
@@ -816,14 +971,7 @@ class ServingEngine:
             # retire exhausted slots IMMEDIATELY — their lanes are free for
             # the next admission wave instead of padding to the batch max
             for i in retired:
-                s = self._slots[i]
-                s.request.status = "done"
-                self._done[s.request.rid] = s.request
-                self.registry.bank_unpin(s.vkey)
-                self._slots[i] = None
-                self._variant_idx[i] = 0
-                self._variant_idx_dev = None
-                self.metrics["retired"] += 1
+                self._retire(i)
             if not (self.active() or self._queue):
                 break           # drained: skip the dangling decode
             if not self.active():
@@ -848,6 +996,104 @@ class ServingEngine:
                 # the benchmark's 2x ceiling gates
                 self.step_times.append(
                     (time.perf_counter(), dt, admission_busy))
+        self.metrics["batches"] += 1
+
+    def _serve_speculative(self, max_rounds: int) -> None:
+        """The continuous slot scheduler with the per-token decode swapped
+        for base-as-draft speculative ROUNDS (serving/speculative.py): the
+        same admission / prefill-on-admit / retire machinery, but each
+        jitted call drafts k tokens on the base weights and verifies them
+        through the lane's banked overlay, emitting up to k+1 tokens per
+        dispatch.  Token streams are bit-exact with scheduler="continuous"
+        for any k (the round accepts only the variant's own greedy chain).
+
+        ``self._next_tok`` holds each lane's PENDING token — already part
+        of the variant's chain (prefill argmax or a verify correction) but
+        not yet appended; the loop top emits it, then the round extends
+        the chain by n_acc matched drafts + the next correction."""
+        stalls = 0
+        while (self._queue or self.active()) and stalls < max_rounds:
+            drained = 0
+            if self.admission is not None:
+                drained = self.admission.drain(max_admits=1)
+                self.metrics["async_admits"] += drained
+            failed0 = self.metrics["failed"]
+            newly = self._admit_free_slots()
+            if newly:
+                self._prefill_admitted(newly)
+            if not self.active():
+                if not self._queue:
+                    break
+                if self.metrics["failed"] > failed0 or drained:
+                    stalls = 0
+                elif self.admission is not None \
+                        and self.admission.in_flight():
+                    self.admission.wait_progress(0.05)
+                    stalls = 0
+                else:
+                    stalls += 1
+                continue
+            stalls = 0
+            # emit the pending token (one host sync), retire exhausted
+            host_tok = np.asarray(self._next_tok)
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                s.request.out_tokens.append(int(host_tok[i]))
+                self._note_first_token(s.request)
+                s.remaining -= 1
+                self.metrics["tokens_generated"] += 1
+                if s.remaining <= 0:
+                    self._retire(i)
+            if not (self.active() or self._queue):
+                break           # drained: skip the dangling round
+            if not self.active():
+                continue        # lanes empty but queue pending: admit next
+            params, bank = self.registry.spec_resolve()
+            if self._variant_idx_dev is None:
+                self._variant_idx_dev = jnp.asarray(self._variant_idx)
+            k = self.spec.current_k
+            admission_busy = drained > 0 or (
+                self.admission is not None
+                and self.admission.in_flight() > 0)
+            t0 = time.perf_counter()
+            ver, n_acc, self._next_tok, self._cache = self._call(
+                f"spec_k{k}", params, bank, self._variant_idx_dev,
+                self._next_tok, self._cache)
+            jax.block_until_ready(self._next_tok)
+            dt = time.perf_counter() - t0
+            self.metrics["decode_seconds"] += dt
+            self.metrics["decode_steps"] += 1
+            self.metrics["spec_rounds"] += 1
+            if self.record_step_times:
+                self.step_times.append(
+                    (time.perf_counter(), dt, admission_busy))
+            # second host sync of the round: the accepted prefixes
+            host_ver = np.asarray(ver)
+            host_n = np.asarray(n_acc)
+            acc_total = 0
+            lanes = 0
+            for i, s in enumerate(self._slots):
+                if s is None:
+                    continue
+                lanes += 1
+                n = int(host_n[i])
+                acc_total += n
+                r = s.request
+                r.drafted += k
+                r.accepted += n
+                take = min(n, s.remaining)
+                for j in range(take):
+                    r.out_tokens.append(int(host_ver[i, j]))
+                self.metrics["tokens_generated"] += take
+                s.remaining -= take
+                if s.remaining <= 0:
+                    # budget exhausted inside the round: the pending
+                    # correction token is beyond max_new_tokens — drop it
+                    self._retire(i)
+            self.metrics["spec_drafted"] += k * lanes
+            self.metrics["spec_accepted"] += acc_total
+            self.spec.observe(k, acc_total, lanes)
         self.metrics["batches"] += 1
 
     def _prompt_batch(self, requests: dict) -> dict:

@@ -1,0 +1,156 @@
+"""Cross-variant speculative decoding: base-as-draft, banked k-token verify.
+
+The base model is already resident on every device next to each fused
+variant overlay (bank slot 0 = base) — it is a free draft model, and the
+paper's premise (per-axis 1-bit deltas keep variants CLOSE to the base;
+BitDelta/DeltaZip in PAPERS.md make the same observation) is exactly the
+high-acceptance regime speculative decoding wants.  One round per lane:
+
+  draft   k plain ``decode_step``s with the BASE weights (overlay None —
+          the pure-XLA path, no banked kernel) chained inside one scan;
+          the draft's cache writes are DISCARDED (the verify pass rebuilds
+          them with the variant's own K/V),
+  verify  ONE banked ``verify_step`` over [pending, d_1..d_k] (T = k+1
+          teacher-forced tokens, per-row positions over the live cache)
+          with the lane's variant overlay + per-row variant_idx — the same
+          banked delta GEMMs as continuous decode, amortised over k+1
+          tokens per call,
+  accept  the longest prefix where draft == variant-greedy, PLUS the
+          variant's own next token (``n_acc`` matches, ``n_acc + 1``
+          chain tokens) — so the emitted stream is the variant's greedy
+          chain BY CONSTRUCTION, bit-exact with ``scheduler="continuous"``
+          for any k and any acceptance rate,
+  rewind  the cache retreats to the state after consuming exactly
+          ``n_acc + 1`` tokens (``Model.verify_rewind``).
+
+Everything lives in ONE jitted function per k: the engine pays a single
+dispatch + host sync per round for up to k+1 emitted tokens, versus one
+per token under continuous decode — that call-amortisation (plus drafting
+on the cheap overlay-free path) is where the speedup comes from, and the
+acceptance rate is what buys it (DESIGN.md §15 derives the model).
+
+Why the emitted tokens are exact: verify logits[:, j] condition on
+seq[:, :j+1] = [pending, d_1..d_j].  For j < n_acc every d_i in that
+prefix equals the variant's greedy token v_i (that is what the cumulative
+match means), so v_{j+1} = argmax(logits[:, j]) is the variant's own
+chain; the first mismatch position contributes the variant's CORRECTED
+token and everything after it is discarded along with its cache writes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_k_ladder(draft_k: int) -> list:
+    """Compile-time draft lengths the adaptive controller may pick:
+    powers of two up to ``draft_k`` plus ``draft_k`` itself (each k is a
+    separate scan length, hence a separate executable — the engine warms
+    and caches every rung)."""
+    if draft_k < 1:
+        raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+    ladder = {1 << i for i in range((draft_k).bit_length())
+              if (1 << i) <= draft_k}
+    ladder.add(draft_k)
+    return sorted(ladder)
+
+
+def make_round_fn(model, k: int):
+    """Build the jit-able speculative round for draft length ``k``.
+
+    Signature matches the engine's banked decode step — (base_params,
+    bank, variant_idx, pending_token, cache), roles ("params", "overlay",
+    "token", "token", "cache") — so the engine's sharded staging, compile
+    cache and warmup machinery apply unchanged.  Returns
+
+      ver      (B, k+1) int32  variant greedy tokens: ver[:, j] follows
+               the teacher-forced prefix [pending, d_1..d_j]
+      n_acc    (B,)     int32  accepted draft count in [0, k]
+      next_tok (B,)     int32  the next pending token, ver[b, n_acc[b]]
+      cache                    rewound to pos + n_acc + 1
+    """
+
+    def spec_round(params, bank, vidx, token, cache):
+        def draft_body(carry, _):
+            tok, c = carry
+            logits, c2 = model.decode_step(params, tok, c)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, c2), nxt
+
+        # draft on the base: overlay None keeps the GEMMs on the plain
+        # XLA path (no per-step bank gather); the drafted cache is dropped
+        (_, _), drafts = jax.lax.scan(draft_body, (token, cache), None,
+                                      length=k)
+        drafts = jnp.swapaxes(drafts, 0, 1)             # (B, k)
+        seq = jnp.concatenate([token[:, None], drafts], axis=1)
+        logits, rewind_state = model.verify_step(params, seq, cache,
+                                                 overlay=bank,
+                                                 variant_idx=vidx)
+        ver = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, k+1)
+        match = (drafts == ver[:, :k]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)        # (B,)
+        next_tok = jnp.take_along_axis(ver, n_acc[:, None], axis=1)[:, 0]
+        new_cache = model.verify_rewind(rewind_state, n_acc + 1)
+        return ver, n_acc, next_tok, new_cache
+
+    return spec_round
+
+
+class AcceptanceTracker:
+    """Engine-wide adaptive draft-length controller + acceptance stats.
+
+    Tracks an EMA of the per-round acceptance FRACTION (accepted drafts /
+    offered drafts over active lanes) and walks ``current_k`` along the
+    compile-time ladder: persistent low acceptance wastes draft+verify
+    work on tokens that get thrown away (step down), persistent
+    near-perfect acceptance means rounds are shorter than they could be
+    (step up).  Adjustments are cooldown-gated so a single outlier round
+    cannot thrash between executables."""
+
+    def __init__(self, draft_k: int, *, ema_decay: float = 0.7,
+                 low: float = 0.4, high: float = 0.85, cooldown: int = 4,
+                 adaptive: bool = True):
+        self.ladder = default_k_ladder(draft_k)
+        self.current_k = draft_k
+        self.ema = 1.0          # optimistic start: the paper's premise is
+        self.ema_decay = ema_decay   # base/variant streams mostly agree
+        self.low = low
+        self.high = high
+        self.cooldown = cooldown
+        self.adaptive = adaptive
+        self.rounds = 0
+        self.drafted = 0
+        self.accepted = 0
+        self._since_adjust = 0
+
+    def observe(self, k: int, accepted: int, lanes: int) -> None:
+        """One round's outcome: ``lanes`` active lanes were offered ``k``
+        drafts each and accepted ``accepted`` in total."""
+        self.rounds += 1
+        if lanes <= 0:
+            return
+        self.drafted += k * lanes
+        self.accepted += accepted
+        frac = accepted / float(k * lanes)
+        self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * frac
+        self._since_adjust += 1
+        if not self.adaptive or self._since_adjust < self.cooldown:
+            return
+        i = self.ladder.index(self.current_k)
+        if self.ema < self.low and i > 0:
+            self.current_k = self.ladder[i - 1]
+            self._since_adjust = 0
+        elif self.ema > self.high and i < len(self.ladder) - 1:
+            self.current_k = self.ladder[i + 1]
+            self._since_adjust = 0
+
+    @property
+    def acceptance(self) -> float:
+        """Lifetime acceptance rate (accepted / drafted)."""
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    def snapshot(self) -> dict:
+        return {"current_k": self.current_k, "ladder": list(self.ladder),
+                "acceptance_ema": self.ema, "acceptance": self.acceptance,
+                "rounds": self.rounds, "drafted": self.drafted,
+                "accepted": self.accepted}

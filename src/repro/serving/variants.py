@@ -670,6 +670,20 @@ class VariantRegistry:
         self.bank.pin(vkey)
         return slot, vkey
 
+    def spec_resolve(self) -> tuple:
+        """The speculative scheduler's weight resolution (DESIGN.md §15):
+        (draft_params, verify_bank).  Drafting serves the BASE — bank
+        slot 0's semantics — through the shared base params with overlay
+        None (the plain-XLA path: a draft step must not pay the banked
+        kernel it exists to amortise); verification serves every lane's
+        variant through the SAME overlay bank and per-row variant_idx the
+        continuous scheduler decodes with, so admission, pinning,
+        hot-swap and rollback behave identically under both schedulers.
+        ``verify_bank`` is None until the first variant admission (the
+        base-only traffic regime, matching the engine's banked-empty
+        executables)."""
+        return self.base_params, (self.bank.tree if self.bank else None)
+
     def _bank_key(self, nameish: str) -> str:
         """Map a caller-facing name to its bank/resident key: version keys
         and unversioned names pass through; plain names of versioned

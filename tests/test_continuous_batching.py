@@ -88,6 +88,53 @@ def test_banked_kernel_leading_dims_broadcast():
                                np.asarray(flat), rtol=1e-6, atol=1e-6)
 
 
+def _banked_operands(rng, v, n, k):
+    packed = jnp.asarray(rng.integers(0, 256, (v, n, k // 8)), jnp.uint8)
+    v_row = jnp.asarray(rng.normal(size=(v, n)), jnp.float16).at[0].set(0)
+    v_col = jnp.asarray(rng.normal(size=(v, k)), jnp.float16).at[0].set(0)
+    wb = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    return packed, v_row, v_col, wb
+
+
+@pytest.mark.parametrize("t", [2, 4])
+@pytest.mark.parametrize("dispatch", ["shard_map", "gspmd"])
+def test_banked_kernel_multi_token_decode_shapes(t, dispatch):
+    """(B, T, K) banked decode — the speculative verify_step shape
+    (DESIGN.md §15): every row must be BIT-IDENTICAL to the T = 1
+    per-token call the continuous scheduler makes (anything looser breaks
+    the speculative scheduler's exactness guarantee), and allclose vs the
+    dense oracle.  Both kernel lowerings: the shard_map per-shard path
+    (1x1 mesh) and the global/GSPMD path."""
+    from jax.sharding import Mesh
+    from repro.distributed import sharding as S
+    from repro.kernels import dispatch as KD
+    from repro.kernels import ref as R
+
+    rng = np.random.default_rng(10 + t)
+    v, n, k, b = 3, 32, 64, 4
+    packed, v_row, v_col, wb = _banked_operands(rng, v, n, k)
+    x = jnp.asarray(rng.normal(size=(b, t, k)), jnp.float32)
+    vidx = jnp.asarray(rng.integers(0, v, (b,)), jnp.int32)
+
+    if dispatch == "shard_map":
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        ctx = S.shard_ctx(mesh, S.rules_for("decode"))
+    else:
+        ctx = KD.no_dispatch()
+    with ctx:
+        got = K.bitlinear_axes_banked(x, vidx, packed, v_row, v_col, wb)
+        per_tok = jnp.stack(
+            [K.bitlinear_axes_banked(x[:, j], vidx, packed, v_row, v_col,
+                                     wb) for j in range(t)], axis=1)
+    assert got.shape == (b, t, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(per_tok))
+    want = R.bitlinear_axes_banked_ref(
+        x.reshape(b * t, k), jnp.repeat(vidx, t), packed, v_row, v_col, wb)
+    np.testing.assert_allclose(np.asarray(got).reshape(b * t, n),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # model-level mixed-variant parity
 # ---------------------------------------------------------------------------

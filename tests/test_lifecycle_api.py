@@ -258,7 +258,9 @@ def test_submit_against_version_swapped_mid_queue(setup):
     rid = dep.submit(PROMPT, variant="prod", max_new_tokens=4)
     assert dep.status(rid) == {"status": "queued", "rid": rid,
                                "variant": "prod", "version": None,
-                               "tokens_generated": 0, "error": None}
+                               "tokens_generated": 0, "error": None,
+                               "first_token_at": None,
+                               "ttft_seconds": None}
     dep.update("prod", dm2)                   # swap while rid is queued
     dep.drain()
     assert dep.status(rid)["version"] == 2
