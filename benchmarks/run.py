@@ -21,11 +21,18 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   compile_cache cold vs warm restart-to-first-token through the
            persistent compile cache, in forced subprocesses: speedup,
            zero-warm-compiles, token parity (DESIGN.md §14)
+  quantized_base int8 base + fused tile dequant vs fp base: resident
+           bytes per device, greedy-token agreement, drain throughput
+           (DESIGN.md §16)
   roofline dry-run roofline terms per (arch × shape × mesh)
 
 ``--strict`` exits nonzero when any section errors (CI gate — by default
 a crash is swallowed into a ``*/ERROR,0,...`` CSV row and the driver
 exits 0, which hides regressions).  ``--sections a,b`` runs a subset.
+``--json OUT`` additionally writes the rows as machine-readable JSON:
+per-section row list with the ``derived`` k=v fields parsed into typed
+metrics and a per-section/global pass verdict (every ``pass_*`` field
+true and no ERROR rows) — the artifact CI uploads per run.
 """
 from __future__ import annotations
 
@@ -65,6 +72,55 @@ def serving_bench() -> list:
                 f"swaps={reg.stats['swaps']};failed={m['failed']}")]
 
 
+def _parse_derived(derived: str) -> dict:
+    """Type the ``k=v;k=v`` derived field of one CSV row: bools, ints and
+    floats become native JSON values, everything else stays a string."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, _, v = part.partition("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+            continue
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _json_report(by_section: dict) -> dict:
+    """Machine-readable run report: per-section parsed rows + pass
+    verdicts.  A section passes when it emitted no ERROR row and every
+    ``pass_*`` metric it declared is true."""
+    sections = {}
+    for name, rows in by_section.items():
+        parsed = []
+        ok = True
+        for r in rows:
+            rname, _, rest = r.partition(",")
+            us, _, derived = rest.partition(",")
+            metrics = _parse_derived(derived)
+            if "/ERROR," in r:
+                ok = False
+            if any(k.startswith("pass_") and v is False
+                   for k, v in metrics.items()):
+                ok = False
+            try:
+                us_val = float(us)
+            except ValueError:
+                us_val = 0.0
+            parsed.append({"name": rname, "us_per_call": us_val,
+                           "metrics": metrics})
+        sections[name] = {"rows": parsed, "ok": ok}
+    return {"sections": sections,
+            "ok": all(s["ok"] for s in sections.values())}
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -72,13 +128,18 @@ def main() -> None:
                     help="exit 1 if any section emits an ERROR row")
     ap.add_argument("--sections", default=None,
                     help="comma-separated subset of sections to run")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write the rows as a machine-readable JSON "
+                         "report (parsed metrics + per-section pass "
+                         "verdicts) to this path")
     args = ap.parse_args()
 
     from benchmarks import (admission_overlap, axis_stats, compile_cache,
                             continuous_batching, fused_serving, kernel_bench,
-                            load_time, roofline, shard_map_kernels,
-                            sharded_serving, speculative_decoding,
-                            table1_quality, table2_sizes, update_latency)
+                            load_time, quantized_base, roofline,
+                            shard_map_kernels, sharded_serving,
+                            speculative_decoding, table1_quality,
+                            table2_sizes, update_latency)
     sections = [                                      # cheap first
         ("table2", table2_sizes.run),
         ("kernel", kernel_bench.run),
@@ -92,6 +153,7 @@ def main() -> None:
         ("update_latency", update_latency.run),
         ("admission_overlap", admission_overlap.run),
         ("compile_cache", compile_cache.run),
+        ("quantized_base", quantized_base.run),
         ("sharded_serving", sharded_serving.run),
         ("shard_map_kernels", shard_map_kernels.run),
         ("roofline", roofline.run),
@@ -103,10 +165,20 @@ def main() -> None:
             ap.error(f"unknown sections: {sorted(unknown)}")
         sections = [(n, f) for n, f in sections if n in wanted]
     rows = []
+    by_section: dict = {}
     for name, fn in sections:
-        rows += _section(name, fn)
+        by_section[name] = _section(name, fn)
+        rows += by_section[name]
     print("name,us_per_call,derived")
     print("\n".join(rows))
+    if args.json:
+        import json
+        import pathlib
+        report = _json_report(by_section)
+        p = pathlib.Path(args.json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(report, indent=2))
+        print(f"json report -> {p} (ok={report['ok']})", file=sys.stderr)
     errors = [r for r in rows if "/ERROR," in r]
     if args.strict and errors:
         print(f"STRICT: {len(errors)} section error(s)", file=sys.stderr)

@@ -43,11 +43,20 @@ TARGET_KEYS.discard("router")
 # path utilities
 # ---------------------------------------------------------------------------
 
+def _quant_leaf(x) -> bool:
+    """Default is_leaf: a quantized base weight (``core/quantize.py``
+    QuantWeight) is ONE leaf of the params tree, not its (q, scale)
+    sub-leaves — duck-typed on the marker attribute so this module never
+    imports quantize (which imports back here)."""
+    return bool(getattr(x, "__quant_leaf__", False))
+
+
 def flatten_params(params, is_leaf=None) -> dict:
     """{dot-path -> leaf}; THE path scheme every flat view shares
     (delta/extras keys, overlay insertion, axes trees)."""
     flat = {}
-    pairs = jax.tree_util.tree_flatten_with_path(params, is_leaf=is_leaf)[0]
+    pairs = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_leaf or _quant_leaf)[0]
     for path, leaf in pairs:
         key = ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
@@ -56,7 +65,8 @@ def flatten_params(params, is_leaf=None) -> dict:
 
 
 def unflatten_like(template, flat: dict):
-    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_quant_leaf)
     paths = [".".join(str(getattr(p, "key", getattr(p, "idx", p)))
                       for p in path)
              for path, _ in leaves_with_path[0]]

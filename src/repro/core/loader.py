@@ -43,17 +43,23 @@ def _reconstruct_entry(entry, w_base: jax.Array, use_kernel: bool,
     per-tile unpack (each device rebuilds its own Ŵ shard —
     kernels/dispatch.py).  STACKED entries vmap over the lead dims, and
     vmap-of-shard_map is not a supported composition, so they pin the
-    global kernel (GSPMD partitions it exactly as before)."""
+    global kernel (GSPMD partitions it exactly as before).
+
+    ``w_base`` may be a QuantWeight (int8 base): the kernel path
+    dequantizes per tile and the dense Ŵ lands in the SCALE dtype (this
+    is the dense-residency mode — already off the fused hot path)."""
     if use_kernel and not entry.scalar:
         from repro.kernels import dispatch as D
         from repro.kernels import ops as K
 
         def one(packed, vr, vc, ur, wb, waxes=None):
+            odt = (wb.scale.dtype if getattr(wb, "__quant_leaf__", False)
+                   else wb.dtype)
             w_r = K.unpack_apply(packed, vr, wb, mode="row",
                                  out_dtype=jnp.float32, waxes=waxes)
             w_c = K.unpack_apply(packed, vc, wb, mode="col",
                                  out_dtype=jnp.float32, waxes=waxes)
-            return jnp.where(ur, w_r, w_c).astype(wb.dtype)
+            return jnp.where(ur, w_r, w_c).astype(odt)
 
         if w_base.ndim == 2:
             return one(entry.packed, entry.v_row.astype(jnp.float32),
@@ -65,6 +71,9 @@ def _reconstruct_entry(entry, w_base: jax.Array, use_kernel: bool,
         with D.no_dispatch():
             return fn(entry.packed, entry.v_row.astype(jnp.float32),
                       entry.v_col.astype(jnp.float32), entry.use_row, w_base)
+    if getattr(w_base, "__quant_leaf__", False):
+        from repro.core.quantize import dequantize
+        w_base = dequantize(w_base, w_base.scale.dtype)
     return entry.reconstruct(w_base)
 
 

@@ -73,6 +73,49 @@ def _kernel_axes(x_ref, packed_ref, vr_ref, vc_ref, wb_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _kernel_q8(x_ref, packed_ref, v_ref, wq_ref, ws_ref, out_ref):
+    """Int8-base variant of ``_kernel``: the (bn, bk) base tile arrives
+    int8 and is dequantized in VMEM against the per-output-channel fp16
+    scale (a (bn, 1) broadcast) before the delta FMA — one dequant +
+    delta-apply per tile, same single MXU dot."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    signs = _unpack_tile(packed_ref[...], jnp.float32)      # (bn, bk)
+    v = v_ref[...].astype(jnp.float32)
+    wb = (wq_ref[...].astype(jnp.float32)
+          * ws_ref[...].astype(jnp.float32))                # (bn, bk)
+    w_hat = v * signs + wb
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        x, w_hat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _kernel_axes_q8(x_ref, packed_ref, vr_ref, vc_ref, wq_ref, ws_ref,
+                    out_ref):
+    """Int8-base variant of ``_kernel_axes`` (same in-tile dequant)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    signs = _unpack_tile(packed_ref[...], jnp.float32)      # (bn, bk)
+    v = (vr_ref[...].astype(jnp.float32)
+         + vc_ref[...].astype(jnp.float32))
+    wb = (wq_ref[...].astype(jnp.float32)
+          * ws_ref[...].astype(jnp.float32))                # (bn, bk)
+    w_hat = v * signs + wb
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        x, w_hat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def _kernel_axes_banked(x_ref, vidx_ref, packed_ref, vr_ref, vc_ref, wb_ref,
                         out_ref):
     """Banked variant: overlay operands carry a leading bank axis V and each
@@ -106,12 +149,40 @@ def _kernel_axes_banked(x_ref, vidx_ref, packed_ref, vr_ref, vc_ref, wb_ref,
                                preferred_element_type=jnp.float32)
 
 
+def _kernel_axes_banked_q8(x_ref, vidx_ref, packed_ref, vr_ref, vc_ref,
+                           wq_ref, ws_ref, out_ref):
+    """Int8-base variant of ``_kernel_axes_banked``: the shared base tile
+    dequantizes ONCE per tile (not per bank slot) before the per-row
+    broadcast — banked extras and the bank gather are unchanged."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vidx = vidx_ref[...][:, 0]                              # (bm,)
+    packed = jnp.take(packed_ref[...], vidx, axis=0)        # (bm, bn, bk/8)
+    bm, bn, bkp = packed.shape
+    signs = _unpack_tile(packed.reshape(bm * bn, bkp),
+                         jnp.float32).reshape(bm, bn, bkp * PACK)
+    v = (jnp.take(vr_ref[...], vidx, axis=0).astype(jnp.float32)
+         + jnp.take(vc_ref[...], vidx, axis=0).astype(jnp.float32))
+    wb = (wq_ref[...].astype(jnp.float32)
+          * ws_ref[...].astype(jnp.float32))                # (bn, bk)
+    w_hat = v * signs + wb[None]                            # (bm, bn, bk)
+    x = x_ref[...].astype(jnp.float32)                      # (bm, bk)
+    out_ref[...] += jnp.einsum("mnk,mk->mn", w_hat, x,
+                               preferred_element_type=jnp.float32)
+
+
 def bitlinear_axes_banked_p(x: jax.Array, vidx: jax.Array, packed: jax.Array,
                             vr2d: jax.Array, vc2d: jax.Array,
                             w_base: jax.Array, *, block_m: int, block_n: int,
-                            block_k: int, interpret: bool) -> jax.Array:
+                            block_k: int, interpret: bool,
+                            w_scale: jax.Array = None) -> jax.Array:
     """x (M, K) · vidx (M, 1) int32 · packed (V, N, K/8) · vr2d (V, N, 1) ·
-    vc2d (V, 1, K) · w_base (N, K) -> y (M, N) fp32."""
+    vc2d (V, 1, K) · w_base (N, K) -> y (M, N) fp32.  ``w_scale`` (N, 1)
+    fp16 selects the int8-base kernel (w_base is then int8)."""
     m, k_dim = x.shape
     n, _ = w_base.shape
     nbank = packed.shape[0]
@@ -121,28 +192,39 @@ def bitlinear_axes_banked_p(x: jax.Array, vidx: jax.Array, packed: jax.Array,
     assert vr2d.shape == (nbank, n, 1) and vc2d.shape == (nbank, 1, k_dim)
     grid = (m // block_m, n // block_n, k_dim // block_k)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+        pl.BlockSpec((nbank, block_n, block_k // PACK),
+                     lambda i, j, kk: (0, j, kk)),
+        pl.BlockSpec((nbank, block_n, 1), lambda i, j, kk: (0, j, 0)),
+        pl.BlockSpec((nbank, 1, block_k), lambda i, j, kk: (0, 0, kk)),
+        pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+    ]
+    operands = [x, vidx, packed, vr2d, vc2d, w_base]
+    kernel = _kernel_axes_banked
+    if w_scale is not None:
+        assert w_scale.shape == (n, 1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)))
+        operands.append(w_scale)
+        kernel = _kernel_axes_banked_q8
+
     return pl.pallas_call(
-        _kernel_axes_banked,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((nbank, block_n, block_k // PACK),
-                         lambda i, j, kk: (0, j, kk)),
-            pl.BlockSpec((nbank, block_n, 1), lambda i, j, kk: (0, j, 0)),
-            pl.BlockSpec((nbank, 1, block_k), lambda i, j, kk: (0, 0, kk)),
-            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(x, vidx, packed, vr2d, vc2d, w_base)
+    )(*operands)
 
 
 def bitlinear_axes_p(x: jax.Array, packed: jax.Array, vr2d: jax.Array,
                      vc2d: jax.Array, w_base: jax.Array, *, block_m: int,
-                     block_n: int, block_k: int,
-                     interpret: bool) -> jax.Array:
+                     block_n: int, block_k: int, interpret: bool,
+                     w_scale: jax.Array = None) -> jax.Array:
+    """``w_scale`` (N, 1) fp16 selects the int8-base kernel: w_base is
+    then the int8 payload, dequantized per tile in VMEM."""
     m, k_dim = x.shape
     n, _ = w_base.shape
     assert k_dim % PACK == 0 and block_k % PACK == 0
@@ -150,25 +232,35 @@ def bitlinear_axes_p(x: jax.Array, packed: jax.Array, vr2d: jax.Array,
     assert vr2d.shape == (n, 1) and vc2d.shape == (1, k_dim)
     grid = (m // block_m, n // block_n, k_dim // block_k)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_n, block_k // PACK), lambda i, j, kk: (j, kk)),
+        pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)),
+        pl.BlockSpec((1, block_k), lambda i, j, kk: (0, kk)),
+        pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+    ]
+    operands = [x, packed, vr2d, vc2d, w_base]
+    kernel = _kernel_axes
+    if w_scale is not None:
+        assert w_scale.shape == (n, 1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)))
+        operands.append(w_scale)
+        kernel = _kernel_axes_q8
+
     return pl.pallas_call(
-        _kernel_axes,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_n, block_k // PACK), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)),
-            pl.BlockSpec((1, block_k), lambda i, j, kk: (0, kk)),
-            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(x, packed, vr2d, vc2d, w_base)
+    )(*operands)
 
 
 def bitlinear_p(x: jax.Array, packed: jax.Array, v2d: jax.Array,
                 w_base: jax.Array, *, block_m: int, block_n: int,
-                block_k: int, interpret: bool) -> jax.Array:
+                block_k: int, interpret: bool,
+                w_scale: jax.Array = None) -> jax.Array:
     m, k_dim = x.shape
     n, _ = w_base.shape
     assert k_dim % PACK == 0 and block_k % PACK == 0
@@ -181,16 +273,25 @@ def bitlinear_p(x: jax.Array, packed: jax.Array, v2d: jax.Array,
     def v_index(i, j, kk):
         return (j if vn > 1 else 0, kk if vk > 1 else 0)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_n, block_k // PACK), lambda i, j, kk: (j, kk)),
+        pl.BlockSpec(v_block, v_index),
+        pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+    ]
+    operands = [x, packed, v2d, w_base]
+    kernel = _kernel
+    if w_scale is not None:
+        assert w_scale.shape == (n, 1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda i, j, kk: (j, 0)))
+        operands.append(w_scale)
+        kernel = _kernel_q8
+
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_n, block_k // PACK), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec(v_block, v_index),
-            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(x, packed, v2d, w_base)
+    )(*operands)

@@ -258,24 +258,40 @@ def _avals(*arrays) -> tuple:
     return tuple((tuple(a.shape), jnp.dtype(a.dtype).name) for a in arrays)
 
 
+def _unwrap_quant(w):
+    """(payload, scale-or-None) of a base-weight operand — the dispatch
+    twin of ``ops._unwrap_quant`` (duck-typed; ops imports this module,
+    not the reverse).  An int8 base adds one per-output-channel scale
+    operand to the shard_map, sharded like the out dim it scales; the
+    int8 payload aval makes the memo key dtype-distinct on its own."""
+    if getattr(w, "__quant_leaf__", False):
+        return w.q, w.scale
+    return w, None
+
+
 # ---------------------------------------------------------------------------
 # shard_map'd entry points (ops.py routes here; every one may return None)
 # ---------------------------------------------------------------------------
 
 def bitlinear_axes(st, x: jax.Array, packed: jax.Array, v_row: jax.Array,
-                   v_col: jax.Array, w_base: jax.Array,
+                   v_col: jax.Array, w_base,
                    waxes) -> Optional[jax.Array]:
-    """shard_map'd fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ."""
+    """shard_map'd fused y = x @ ((v_row ⊕ v_col) ⊙ unpack(B) + W_b)ᵀ.
+
+    ``w_base`` may be a QuantWeight: the per-output-channel scale rides
+    as one extra operand sharded with the out dim and each shard's
+    Pallas call dequantizes its own int8 tile in VMEM."""
     mesh, rules = st
+    wq, ws = _unwrap_quant(w_base)
     *lead, k = x.shape
-    n = w_base.shape[0]
+    n = wq.shape[0]
     x2 = x.reshape(-1, k)
     plan = plan_matmul(mesh, rules, waxes, x2.shape[0], n, k)
     if plan is None:
         return None
     mp, op, ip = plan.m_part, plan.o_part, plan.i_part
 
-    def shard_fn(x2, pk, vr, vc, wb):
+    def shard_fn(x2, pk, vr, vc, wb, *ws_op):
         # import from the SUBMODULES directly: the kernels package
         # re-exports same-named jitted functions over the module attrs
         from repro.kernels.bitlinear import bitlinear_axes_p
@@ -287,21 +303,27 @@ def bitlinear_axes(st, x: jax.Array, packed: jax.Array, v_row: jax.Array,
             block_m=O._pick_block(lm, O._TILE_M),
             block_n=O._pick_block(ln, O._TILE_N),
             block_k=O._pick_block(lk, O._TILE_K, multiple=PACK),
-            interpret=O._interpret())
+            interpret=O._interpret(),
+            w_scale=ws_op[0].reshape(ln, 1) if ws_op else None)
         if plan.psum_axes:
             y = jax.lax.psum(y, plan.psum_axes)
         return y
 
     vr = v_row.reshape(n)
     vc = v_col.reshape(k)
+    in_specs = (P(mp, ip), P(op, ip), P(op), P(ip), P(op, ip))
+    operands = (x2, packed, vr, vc, wq)
+    if ws is not None:
+        in_specs += (P(op),)
+        operands += (ws.reshape(n),)
     fn = _cached_jit(
-        ("axes", mesh, plan, _avals(x2, packed, vr, vc, w_base)),
+        ("axes", mesh, plan, _avals(*operands)),
         lambda: shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(mp, ip), P(op, ip), P(op), P(ip), P(op, ip)),
+            in_specs=in_specs,
             out_specs=P(mp, op),    # op is None whenever ip carried model
             check_rep=False))
-    y = fn(x2, packed, vr, vc, w_base)
+    y = fn(*operands)
     return y.astype(x.dtype).reshape(*lead, n)
 
 
@@ -314,8 +336,9 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
     OWN weight tile's bank — admission stays collective-free and so does
     the per-row gather."""
     mesh, rules = st
+    wq, ws = _unwrap_quant(w_base)
     *lead, k = x.shape
-    n = w_base.shape[0]
+    n = wq.shape[0]
     nb = packed.shape[0]
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
@@ -326,7 +349,7 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
     import repro.kernels.ops as _O
     vidx2 = _O.flatten_vidx(variant_idx, tuple(lead)).reshape(m, 1)
 
-    def shard_fn(x2, vi, pk, vr, vc, wb):
+    def shard_fn(x2, vi, pk, vr, vc, wb, *ws_op):
         from repro.kernels.bitlinear import bitlinear_axes_banked_p
         import repro.kernels.ops as O
         lm, lk = x2.shape
@@ -336,7 +359,8 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
             block_m=O._pick_block(lm, O._TILE_BANKED_M),
             block_n=O._pick_block(ln, O._TILE_BANKED_N),
             block_k=O._pick_block(lk, O._TILE_BANKED_K, multiple=PACK),
-            interpret=O._interpret())
+            interpret=O._interpret(),
+            w_scale=ws_op[0].reshape(ln, 1) if ws_op else None)
         if plan.psum_axes:
             y = jax.lax.psum(y, plan.psum_axes)
         return y
@@ -344,19 +368,24 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
     pk = packed.reshape(nb, n, k // PACK)
     vr = v_row.reshape(nb, n)
     vc = v_col.reshape(nb, k)
+    in_specs = (P(mp, ip), P(mp, None), P(None, op, ip), P(None, op),
+                P(None, ip), P(op, ip))
+    operands = (x2, vidx2, pk, vr, vc, wq)
+    if ws is not None:
+        in_specs += (P(op),)
+        operands += (ws.reshape(n),)
     fn = _cached_jit(
-        ("banked", mesh, plan, _avals(x2, vidx2, pk, vr, vc, w_base)),
+        ("banked", mesh, plan, _avals(*operands)),
         lambda: shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(mp, ip), P(mp, None), P(None, op, ip), P(None, op),
-                      P(None, ip), P(op, ip)),
+            in_specs=in_specs,
             out_specs=P(mp, op),
             check_rep=False))
-    y = fn(x2, vidx2, pk, vr, vc, w_base)
+    y = fn(*operands)
     return y.astype(x.dtype).reshape(*lead, n)
 
 
-def bitlinear_axes_stacked(st, xe: jax.Array, entry, w: jax.Array,
+def bitlinear_axes_stacked(st, xe: jax.Array, entry, w,
                            waxes) -> Optional[jax.Array]:
     """shard_map'd per-expert fused GEMMs: xe (E, M, D) · entry leaves
     (E, F, D/8)/(E, F)/(E, D) · w (E, F, D) -> (E, M, F).
@@ -366,13 +395,15 @@ def bitlinear_axes_stacked(st, xe: jax.Array, entry, w: jax.Array,
     shard_map(vmap(kernel)), the composition that works, instead of
     vmap(shard_map(kernel)), which does not.  Falls back through the same
     plan contract when experts don't divide (then ffn/embed may carry the
-    axis and the contraction psums)."""
+    axis and the contraction psums).  ``w`` may be a QuantWeight with an
+    (E, F) scale riding the expert/ffn axes."""
     mesh, rules = st
+    wq, ws = _unwrap_quant(w)
     if waxes is None or len(waxes) != 3:
         return None
     from repro.distributed.sharding import resolve_spec
     e, m, d = xe.shape
-    f = w.shape[1]
+    f = wq.shape[1]
     ep, fp, dp = resolve_spec((e, f, d), tuple(waxes), rules, mesh)
     if dp is not None and (d // _size(mesh, dp)) % PACK:
         return None
@@ -380,7 +411,7 @@ def bitlinear_axes_stacked(st, xe: jax.Array, entry, w: jax.Array,
         return None
     psum_axes = _names(dp)
 
-    def shard_fn(xl, pk, vr, vc, wb):
+    def shard_fn(xl, pk, vr, vc, wb, *ws_op):
         from repro.kernels.bitlinear import bitlinear_axes_p
         import repro.kernels.ops as O
         _, lm, ld = xl.shape
@@ -389,36 +420,43 @@ def bitlinear_axes_stacked(st, xe: jax.Array, entry, w: jax.Array,
         bn = O._pick_block(lf, O._TILE_N)
         bk = O._pick_block(ld, O._TILE_K, multiple=PACK)
 
-        def one(x2, p2, r2, c2, w2):
+        def one(x2, p2, r2, c2, w2, *s2):
             return bitlinear_axes_p(
                 x2, p2, r2.reshape(lf, 1), c2.reshape(1, ld), w2,
                 block_m=bm, block_n=bn, block_k=bk,
-                interpret=O._interpret())
+                interpret=O._interpret(),
+                w_scale=s2[0].reshape(lf, 1) if s2 else None)
 
-        y = jax.vmap(one)(xl, pk, vr, vc, wb)
+        y = jax.vmap(one)(xl, pk, vr, vc, wb, *ws_op)
         if psum_axes:
             y = jax.lax.psum(y, psum_axes)
         return y
 
+    in_specs = (P(ep, None, dp), P(ep, fp, dp), P(ep, fp), P(ep, dp),
+                P(ep, fp, dp))
+    operands = (xe, entry.packed, entry.v_row, entry.v_col, wq)
+    if ws is not None:
+        in_specs += (P(ep, fp),)
+        operands += (ws,)
     fn = _cached_jit(
-        ("stacked", mesh, (ep, fp, dp),
-         _avals(xe, entry.packed, entry.v_row, entry.v_col, w)),
+        ("stacked", mesh, (ep, fp, dp), _avals(*operands)),
         lambda: shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(ep, None, dp), P(ep, fp, dp), P(ep, fp), P(ep, dp),
-                      P(ep, fp, dp)),
+            in_specs=in_specs,
             out_specs=P(ep, None, fp),
             check_rep=False))
-    y = fn(xe, entry.packed, entry.v_row, entry.v_col, w)
+    y = fn(*operands)
     return y.astype(xe.dtype)
 
 
-def unpack_apply(st, packed: jax.Array, v: jax.Array, w_base: jax.Array,
+def unpack_apply(st, packed: jax.Array, v: jax.Array, w_base,
                  mode: str, out_dtype, waxes) -> Optional[jax.Array]:
     """shard_map'd Ŵ = v ⊙ unpack(B) + W_b: pure per-tile reconstruction,
-    no contraction — every shard rebuilds exactly its own weight tile."""
+    no contraction — every shard rebuilds exactly its own weight tile.
+    ``w_base`` may be a QuantWeight (int8 base, per-tile dequant)."""
     mesh, rules = st
-    n, k = w_base.shape
+    wq, ws = _unwrap_quant(w_base)
+    n, k = wq.shape
     plan = plan_matmul(mesh, rules, waxes, None, n, k)
     if plan is None:
         return None
@@ -426,7 +464,7 @@ def unpack_apply(st, packed: jax.Array, v: jax.Array, w_base: jax.Array,
     v_spec = {"row": P(op, None), "col": P(None, ip),
               "scalar": P(None, None)}[mode]
 
-    def shard_fn(pk, v2, wb):
+    def shard_fn(pk, v2, wb, *ws_op):
         import repro.kernels.ops as O
         from repro.kernels.unpack_apply import unpack_apply_p
         ln, lk = wb.shape
@@ -434,16 +472,22 @@ def unpack_apply(st, packed: jax.Array, v: jax.Array, w_base: jax.Array,
             pk, v2, wb,
             block_m=O._pick_block(ln, O._TILE_M),
             block_n=O._pick_block(lk, O._TILE_N, multiple=PACK),
-            out_dtype=out_dtype, interpret=O._interpret())
+            out_dtype=out_dtype, interpret=O._interpret(),
+            w_scale=ws_op[0].reshape(ln, 1) if ws_op else None)
 
     from repro.kernels.ops import _v2d
     v2 = _v2d(v, mode, n, k)
+    in_specs = (P(op, ip), v_spec, P(op, ip))
+    operands = (packed, v2, wq)
+    if ws is not None:
+        in_specs += (P(op),)
+        operands += (ws.reshape(n),)
     fn = _cached_jit(
         ("unpack", mesh, plan, mode, jnp.dtype(out_dtype).name,
-         _avals(packed, v2, w_base)),
+         _avals(*operands)),
         lambda: shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(P(op, ip), v_spec, P(op, ip)),
+            in_specs=in_specs,
             out_specs=P(op, ip),
             check_rep=False))
-    return fn(packed, v2, w_base)
+    return fn(*operands)

@@ -44,6 +44,19 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _unwrap_quant(w):
+    """Split a base-weight operand into (payload, scale-or-None).
+
+    An int8-quantized base arrives as a ``core/quantize.QuantWeight``
+    pytree (duck-typed on the ``__quant_leaf__`` marker — works on
+    tracers); a full-precision base passes through with no scale.  Every
+    kernel wrapper routes its weight operand here, so both base dtypes
+    share one code path end to end."""
+    if getattr(w, "__quant_leaf__", False):
+        return w.q, w.scale
+    return w, None
+
+
 def _pick_block(dim: int, target: int, multiple: int = 1) -> int:
     """Largest divisor of ``dim`` that is <= target and a multiple of
     ``multiple``.
@@ -100,26 +113,31 @@ def _v2d(v: jax.Array, mode: str, d_out: int, d_in: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "out_dtype"))
-def _unpack_apply_global(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+def _unpack_apply_global(packed: jax.Array, v: jax.Array, w_base,
                          mode: str, out_dtype) -> jax.Array:
-    d_out, d_in = w_base.shape
+    wq, ws = _unwrap_quant(w_base)
+    d_out, d_in = wq.shape
     bm = _pick_block(d_out, _TILE_M)
     bn = _pick_block(d_in, _TILE_N, multiple=PACK)
     return _ua.unpack_apply_p(
-        packed, _v2d(v, mode, d_out, d_in), w_base,
+        packed, _v2d(v, mode, d_out, d_in), wq,
         block_m=bm, block_n=bn, out_dtype=out_dtype,
-        interpret=_interpret())
+        interpret=_interpret(),
+        w_scale=None if ws is None else ws.reshape(d_out, 1))
 
 
-def unpack_apply(packed: jax.Array, v: jax.Array, w_base: jax.Array,
+def unpack_apply(packed: jax.Array, v: jax.Array, w_base,
                  mode: str = "row", out_dtype=None,
                  waxes=None) -> jax.Array:
     """Production Ŵ = v ⊙ unpack(B) + W_b (loader hot path).
 
+    ``w_base`` may be a QuantWeight (int8 base): the kernel then
+    dequantizes per tile and the default out dtype follows the scale.
     ``waxes`` (the weight's logical axes) + an active mesh context lower
     this as a shard_map'd per-tile reconstruction — each device rebuilds
     only its own Ŵ shard; otherwise the global jit path runs."""
-    out_dtype = out_dtype or w_base.dtype
+    _, ws = _unwrap_quant(w_base)
+    out_dtype = out_dtype or (ws.dtype if ws is not None else w_base.dtype)
     st = _dp.state()
     if st is not None and waxes is not None:
         y = _dp.unpack_apply(st, packed, v, w_base, mode, out_dtype, waxes)
@@ -155,17 +173,19 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
 
 @jax.jit
 def _bitlinear_axes_global(x: jax.Array, packed: jax.Array, v_row: jax.Array,
-                           v_col: jax.Array, w_base: jax.Array) -> jax.Array:
+                           v_col: jax.Array, w_base) -> jax.Array:
+    wq, ws = _unwrap_quant(w_base)
     *lead, k_dim = x.shape
-    n, _ = w_base.shape
+    n, _ = wq.shape
     x2 = x.reshape(-1, k_dim)
     m = x2.shape[0]
     bm = _pick_block(m, _TILE_M)
     bn = _pick_block(n, _TILE_N)
     bk = _pick_block(k_dim, _TILE_K, multiple=PACK)
     y = _bl.bitlinear_axes_p(
-        x2, packed, v_row.reshape(n, 1), v_col.reshape(1, k_dim), w_base,
-        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+        x2, packed, v_row.reshape(n, 1), v_col.reshape(1, k_dim), wq,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret(),
+        w_scale=None if ws is None else ws.reshape(n, 1))
     return y.astype(x.dtype).reshape(*lead, n)
 
 
@@ -195,10 +215,10 @@ def bitlinear_axes(x: jax.Array, packed: jax.Array, v_row: jax.Array,
 @jax.jit
 def _bitlinear_axes_banked_global(x: jax.Array, variant_idx: jax.Array,
                                   packed: jax.Array, v_row: jax.Array,
-                                  v_col: jax.Array,
-                                  w_base: jax.Array) -> jax.Array:
+                                  v_col: jax.Array, w_base) -> jax.Array:
+    wq, ws = _unwrap_quant(w_base)
     *lead, k_dim = x.shape
-    n, _ = w_base.shape
+    n, _ = wq.shape
     nbank = packed.shape[0]
     x2 = x.reshape(-1, k_dim)
     m = x2.shape[0]
@@ -208,8 +228,9 @@ def _bitlinear_axes_banked_global(x: jax.Array, variant_idx: jax.Array,
     bk = _pick_block(k_dim, _TILE_BANKED_K, multiple=PACK)
     y = _bl.bitlinear_axes_banked_p(
         x2, vidx.astype(jnp.int32).reshape(m, 1), packed,
-        v_row.reshape(nbank, n, 1), v_col.reshape(nbank, 1, k_dim), w_base,
-        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+        v_row.reshape(nbank, n, 1), v_col.reshape(nbank, 1, k_dim), wq,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret(),
+        w_scale=None if ws is None else ws.reshape(n, 1))
     return y.astype(x.dtype).reshape(*lead, n)
 
 
@@ -244,19 +265,22 @@ def bitlinear_axes_banked(x: jax.Array, variant_idx: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("mode",))
 def bitlinear(x: jax.Array, packed: jax.Array, v: jax.Array,
-              w_base: jax.Array, mode: str = "row") -> jax.Array:
+              w_base, mode: str = "row") -> jax.Array:
     """Fused y = x @ (v ⊙ unpack(B) + W_b)ᵀ, fp32 accumulate, cast to x.dtype.
 
-    x may have leading batch dims; they are flattened into M.
+    x may have leading batch dims; they are flattened into M.  ``w_base``
+    may be a QuantWeight (int8 base, dequantized per tile).
     """
+    wq, ws = _unwrap_quant(w_base)
     *lead, k_dim = x.shape
-    n, _ = w_base.shape
+    n, _ = wq.shape
     x2 = x.reshape(-1, k_dim)
     m = x2.shape[0]
     bm = _pick_block(m, _TILE_M)
     bn = _pick_block(n, _TILE_N)
     bk = _pick_block(k_dim, _TILE_K, multiple=PACK)
     y = _bl.bitlinear_p(
-        x2, packed, _v2d(v, mode, n, k_dim), w_base,
-        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+        x2, packed, _v2d(v, mode, n, k_dim), wq,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret(),
+        w_scale=None if ws is None else ws.reshape(n, 1))
     return y.astype(x.dtype).reshape(*lead, n)

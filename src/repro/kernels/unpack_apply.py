@@ -41,9 +41,21 @@ def _kernel(packed_ref, v_ref, wb_ref, out_ref):
     out_ref[...] = (v * signs + wb).astype(out_ref.dtype)
 
 
+def _kernel_q8(packed_ref, v_ref, wq_ref, ws_ref, out_ref):
+    """Int8-base variant: dequantize the base tile in VMEM (per-output-
+    channel fp16 scale, a (bm, 1) broadcast) before the same FMA — the
+    dense fp base is never read from nor written to HBM."""
+    signs = _unpack_tile(packed_ref[...], jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    wb = wq_ref[...].astype(jnp.float32) * ws_ref[...].astype(jnp.float32)
+    out_ref[...] = (v * signs + wb).astype(out_ref.dtype)
+
+
 def unpack_apply_p(packed: jax.Array, v2d: jax.Array, w_base: jax.Array,
                    *, block_m: int, block_n: int, out_dtype,
-                   interpret: bool) -> jax.Array:
+                   interpret: bool, w_scale: jax.Array = None) -> jax.Array:
+    """``w_scale`` (d_out, 1) fp16 selects the int8-base kernel: w_base is
+    then the int8 payload and the tile loop dequantizes in VMEM."""
     d_out, d_in = w_base.shape
     assert d_in % PACK == 0 and block_n % PACK == 0
     assert d_out % block_m == 0 and d_in % block_n == 0
@@ -55,15 +67,24 @@ def unpack_apply_p(packed: jax.Array, v2d: jax.Array, w_base: jax.Array,
     def v_index(i, j):
         return (i if vm > 1 else 0, j if vn > 1 else 0)
 
+    in_specs = [
+        pl.BlockSpec((block_m, block_n // PACK), lambda i, j: (i, j)),
+        pl.BlockSpec(v_block, v_index),
+        pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+    ]
+    operands = [packed, v2d, w_base]
+    kernel = _kernel
+    if w_scale is not None:
+        assert w_scale.shape == (d_out, 1)
+        in_specs.append(pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)))
+        operands.append(w_scale)
+        kernel = _kernel_q8
+
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_n // PACK), lambda i, j: (i, j)),
-            pl.BlockSpec(v_block, v_index),
-            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d_out, d_in), out_dtype),
         interpret=interpret,
-    )(packed, v2d, w_base)
+    )(*operands)

@@ -131,6 +131,23 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                       rules, mesh)
             token_struct = batch_struct["tokens"]
             token_sh = batch_sh["tokens"]
+
+            def quantize_cell(serve_struct, flat, delta_paths, param_sh):
+                # --opt quantized_base: int8 base under the fused delta
+                # GEMMs (DESIGN.md §16) — target leaves become abstract
+                # QuantWeight twins (int8 payload + fp16 scales) and their
+                # shardings get the same spec surgery the registry applies
+                from repro.core.calibration import (flatten_params,
+                                                    unflatten_like)
+                from repro.core.quantize import (quant_sharding,
+                                                 quantize_struct)
+                qflat = quantize_struct(flat, delta_paths)
+                serve_struct = unflatten_like(serve_struct, qflat)
+                psh_flat = flatten_params(param_sh)
+                for p in delta_paths:
+                    psh_flat[p] = quant_sharding(psh_flat[p], flat[p].ndim)
+                return serve_struct, unflatten_like(param_sh, psh_flat)
+
             if shape.fused:
                 # single-variant on-the-fly serving cell: decode against
                 # ONE packed overlay on its derived shardings — inside
@@ -147,6 +164,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 ov_struct = DO.overlay_struct(flat, delta_paths)
                 ov_axes = DO.overlay_pspecs(params_axes, delta_paths)
                 ov_sh = tree_shardings(ov_struct, ov_axes, rules, mesh)
+                if "quantized_base" in opt_flags:
+                    serve_struct, param_sh = quantize_cell(
+                        serve_struct, flat, delta_paths, param_sh)
                 step_fn = make_fused_decode_step(model)
                 args = (serve_struct, ov_struct, token_struct, cache_struct)
                 shardings = (param_sh, ov_sh, token_sh, cache_sh)
@@ -173,6 +193,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                          mesh)
                 vidx_struct = jax.ShapeDtypeStruct(
                     (shape.global_batch,), jnp.int32)
+                if "quantized_base" in opt_flags:
+                    serve_struct, param_sh = quantize_cell(
+                        serve_struct, flat, delta_paths, param_sh)
                 step_fn = make_banked_decode_step(model)
                 args = (serve_struct, bank_struct, vidx_struct,
                         token_struct, cache_struct)

@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--mode", choices=("dense", "fused"), default="dense")
+    ap.add_argument("--base-dtype", choices=("fp", "int8"), default="fp",
+                    help="resident base-weight dtype: int8 quantizes every "
+                         "shadowed target (symmetric per-channel, "
+                         "core/quantize.py) and the fused GEMMs dequantize "
+                         "per tile — ~0.5x resident base HBM (DESIGN.md "
+                         "§16)")
     ap.add_argument("--scheduler", choices=("group", "continuous"),
                     default="group")
     ap.add_argument("--max-resident", type=int, default=0,
@@ -141,7 +147,13 @@ def main():
                      async_admission=args.async_admission,
                      speculative=args.speculative, draft_k=args.draft_k,
                      warmup=args.warmup,
-                     compile_cache_dir=args.compile_cache)
+                     compile_cache_dir=args.compile_cache,
+                     base_dtype=args.base_dtype)
+    if args.base_dtype == "int8":
+        qs = dep.registry.quant_stats
+        print(f"int8 base: {qs['targets']} targets, "
+              f"{qs['fp_bytes']} -> {qs['int8_bytes']} bytes "
+              f"(ratio {qs['ratio']:.3f})")
     tunes = {}
     for i in range(args.variants):
         tunes[f"v{i}"] = fine_tune(100 + i)
@@ -187,9 +199,13 @@ def main():
         print("compile-cache:", st["compile_cache"])
     if dep.admission is not None:
         print("admission:", dep.admission.stats)
-    if mesh is not None and dep.registry.bank is not None:
-        print("bank per-device bytes:",
-              dep.registry.bank.per_device_nbytes())
+    print("hbm:", {k: st["hbm"][k] for k in ("base_dtype", "base_bytes",
+                                             "bank_bytes")})
+    if mesh is not None:
+        print("base per-device bytes:", st["hbm"]["base_per_device"])
+        if dep.registry.bank is not None:
+            print("bank per-device bytes:",
+                  st["hbm"]["bank_per_device"])
     dep.close()
 
 

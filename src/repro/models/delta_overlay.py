@@ -202,8 +202,15 @@ def entry_shardings_from_weight(weight_sharding, w_ndim: int):
     resolved weight sharding instead of logical axes — ``loader.
     device_put_overlay`` (variant transfer) and ``loader.apply_update``
     (incremental patches) both route here.  Returns None when the sharding
-    carries no inspectable spec (single-device placements)."""
+    carries no inspectable spec (single-device placements).
+
+    A QUANTIZED base leaf arrives as a QuantWeight-of-shardings (the
+    registry upgrades target shardings via ``quantize.quant_sharding``);
+    the overlay shadows the weight's placement, which the int8 payload
+    carries verbatim."""
     try:
+        if getattr(weight_sharding, "__quant_leaf__", False):
+            weight_sharding = weight_sharding.q
         from jax.sharding import NamedSharding, PartitionSpec
         spec = list(weight_sharding.spec) + [None] * w_ndim
         spec = spec[:w_ndim]

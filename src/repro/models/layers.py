@@ -32,8 +32,17 @@ def linear(x: jax.Array, w: jax.Array, ov=None, vidx=None,
     thread down: inside an active mesh the fused delta GEMM then lowers
     as a shard_map'd per-shard Pallas kernel on the weight's own tiling
     (kernels/dispatch.py, DESIGN.md §12) instead of leaning on GSPMD to
-    partition the opaque kernel call."""
+    partition the opaque kernel call.
+
+    ``w`` may be a ``core/quantize.QuantWeight`` (int8 base + fp16
+    per-output-channel scale).  The no-overlay path factors EXACTLY —
+    x @ Ŵᵀ = (x @ qᵀ) ⊙ scale, per-channel scales commute out of the
+    contraction — so the dense fp base is never materialised; overlay
+    paths hand the QuantWeight to the kernels, which dequantize per
+    tile (DESIGN.md §16)."""
     if ov is None:
+        if getattr(w, "__quant_leaf__", False):
+            return (x @ w.q.T.astype(x.dtype)) * w.scale.astype(x.dtype)
         return x @ w.T.astype(x.dtype)
     from repro.kernels import ops as K
     if vidx is None:

@@ -75,6 +75,11 @@ def _expert_mm(xe: jax.Array, w: jax.Array, ent,
     dispatcher declines (None) when the stack can't partition and the
     global vmap path below runs under GSPMD exactly as before."""
     if ent is None:
+        if getattr(w, "__quant_leaf__", False):
+            # int8 base: per-output-channel scales factor out of the
+            # contraction exactly (the scaled dim survives to the output)
+            return (jnp.einsum("emd,efd->emf", xe, w.q.astype(xe.dtype))
+                    * w.scale.astype(xe.dtype)[:, None, :])
         return jnp.einsum("emd,efd->emf", xe, w.astype(xe.dtype))
     from repro.kernels import dispatch as D
     st = D.state()
@@ -177,12 +182,17 @@ def moe_apply(p: dict, x: jax.Array, cfg, ov=None, vidx=None
                         waxes=("experts", "embed", "ffn"))
         yd = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
     else:
-        wg = p["w_gate"].astype(x.dtype)
-        wu = p["w_up"].astype(x.dtype)
-        wd = p["w_down"].astype(x.dtype)
-        h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xd, wg)) * \
-            jnp.einsum("gecd,efd->gecf", xd, wu)
-        yd = jnp.einsum("gecf,edf->gecd", h, wd)
+        def emm(eq, xop, w):
+            # possibly-quantized expert stack: scale (E, F_out) broadcasts
+            # onto the (G, E, C, F_out) output — exact factoring, no dense
+            # dequant (DESIGN.md §16)
+            if getattr(w, "__quant_leaf__", False):
+                return (jnp.einsum(eq, xop, w.q.astype(x.dtype))
+                        * w.scale.astype(x.dtype)[None, :, None, :])
+            return jnp.einsum(eq, xop, w.astype(x.dtype))
+        h = jax.nn.silu(emm("gecd,efd->gecf", xd, p["w_gate"])) * \
+            emm("gecd,efd->gecf", xd, p["w_up"])
+        yd = emm("gecf,edf->gecd", h, p["w_down"])
     yd = yd * c_val[..., None].astype(x.dtype)                  # combine weight
     # mask out capacity slots that hold zero-score (unrouted) tokens
     yd = jnp.where((c_val > 0)[..., None], yd, 0)

@@ -69,9 +69,11 @@ class Deployment:
                  async_admission: bool = False,
                  speculative: bool = False, draft_k: int = 4,
                  eager: bool = False, warmup: bool = False,
-                 compile_cache_dir=None):
+                 compile_cache_dir=None, base_dtype: str = "fp"):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
+        if base_dtype not in ("fp", "int8"):
+            raise ValueError(f"unknown base dtype {base_dtype!r}")
         if speculative:
             if scheduler not in ("continuous", "speculative"):
                 raise ValueError(
@@ -100,11 +102,17 @@ class Deployment:
             # (dense copy, fused overlay, bank slot) inherits from it
             base_params = jax.device_put(base_params, param_shardings)
         self.model = model
+        # base_dtype="int8": the registry quantizes every shadowed target
+        # weight (core/quantize.py) AFTER fingerprinting the fp base —
+        # artifacts stay calibrated/verified against full precision, while
+        # the resident base (and its shardings) go int8+scale.  The store
+        # keeps the FP param_shardings: patch-chain walks materialise fp
+        # deltas, not quantized bases.
         self.registry = VariantRegistry(
             base_params, param_shardings=param_shardings,
             max_resident=max_resident, use_kernel=use_kernel,
             mode=mode, bank_size=bank_size, mesh=mesh,
-            param_axes=param_axes)
+            param_axes=param_axes, base_dtype=base_dtype)
         if store is None and root_dir is not None:
             store = S.VariantStore(root_dir, base_fp=self.registry.base_fp)
         if store is not None and store.base_fp is None:

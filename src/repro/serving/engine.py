@@ -449,6 +449,8 @@ class ServingEngine:
         from repro.kernels import dispatch as _dp
         cc = self.compile_cache
         n_ttft = self.metrics["ttft_count"]
+        reg = self.registry
+        bank = reg.bank
         snap = {
             "scheduler": self.scheduler,
             "pending": self.pending(),
@@ -461,6 +463,17 @@ class ServingEngine:
                           self.metrics["step_compile_seconds"]},
             "compile_cache": None if cc is None else dict(cc.stats),
             "dispatch_memo": _dp.memo_info(),
+            # resident HBM accounting: the base weights (int8 halves this,
+            # DESIGN.md §16) NEXT TO the overlay bank — the two terms of
+            # the per-device serving footprint
+            "hbm": {
+                "base_dtype": getattr(reg, "base_dtype", "fp"),
+                "base_bytes": reg.base_nbytes(),
+                "base_per_device": reg.base_per_device_nbytes(),
+                "bank_bytes": bank.nbytes() if bank is not None else 0,
+                "bank_per_device": (bank.per_device_nbytes()
+                                    if bank is not None else {}),
+            },
             # TTFT aggregates (submit -> first emitted token), fed by
             # Request.first_token_at — benchmarks read latency from here
             # instead of poking request internals

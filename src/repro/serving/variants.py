@@ -373,9 +373,27 @@ class VariantRegistry:
     def __init__(self, base_params, *, param_shardings=None,
                  max_resident: int = 2, use_kernel: bool = True,
                  mode: str = "dense", bank_size: int = 8,
-                 mesh=None, param_axes=None):
+                 mesh=None, param_axes=None, base_dtype: str = "fp"):
         if mode not in ("dense", "fused"):
             raise ValueError(f"unknown residency mode {mode!r}")
+        if base_dtype not in ("fp", "int8"):
+            raise ValueError(f"unknown base dtype {base_dtype!r}")
+        # fingerprint and dense-copy accounting come from the FP base —
+        # artifacts are calibrated against (and verified by) the full-
+        # precision weights, and a dense resident reconstructs to fp
+        self._base_fp = S.base_fingerprint(base_params)
+        self._dense_nbytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(base_params))
+        self.base_dtype = base_dtype
+        self.quant_stats = None
+        if base_dtype == "int8":
+            from repro.core import quantize as Q
+            base_params, qsh, self.quant_stats = Q.quantize_base(
+                base_params, param_shardings)
+            if qsh is not None:
+                base_params = jax.device_put(base_params, qsh)
+                param_shardings = qsh
         self.base_params = base_params
         self.param_shardings = param_shardings
         self.mesh = mesh
@@ -406,14 +424,36 @@ class VariantRegistry:
         self.stats = {"swaps": 0, "hits": 0, "swap_seconds": 0.0,
                       "transferred_bytes": 0, "load_failures": 0,
                       "resident_bytes": 0, "evictions": 0}
-        self._base_fp = S.base_fingerprint(base_params)
-        self._dense_nbytes = sum(
-            leaf.size * leaf.dtype.itemsize
-            for leaf in jax.tree.leaves(base_params))
 
     @property
     def base_fp(self) -> str:
         return self._base_fp
+
+    # -- base residency accounting -----------------------------------------
+    def base_nbytes(self) -> int:
+        """Total resident base-weight bytes (int8 payloads + scales when
+        quantized — QuantWeight leaves flatten to both)."""
+        return sum(int(leaf.size) * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.base_params))
+
+    def base_per_device_nbytes(self) -> dict:
+        """{device -> resident base-weight bytes} from the actual shard
+        layout — the companion to ``OverlayBank.per_device_nbytes`` so
+        status() reports base HBM next to bank HBM (DESIGN.md §16).
+        Host (numpy) leaves are charged to the default device."""
+        out: dict = {}
+        for leaf in jax.tree.leaves(self.base_params):
+            shards = getattr(leaf, "addressable_shards", None)
+            if shards:
+                for shard in shards:
+                    key = str(shard.device)
+                    out[key] = out.get(key, 0) + (
+                        shard.data.size * shard.data.dtype.itemsize)
+            else:
+                key = str(jax.devices()[0])
+                out[key] = out.get(key, 0) + (
+                    int(leaf.size) * leaf.dtype.itemsize)
+        return out
 
     # -- names and versions ------------------------------------------------
     def _parse(self, nameish: str) -> tuple:

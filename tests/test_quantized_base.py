@@ -1,0 +1,434 @@
+"""Quantized int8 base under 1-bit deltas (DESIGN.md §16).
+
+Four layers of coverage:
+
+* quantize/dequantize round-trip bounds + pytree/flattener contracts
+  (QuantWeight is ONE leaf to the params flatteners, duck-types the
+  array it replaces);
+* kernel parity sweeps: plain / fused (dual-axis) / banked GEMMs and the
+  unpack_apply reconstruction, each on a QuantWeight base vs the ref
+  oracle's dense-dequant twin, plus the ``no_dispatch`` fallback;
+* 4-device row-/col-sharded kernel parity (sharded-smoke CI job; skips
+  on tier-1's single device);
+* serving integration: model-forward parity across all five families,
+  bank admit/evict with an int8 base, and the publish → update →
+  rollback lifecycle at ``base_dtype="int8"``.
+
+Parity contract: executing against the QuantWeight (in-tile dequant)
+must match executing against the densely dequantized base — the int8
+representation is the ONLY approximation, the kernels add none.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.core import quantize as Q
+from repro.distributed import sharding as S
+from repro.kernels import dispatch as D
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.models import build_model
+from repro.models.param import split
+from repro.serving import Deployment, ServingEngine, VariantRegistry
+
+RULES = S.rules_for("decode")
+
+
+def _mesh22() -> Mesh:
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices (sharded-smoke CI job)")
+    return Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2),
+                ("data", "model"))
+
+
+def _rand_w(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.1)
+
+
+def _rand_entry(rng, n, k, nb=None):
+    shp = (n, k // 8) if nb is None else (nb, n, k // 8)
+    packed = jnp.asarray(rng.integers(0, 256, size=shp, dtype=np.uint8))
+    vr = 0.01 * jnp.abs(jnp.asarray(rng.normal(
+        size=(n,) if nb is None else (nb, n)).astype(np.float32)))
+    vc = jnp.zeros((k,) if nb is None else (nb, k), jnp.float32)
+    return packed, vr, vc
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize round trip + pytree contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(16, 24), (4, 16, 24), (2, 3, 8, 16)])
+def test_roundtrip_bounds(shape):
+    """|deq - w| <= ~0.5 quantization steps per channel (a little slack
+    for the fp16 scale rounding)."""
+    w = _rand_w(np.random.default_rng(0), *shape)
+    qw = Q.quantize_weight(w)
+    assert qw.q.dtype == jnp.int8 and qw.q.shape == w.shape
+    assert qw.scale.dtype == jnp.float16 and qw.scale.shape == w.shape[:-1]
+    deq = Q.dequantize(qw)
+    bound = 0.6 * np.asarray(qw.scale, np.float32)[..., None] + 1e-6
+    assert (np.abs(np.asarray(deq) - np.asarray(w)) <= bound).all()
+
+
+def test_quantweight_is_one_flat_leaf():
+    """The params flatteners must treat a QuantWeight as ONE leaf (the
+    weight it replaces), while jax.tree still sees its two arrays."""
+    w = _rand_w(np.random.default_rng(1), 16, 24)
+    tree = {"layers": {"0": {"wq": Q.quantize_weight(w), "norm":
+                             jnp.ones((16,))}}}
+    flat = C.flatten_params(tree)
+    assert set(flat) == {"layers.0.wq", "layers.0.norm"}
+    qw = flat["layers.0.wq"]
+    assert Q.is_quant(qw)
+    assert qw.shape == (16, 24) and qw.ndim == 2    # duck-typed
+    assert C.is_target("layers.0.wq", qw)
+    assert len(jax.tree.leaves(tree)) == 3          # q, scale, norm
+    rebuilt = C.unflatten_like(tree, flat)
+    assert Q.is_quant(rebuilt["layers"]["0"]["wq"])
+
+
+def test_quantize_base_targets_only():
+    """quantize_base quantizes exactly the shadowed targets and books the
+    byte ratio; non-targets (norms, embeddings) stay untouched."""
+    cfg = dataclasses.replace(get_config("deepseek-7b").reduced(),
+                              num_layers=2, compute_dtype="float32",
+                              remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    qparams, qsh, stats = Q.quantize_base(base)
+    assert qsh is None
+    flat = C.flatten_params(base)
+    qflat = C.flatten_params(qparams)
+    targets = {p for p, l in flat.items() if C.is_target(p, l)}
+    assert stats["targets"] == len(targets) > 0
+    for p in qflat:
+        assert Q.is_quant(qflat[p]) == (p in targets), p
+    # int8 payload + fp16 scales of an fp32 base: just over 0.25x
+    assert stats["ratio"] < 0.3
+
+
+def test_linear_plain_factoring():
+    """No-overlay path: (x @ q.T) * scale == x @ deq.T exactly (up to
+    float reassociation) — no dense dequant materialised."""
+    from repro.models.layers import linear
+    rng = np.random.default_rng(2)
+    w = _rand_w(rng, 32, 24)
+    qw = Q.quantize_weight(w)
+    x = _rand_w(rng, 4, 24)
+    got = linear(x, qw)
+    want = x @ Q.dequantize(qw).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: plain / fused / banked / unpack vs the dequant oracle
+# ---------------------------------------------------------------------------
+
+SHAPES = [(8, 16, 32), (4, 32, 24), (8, 100, 40)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("mode", ["row", "col", "scalar"])
+def test_bitlinear_quant_parity(shape, mode):
+    m, n, k = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    qw = Q.quantize_weight(_rand_w(rng, n, k))
+    packed, vr, vc = _rand_entry(rng, n, k)
+    v = {"row": vr, "col": 0.01 * jnp.ones((k,)),
+         "scalar": jnp.float32(0.01)}[mode]
+    x = _rand_w(rng, m, k)
+    got = K.bitlinear(x, packed, v, qw, mode=mode)
+    want = R.bitlinear_ref(x, packed, v, qw.q, mode, w_scale=qw.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bitlinear_axes_quant_parity(shape):
+    m, n, k = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    qw = Q.quantize_weight(_rand_w(rng, n, k))
+    packed, vr, vc = _rand_entry(rng, n, k)
+    x = _rand_w(rng, m, k)
+    got = K.bitlinear_axes(x, packed, vr, vc, qw)
+    want = R.bitlinear_axes_ref(x, packed, vr, vc, qw.q, w_scale=qw.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # in-tile dequant == executing against the densely dequantized base
+    dense = K.bitlinear_axes(x, packed, vr, vc, Q.dequantize(qw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bitlinear_axes_banked_quant_parity(shape):
+    m, n, k = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    qw = Q.quantize_weight(_rand_w(rng, n, k))
+    packed, vr, vc = _rand_entry(rng, n, k, nb=3)
+    # slot 0 = base: zero vectors and a zero sign plane
+    packed = packed.at[0].set(0)
+    vr = vr.at[0].set(0)
+    vidx = jnp.asarray(rng.integers(0, 3, size=(m,)), jnp.int32)
+    x = _rand_w(rng, m, k)
+    got = K.bitlinear_axes_banked(x, vidx, packed, vr, vc, qw)
+    want = R.bitlinear_axes_banked_ref(x, vidx, packed, vr, vc, qw.q,
+                                       w_scale=qw.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["row", "col"])
+def test_unpack_apply_quant_parity(mode):
+    rng = np.random.default_rng(5)
+    n, k = 32, 24
+    qw = Q.quantize_weight(_rand_w(rng, n, k))
+    packed, vr, _ = _rand_entry(rng, n, k)
+    v = vr if mode == "row" else 0.01 * jnp.ones((k,))
+    got = K.unpack_apply(packed, v, qw, mode=mode)
+    assert got.dtype == jnp.float16        # dense Ŵ lands in scale dtype
+    want = R.unpack_apply_ref(packed, v, qw.q, mode, dtype=jnp.float16,
+                              w_scale=qw.scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_no_dispatch_fallback_quant():
+    """Outside a mesh (and under no_dispatch) the QuantWeight path must be
+    byte-identical to the plain global-jit call."""
+    rng = np.random.default_rng(6)
+    qw = Q.quantize_weight(_rand_w(rng, 32, 24))
+    packed, vr, vc = _rand_entry(rng, 32, 24)
+    x = _rand_w(rng, 4, 24)
+    base = K.bitlinear_axes(x, packed, vr, vc, qw)
+    with D.no_dispatch():
+        nd = K.bitlinear_axes(x, packed, vr, vc, qw,
+                              waxes=("ffn", "embed"))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(nd))
+
+
+# ---------------------------------------------------------------------------
+# 4-device row-/col-sharded parity (sharded-smoke job)
+# ---------------------------------------------------------------------------
+
+def test_sharded_kernel_parity_quant():
+    mesh = _mesh22()
+    rng = np.random.default_rng(7)
+    x = _rand_w(rng, 8, 24)
+
+    # row-sharded: out-channel (and its scale) split over `model`
+    qw = Q.quantize_weight(_rand_w(rng, 32, 24))
+    packed, vr, vc = _rand_entry(rng, 32, 24)
+    want = K.bitlinear_axes(x, packed, vr, vc, qw)
+    with S.shard_ctx(mesh, RULES):
+        got = K.bitlinear_axes(x, packed, vr, vc, qw,
+                               waxes=("ffn", "embed"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    # col-sharded contraction: scales replicated, partials psum'd
+    x2 = _rand_w(rng, 8, 32)
+    qw2 = Q.quantize_weight(_rand_w(rng, 24, 32))
+    packed2, vr2, vc2 = _rand_entry(rng, 24, 32)
+    want2 = K.bitlinear_axes(x2, packed2, vr2, vc2, qw2)
+    with S.shard_ctx(mesh, RULES):
+        got2 = K.bitlinear_axes(x2, packed2, vr2, vc2, qw2,
+                                waxes=("embed", "ffn"))
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want2),
+                               rtol=2e-5, atol=2e-5)
+
+    # banked + unpack on the quantized base
+    packed_b, vrb, vcb = _rand_entry(rng, 32, 24, nb=3)
+    vidx = jnp.asarray(rng.integers(0, 3, size=(8,)), jnp.int32)
+    wantb = K.bitlinear_axes_banked(x, vidx, packed_b, vrb, vcb, qw)
+    with S.shard_ctx(mesh, RULES):
+        gotb = K.bitlinear_axes_banked(x, vidx, packed_b, vrb, vcb, qw,
+                                       waxes=("ffn", "embed"))
+    np.testing.assert_allclose(np.asarray(gotb), np.asarray(wantb),
+                               rtol=2e-5, atol=2e-5)
+
+    wantu = K.unpack_apply(packed, vr, qw, mode="row")
+    with S.shard_ctx(mesh, RULES):
+        gotu = K.unpack_apply(packed, vr, qw, mode="row",
+                              waxes=("ffn", "embed"))
+    np.testing.assert_allclose(np.asarray(gotu, np.float32),
+                               np.asarray(wantu, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# model-level parity across the five families
+# ---------------------------------------------------------------------------
+
+def _family_pair(arch: str):
+    cfg = get_config(arch).reduced()
+    if arch in ("deepseek-7b", "deepseek-moe-16b"):
+        cfg = dataclasses.replace(cfg, num_layers=2)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False)
+    model = build_model(cfg)
+    base, axes = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft = jax.tree.map(lambda b, f: b + 0.05 * f, base, pert)
+    return model, base, axes, C.compress(base, ft)
+
+
+def _tokens_batch(model, bs=2, s=8):
+    batch = {"tokens": jnp.asarray(np.random.default_rng(7).integers(
+        1, model.cfg.vocab_size, size=(bs, s)), jnp.int32)}
+    if model.cfg.family == "audio":
+        batch["frames"] = jnp.zeros(
+            (bs, model.cfg.encoder_frames, model.cfg.d_model), jnp.float32)
+    return batch
+
+
+def _dequant_tree(qparams):
+    return jax.tree.map(
+        lambda l: Q.dequantize(l, jnp.float32) if Q.is_quant(l) else l,
+        qparams, is_leaf=Q.is_quant)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "deepseek-moe-16b",
+                                  "xlstm-350m", "zamba2-7b",
+                                  "whisper-base"])
+def test_family_forward_quant_parity(arch):
+    """Forward logits on the QuantWeight params (plain, fused-overlay and
+    banked paths) match the densely dequantized base — the int8
+    representation is the only approximation."""
+    from repro.models import delta_overlay as DO
+    model, base, _, dm = _family_pair(arch)
+    qparams, _, stats = Q.quantize_base(base)
+    assert stats["targets"] > 0
+    deq = _dequant_tree(qparams)
+    batch = _tokens_batch(model)
+    fwd = jax.jit(lambda p, b: model.forward(p, b)[0])
+    lq = fwd(qparams, batch)
+    ld = fwd(deq, batch)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
+                               rtol=2e-3, atol=2e-3)
+
+    # fused single-variant overlay over the quantized base
+    flat_q = C.flatten_params(qparams)
+    ov = {}
+    for p, e in dm.deltas.items():
+        if not e.scalar:
+            DO.insert_entry(ov, p, DO.from_delta_entry(e))
+    if ov:
+        fwd_ov = jax.jit(
+            lambda p, o, b: model.forward(p, b, overlay=o)[0])
+        lqo = fwd_ov(qparams, ov, batch)
+        ldo = fwd_ov(deq, ov, batch)
+        np.testing.assert_allclose(np.asarray(lqo), np.asarray(ldo),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: bank admit/evict + lifecycle at base_dtype="int8"
+# ---------------------------------------------------------------------------
+
+def _toy_serving(arch="deepseek-7b"):
+    cfg = dataclasses.replace(get_config(arch).reduced(), num_layers=2,
+                              compute_dtype="float32", remat=False)
+    model = build_model(cfg)
+    base, _ = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft1 = jax.tree.map(lambda b, f: b + 0.05 * f, base, pert)
+    ft2 = jax.tree.map(lambda b, f: b - 0.05 * f, base, pert)
+    return model, base, C.compress(base, ft1), C.compress(base, ft2)
+
+
+def test_registry_quant_accounting():
+    model, base, dm1, _ = _toy_serving()
+    reg_fp = VariantRegistry(base, mode="fused")
+    reg = VariantRegistry(base, mode="fused", base_dtype="int8")
+    assert reg.base_fp == reg_fp.base_fp       # fingerprint is of the FP base
+    assert reg.base_dtype == "int8" and reg.quant_stats["targets"] > 0
+    assert reg.base_nbytes() < 0.6 * reg_fp.base_nbytes()
+    per = reg.base_per_device_nbytes()
+    assert sum(per.values()) == reg.base_nbytes()
+
+
+def test_bank_admit_evict_int8():
+    model, base, dm1, dm2 = _toy_serving()
+    reg = VariantRegistry(base, mode="fused", bank_size=3,
+                          base_dtype="int8")
+    reg.register("v1", dm1)
+    reg.register("v2", dm2)
+    s1 = reg.bank_resolve("v1")
+    s2 = reg.bank_resolve("v2")
+    assert {s1, s2} == {1, 2}
+    reg.evict("v1")
+    assert reg.bank.resident() == ["v2"]
+    assert reg.bank_resolve("v2") == s2        # hit, slot stable
+    assert reg.bank_resolve("v1") == s1        # re-admit reuses the slot
+    # decode through the banked kernel over the int8 base
+    eng = ServingEngine(model, reg, batch_size=2, prompt_len=8,
+                        max_len=32, scheduler="continuous")
+    r1 = eng.submit(np.arange(1, 7), variant="v1", max_new_tokens=4)
+    r2 = eng.submit(np.arange(1, 7), variant="v2", max_new_tokens=4)
+    eng.run_until_drained()
+    assert eng.result(r1).status == "done"
+    assert len(eng.result(r1).out_tokens) == 4
+    assert len(eng.result(r2).out_tokens) == 4
+
+
+def test_lifecycle_int8(tmp_path):
+    """publish → update → rollback at base_dtype='int8', plus the status()
+    HBM accounting next to the bank bytes."""
+    model, base, dm1, dm2 = _toy_serving()
+    dep = Deployment(model, base, root_dir=str(tmp_path), mode="fused",
+                     scheduler="continuous", batch_size=2, prompt_len=8,
+                     max_len=32, bank_size=4, base_dtype="int8")
+    v1 = dep.publish("v", dm1)
+    rid = dep.submit(np.arange(1, 7), variant="v", max_new_tokens=4)
+    dep.drain()
+    assert dep.result(rid).status == "done"
+    assert dep.result(rid).served_version == v1
+    v2 = dep.update("v", dm2)
+    rid2 = dep.submit(np.arange(1, 7), variant="v", max_new_tokens=4)
+    dep.drain()
+    assert dep.result(rid2).served_version == v2
+    vb = dep.rollback("v")
+    assert vb == v1
+    rid3 = dep.submit(np.arange(1, 7), variant="v", max_new_tokens=4)
+    dep.drain()
+    assert dep.result(rid3).served_version == v1
+    st = dep.status()
+    assert st["hbm"]["base_dtype"] == "int8"
+    assert st["hbm"]["base_bytes"] > 0 and st["hbm"]["bank_bytes"] > 0
+    assert sum(st["hbm"]["base_per_device"].values()) == \
+        st["hbm"]["base_bytes"]
+    dep.close()
+
+
+def test_lifecycle_token_agreement_int8_vs_fp(tmp_path):
+    """Same workload, fp vs int8 base: greedy tokens agree on (nearly)
+    every position — the measured tolerance the benchmark gates at 0.99
+    under heavier traffic."""
+    model, base, dm1, _ = _toy_serving()
+    toks = {}
+    for bd in ("fp", "int8"):
+        dep = Deployment(model, base, mode="fused",
+                         scheduler="continuous", batch_size=2,
+                         prompt_len=8, max_len=32, bank_size=4,
+                         base_dtype=bd)
+        dep.publish("v", dm1)
+        rids = [dep.submit(np.arange(1, 7), variant=v, max_new_tokens=6)
+                for v in ("__base__", "v")]
+        dep.drain()
+        toks[bd] = [dep.result(r).out_tokens for r in rids]
+        dep.close()
+    agree = sum(int(a == b)
+                for fa, fb in zip(toks["fp"], toks["int8"])
+                for a, b in zip(fa, fb))
+    total = sum(len(fa) for fa in toks["fp"])
+    assert total == 12
+    assert agree / total >= 0.9
