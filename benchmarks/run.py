@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
            (DESIGN.md §15)
   update_latency incremental publish_update + hot-swap vs full republish
   sharded_serving banked decode on a host mesh: parity + per-device bytes
+  pod_affinity pod-local overlay banks + affinity routing vs the global
+           bank on a (2,2,2) mesh: cross-pod admission bytes, affinity
+           hit rate, publish→first-token, token parity (DESIGN.md §17)
   shard_map_kernels per-shard vs GSPMD-partitioned delta kernels: latency
            + kernel/token parity at forced 4 host devices (DESIGN.md §12)
   admission_overlap async vs inline admission on a busy node: publish→
@@ -136,8 +139,8 @@ def main() -> None:
 
     from benchmarks import (admission_overlap, axis_stats, compile_cache,
                             continuous_batching, fused_serving, kernel_bench,
-                            load_time, quantized_base, roofline,
-                            shard_map_kernels, sharded_serving,
+                            load_time, pod_affinity, quantized_base,
+                            roofline, shard_map_kernels, sharded_serving,
                             speculative_decoding, table1_quality,
                             table2_sizes, update_latency)
     sections = [                                      # cheap first
@@ -155,6 +158,7 @@ def main() -> None:
         ("compile_cache", compile_cache.run),
         ("quantized_base", quantized_base.run),
         ("sharded_serving", sharded_serving.run),
+        ("pod_affinity", pod_affinity.run),
         ("shard_map_kernels", shard_map_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -47,9 +47,19 @@ PARAM_RULES = {
     # overlay-bank slot axis (models/delta_overlay.py): replicated — every
     # device holds all bank slots of its own weight shard, so per-row slot
     # gathers in the banked delta GEMM stay device-local and bank admission
-    # needs no collectives (DESIGN.md §11)
+    # needs no collectives (DESIGN.md §11).  Pod-local banks
+    # (rules_for(..., pod_banks=True)) shard this axis over "pod" instead:
+    # each pod holds only its own slot range and admission scatters touch
+    # one pod's devices (DESIGN.md §17)
     "bank": [],
 }
+
+# Pod-local overlay banks (DESIGN.md §17): the bank axis shards over the
+# pod axis — slot p*S..(p+1)*S-1 lives only on pod p's devices, so an
+# admission scatter writes one pod's shard and crosses no pod boundary.
+# resolve_spec's divisibility fallback makes this degrade to replicated
+# on meshes without a "pod" axis (single-pod serving, tier-1 CPU runs).
+BANK_RULE_POD = ["pod"]
 
 # Pure tensor-parallel params (serving: no FSDP; weights replicated over
 # data so decode GEMVs need no weight all-gathers).
@@ -77,17 +87,26 @@ ACT_RULES_DECODE = _act_rules(seq_sharded=False)
 ACT_RULES_LONG = _act_rules(seq_sharded=True)
 
 
-def rules_for(kind: str, long_context: bool = False) -> dict:
+def rules_for(kind: str, long_context: bool = False,
+              pod_banks: bool = False) -> dict:
     """(param_rules, act_rules) merged dict for a workload kind.
 
     "_forward_only" marks gradient-free workloads: sequence-TP attention
     is safe there (its backward pathology — per-chunk KV re-gathers — can't
-    occur), and it beats flat-q sharding for indivisible head counts."""
+    occur), and it beats flat-q sharding for indivisible head counts.
+
+    ``pod_banks`` (serving kinds only) swaps the overlay-bank slot rule
+    from replicated to pod-sharded (DESIGN.md §17): every consumer of the
+    rule set — bank allocation, engine in_shardings, the shard_map kernel
+    dispatch — then agrees that slot s lives on pod s // slots_per_pod."""
     if kind == "train":
         return {**PARAM_RULES, **ACT_RULES_TRAIN}
     if kind in ("prefill", "decode"):
         act = ACT_RULES_LONG if long_context else ACT_RULES_DECODE
-        return {**PARAM_RULES_SERVE, **act, "_forward_only": True}
+        rules = {**PARAM_RULES_SERVE, **act, "_forward_only": True}
+        if pod_banks:
+            rules["bank"] = BANK_RULE_POD
+        return rules
     raise ValueError(kind)
 
 

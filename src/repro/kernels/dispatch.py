@@ -327,14 +327,50 @@ def bitlinear_axes(st, x: jax.Array, packed: jax.Array, v_row: jax.Array,
     return y.astype(x.dtype).reshape(*lead, n)
 
 
+def _bank_part(mesh, rules: dict, nb: int, plan: Plan):
+    """Mesh partition of the bank slot axis under the active rules (None
+    = replicated, the pre-§17 layout).  Pod-local banks resolve to "pod";
+    a bank axis that does not divide, or whose mesh axes already carry
+    the weight's out/in dim (they share the overlay operands with the
+    bank dim — a mesh axis may appear only once per spec), falls back to
+    replicated.  ``plan.m_part`` using "pod" is fine: the batch rows live
+    in a DIFFERENT operand."""
+    from repro.distributed.sharding import resolve_spec
+    bp = resolve_spec((nb,), ("bank",), rules, mesh)[0]
+    if bp is None:
+        return None
+    used = set(_names(plan.o_part)) | set(_names(plan.i_part))
+    if set(_names(bp)) & used:
+        return None
+    return bp
+
+
+def _axes_linear_index(names: tuple):
+    """Row-major linear index of this shard over the given mesh axes
+    (inside shard_map) — the pod offset term of the banked vidx
+    translation."""
+    idx = None
+    for nm in names:
+        ai = jax.lax.axis_index(nm)
+        idx = ai if idx is None else idx * jax.lax.psum(1, nm) + ai
+    return idx
+
+
 def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
                           packed: jax.Array, v_row: jax.Array,
                           v_col: jax.Array, w_base: jax.Array,
                           waxes) -> Optional[jax.Array]:
     """shard_map'd mixed-variant fused GEMM: overlay leaves carry a leading
-    (replicated) bank axis; each device gathers its rows' slots from its
-    OWN weight tile's bank — admission stays collective-free and so does
-    the per-row gather."""
+    bank axis; each device gathers its rows' slots from its OWN weight
+    tile's bank — admission stays collective-free and so does the per-row
+    gather.
+
+    The bank axis is replicated by default; under pod-local rules
+    (DESIGN.md §17) it shards over "pod" and ``variant_idx`` — which the
+    engine writes as GLOBAL slot ids (pod p owns slots [p*S, (p+1)*S)) —
+    is translated to the shard-local slot by subtracting this pod's
+    offset.  The affinity router only ever routes a row to its own pod's
+    slots, so the clamp is a memory-safety bound, not a semantic path."""
     mesh, rules = st
     wq, ws = _unwrap_quant(w_base)
     *lead, k = x.shape
@@ -346,6 +382,8 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
     if plan is None:
         return None
     mp, op, ip = plan.m_part, plan.o_part, plan.i_part
+    bp = _bank_part(mesh, rules, nb, plan)
+    lnb = nb // _size(mesh, bp)         # shard-local bank slots
     import repro.kernels.ops as _O
     vidx2 = _O.flatten_vidx(variant_idx, tuple(lead)).reshape(m, 1)
 
@@ -354,8 +392,11 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
         import repro.kernels.ops as O
         lm, lk = x2.shape
         ln = wb.shape[0]
+        if bp is not None:
+            off = _axes_linear_index(_names(bp)) * lnb
+            vi = jnp.clip(vi - off, 0, lnb - 1)
         y = bitlinear_axes_banked_p(
-            x2, vi, pk, vr.reshape(nb, ln, 1), vc.reshape(nb, 1, lk), wb,
+            x2, vi, pk, vr.reshape(lnb, ln, 1), vc.reshape(lnb, 1, lk), wb,
             block_m=O._pick_block(lm, O._TILE_BANKED_M),
             block_n=O._pick_block(ln, O._TILE_BANKED_N),
             block_k=O._pick_block(lk, O._TILE_BANKED_K, multiple=PACK),
@@ -368,14 +409,14 @@ def bitlinear_axes_banked(st, x: jax.Array, variant_idx: jax.Array,
     pk = packed.reshape(nb, n, k // PACK)
     vr = v_row.reshape(nb, n)
     vc = v_col.reshape(nb, k)
-    in_specs = (P(mp, ip), P(mp, None), P(None, op, ip), P(None, op),
-                P(None, ip), P(op, ip))
+    in_specs = (P(mp, ip), P(mp, None), P(bp, op, ip), P(bp, op),
+                P(bp, ip), P(op, ip))
     operands = (x2, vidx2, pk, vr, vc, wq)
     if ws is not None:
         in_specs += (P(op),)
         operands += (ws.reshape(n),)
     fn = _cached_jit(
-        ("banked", mesh, plan, _avals(*operands)),
+        ("banked", mesh, plan, bp, _avals(*operands)),
         lambda: shard_map(
             shard_fn, mesh=mesh,
             in_specs=in_specs,

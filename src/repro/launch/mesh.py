@@ -28,12 +28,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(dev_array, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / local runs)."""
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over whatever devices exist (tests / local runs).
+
+    ``pod > 0`` prepends a pod axis — (pod, data, model) — the 3-axis
+    shape pod-local overlay banks and affinity routing run on
+    (DESIGN.md §17), e.g. (2, 2, 2) under 8 forced host devices."""
     import numpy as np
-    n = data * model
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    n = math.prod(shape)
     devices = jax.devices()[:n]
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
-    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
-                             ("data", "model"))
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)

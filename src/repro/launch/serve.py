@@ -61,9 +61,22 @@ def main():
                     help="incremental update+hot-swap cycles on variant v0")
     ap.add_argument("--store-dir", default=None,
                     help="persist artifacts here (default: in-memory)")
-    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
-                    help="serve on a (data, model) mesh of this shape "
-                         "(default: single device)")
+    ap.add_argument("--mesh", default=None,
+                    metavar="DATA,MODEL | POD,DATA,MODEL",
+                    help="serve on a (data, model) mesh — or, with three "
+                         "values, a (pod, data, model) mesh (default: "
+                         "single device)")
+    ap.add_argument("--pod-banks", action="store_true",
+                    help="pod-local overlay banks + affinity routing "
+                         "(DESIGN.md §17): bank slots shard over the "
+                         "mesh's pod axis, requests steer to the pod "
+                         "already holding their variant (requires a "
+                         "3-value --mesh and --scheduler continuous)")
+    ap.add_argument("--admission-pacing", type=float, default=0.002,
+                    metavar="SECONDS",
+                    help="async-admission ingest pacing: worker sleep "
+                         "between artifact module streams (0 disables; "
+                         "default 0.002)")
     ap.add_argument("--kernel-dispatch", choices=("shard_map", "gspmd"),
                     default="shard_map",
                     help="mesh-mode delta-GEMM lowering: per-shard "
@@ -117,10 +130,23 @@ def main():
     if args.mesh:
         from repro.launch.mesh import make_host_mesh
         try:
-            data, model_par = (int(p) for p in args.mesh.split(","))
+            parts = [int(p) for p in args.mesh.split(",")]
+            if len(parts) == 2:
+                pod, (data, model_par) = 0, parts
+            elif len(parts) == 3:
+                pod, data, model_par = parts
+            else:
+                raise ValueError(args.mesh)
         except ValueError:
-            ap.error("--mesh expects DATA,MODEL, e.g. --mesh 2,2")
-        mesh = make_host_mesh(data, model_par)
+            ap.error("--mesh expects DATA,MODEL or POD,DATA,MODEL, "
+                     "e.g. --mesh 2,2 or --mesh 2,2,2")
+        mesh = make_host_mesh(data, model_par, pod=pod)
+    if args.pod_banks:
+        if mesh is None or "pod" not in mesh.axis_names:
+            ap.error("--pod-banks needs a 3-value --mesh POD,DATA,MODEL")
+        if args.scheduler != "continuous":
+            ap.error("--pod-banks requires --scheduler continuous "
+                     "(the affinity router lives in the slot scheduler)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -148,7 +174,9 @@ def main():
                      speculative=args.speculative, draft_k=args.draft_k,
                      warmup=args.warmup,
                      compile_cache_dir=args.compile_cache,
-                     base_dtype=args.base_dtype)
+                     base_dtype=args.base_dtype,
+                     pod_banks=args.pod_banks,
+                     admission_pacing_s=args.admission_pacing)
     if args.base_dtype == "int8":
         qs = dep.registry.quant_stats
         print(f"int8 base: {qs['targets']} targets, "
@@ -206,6 +234,21 @@ def main():
         if dep.registry.bank is not None:
             print("bank per-device bytes:",
                   st["hbm"]["bank_per_device"])
+    if args.pod_banks:
+        af = st["affinity"]
+        print(f"affinity: pods={af['pods']} hits={af['hits']} "
+              f"misses={af['misses']} hit_rate={af['hit_rate']:.3f}")
+        print("bank per-pod bytes:", st["hbm"]["bank_per_pod"])
+        print("bank residents per pod:",
+              st["hbm"]["bank_resident_per_pod"])
+        bank = dep.registry.bank
+        if bank is not None:
+            print(f"admission bytes: in-pod="
+                  f"{bank.stats['admit_bytes_in_pod']} cross-pod="
+                  f"{bank.stats['admit_bytes_cross_pod']}")
+    print(f"ttft: p50={st['ttft']['p50_seconds']:.4f}s "
+          f"p99={st['ttft']['p99_seconds']:.4f}s "
+          f"(n={st['ttft']['count']})")
     dep.close()
 
 

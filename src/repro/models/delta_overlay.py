@@ -181,10 +181,13 @@ def bank_set_extra_base(path: str, bank: jax.Array, slot: int,
 # dim (the packed d_in//8 byte dim is replicated — it is 8x smaller and the
 # fused kernel reads it whole per tile), v_row / v_col follow the single
 # weight axis they scale, extras ARE fine-tuned weight leaves and keep the
-# weight's own axes, and the bank axis resolves to replicated (every device
-# holds every slot's shard of its own weight tile — admission is then a
-# collective-free local scatter).  ``distributed/sharding.py`` owns the
-# logical->mesh mapping; this module only derives the logical axes.
+# weight's own axes, and the bank axis resolves through the "bank" rule:
+# replicated by default (every device holds every slot's shard of its own
+# weight tile — admission is then a collective-free local scatter), or
+# pod-sharded under pod-local bank rules (rules_for(..., pod_banks=True):
+# each pod holds only its own slot range, so an admission scatter writes a
+# single pod's devices — DESIGN.md §17).  ``distributed/sharding.py`` owns
+# the logical->mesh mapping; this module only derives the logical axes.
 # ---------------------------------------------------------------------------
 
 def entry_shardings_from_weight(weight_sharding, w_ndim: int):

@@ -54,11 +54,16 @@ from repro.core import loader as L
 
 @dataclasses.dataclass
 class AdmissionTicket:
-    """One variant version moving through the ingest pipeline."""
+    """One variant version moving through the ingest pipeline, bound for
+    ONE pod's bank shard (tickets are keyed per (vkey, pod): a pod-local
+    bank admits the same version into two pods as two independent
+    ingests, DESIGN.md §17 — the artifact re-reads from the store rather
+    than copying device-to-device across pods)."""
     nameish: str                      # caller-facing request string
     name: str
     version: object                   # None for unversioned registrations
     vkey: str                         # bank/resident key (name@vN)
+    pod: int = 0                      # target pod's slot range
     state: str = "queued"             # queued|staging|staged|admitted|failed
     error: Optional[str] = None
     dm: object = None                 # staged DeltaModel (device futures)
@@ -92,7 +97,8 @@ class AdmissionPipeline:
         # nothing on hosts with spare cores.  0 disables.
         self.pacing_s = pacing_s
         self._cond = threading.Condition()
-        self._tickets: dict[str, AdmissionTicket] = {}    # vkey -> ticket
+        # (vkey, pod) -> ticket: per-pod tickets (DESIGN.md §17)
+        self._tickets: dict[tuple, AdmissionTicket] = {}
         self._work: collections.deque = collections.deque()
         self._worker: Optional[threading.Thread] = None
         self._closed = False
@@ -100,55 +106,58 @@ class AdmissionPipeline:
                       "failures": 0, "stage_seconds": 0.0}
 
     # -- enqueue -----------------------------------------------------------
-    def prefetch(self, nameish: str) -> Optional[str]:
+    def prefetch(self, nameish: str, pod: int = 0) -> Optional[str]:
         """Begin ingest of ``nameish``'s CURRENT version (or an explicit
-        ``name@vN``).  Idempotent: already-resident versions and live
-        tickets return immediately.  Returns the version key (None for
-        the base, which needs no admission)."""
+        ``name@vN``) toward ``pod``'s bank shard.  Idempotent: already-
+        resident-in-pod versions and live tickets return immediately.
+        Returns the version key (None for the base, which needs no
+        admission)."""
         if nameish == "__base__":
             return None
         name, version = self.registry._parse(nameish)   # KeyError: unknown
         vkey = self.registry._vkey(name, version)
         bank = self.registry.bank
-        if bank is not None and vkey in bank._slots:
+        if bank is not None and bank.holds(vkey, pod):
             return vkey                                  # already admitted
         with self._cond:
             if self._closed:
                 raise RuntimeError("admission pipeline is closed")
-            t = self._tickets.get(vkey)
+            t = self._tickets.get((vkey, pod))
             if t is not None and t.state in _LIVE:
                 return vkey
             t = AdmissionTicket(nameish=nameish, name=name, version=version,
-                                vkey=vkey, enqueued_at=time.perf_counter())
-            self._tickets[vkey] = t
+                                vkey=vkey, pod=pod,
+                                enqueued_at=time.perf_counter())
+            self._tickets[(vkey, pod)] = t
             # mark BEFORE the worker can observe the ticket: evict/rollback
             # must refuse from the moment ingest is promised
-            self.registry._ensure_bank().mark_staging(vkey)
-            self._work.append(vkey)
+            self.registry._ensure_bank().mark_staging(vkey, pod)
+            self._work.append((vkey, pod))
             self.stats["prefetches"] += 1
             self._ensure_worker()
             self._cond.notify_all()
         return vkey
 
     # -- progress ----------------------------------------------------------
-    def poll(self, nameish: str) -> str:
-        """Pipeline state for ``nameish``: ``admitted`` once its version is
-        bank-resident, else the live ticket state (``queued``/``staging``/
-        ``staged``), auto-prefetching variants never seen.  A FAILED ticket
-        is consumed here — deleted so a later poll re-ingests — and its
-        error re-raised for the caller's retry logic."""
+    def poll(self, nameish: str, pod: int = 0) -> str:
+        """Pipeline state for ``nameish`` toward ``pod``: ``admitted``
+        once its version is bank-resident in that pod, else the live
+        ticket state (``queued``/``staging``/``staged``), auto-prefetching
+        variants never seen.  A FAILED ticket is consumed here — deleted
+        so a later poll re-ingests — and its error re-raised for the
+        caller's retry logic."""
         name, version = self.registry._parse(nameish)
         vkey = self.registry._vkey(name, version)
         bank = self.registry.bank
-        if bank is not None and vkey in bank._slots:
+        if bank is not None and bank.holds(vkey, pod):
             return "admitted"
         with self._cond:
-            t = self._tickets.get(vkey)
+            t = self._tickets.get((vkey, pod))
             if t is not None and t.state == "failed":
-                del self._tickets[vkey]
+                del self._tickets[(vkey, pod)]
                 raise RuntimeError(t.error)
         if t is None:
-            self.prefetch(nameish)
+            self.prefetch(nameish, pod)
             return "queued"
         return t.state
 
@@ -160,10 +169,11 @@ class AdmissionPipeline:
                        for t in self._tickets.values())
 
     def admitting(self) -> list:
-        """Version keys currently mid-pipeline (status surfacing)."""
+        """Version keys currently mid-pipeline (status surfacing; a key
+        ingesting toward several pods appears once)."""
         with self._cond:
-            return sorted(k for k, t in self._tickets.items()
-                          if t.state in _LIVE)
+            return sorted({t.vkey for t in self._tickets.values()
+                           if t.state in _LIVE})
 
     def in_flight(self) -> int:
         with self._cond:
@@ -202,13 +212,13 @@ class AdmissionPipeline:
         every slot pinned) leaves the ticket staged for a later drain;
         any other failure fails the ticket."""
         try:
-            self.registry._bank_admit(t.vkey, t.dm, block=False)
+            self.registry._bank_admit(t.vkey, t.dm, block=False, pod=t.pod)
         except RuntimeError:
             return False          # transient capacity pressure: retry later
         except Exception as e:
             with self._cond:
                 t.state, t.error = "failed", str(e)
-                self.registry._ensure_bank().unmark_staging(t.vkey)
+                self.registry._ensure_bank().unmark_staging(t.vkey, t.pod)
                 self.stats["failures"] += 1
                 self._cond.notify_all()
             return False
@@ -216,8 +226,8 @@ class AdmissionPipeline:
             t.state = "admitted"
             # residency is now visible via the bank itself; the ticket is
             # done (poll checks bank slots first)
-            del self._tickets[t.vkey]
-            self.registry.bank.unmark_staging(t.vkey)
+            del self._tickets[(t.vkey, t.pod)]
+            self.registry.bank.unmark_staging(t.vkey, t.pod)
             self.stats["commits"] += 1
             self._cond.notify_all()
         return True
@@ -238,17 +248,20 @@ class AdmissionPipeline:
             self.drain(max_admits=1 << 30)
             with self._cond:
                 if vkey is not None:
-                    t = self._tickets.get(vkey)
-                    if t is None:
+                    live = [t for t in self._tickets.values()
+                            if t.vkey == vkey]       # any pod's ticket
+                    if not live:
                         return                      # committed (or never live)
-                    if t.state == "failed":
-                        del self._tickets[vkey]
-                        raise RuntimeError(t.error)
+                    failed = next((t for t in live
+                                   if t.state == "failed"), None)
+                    if failed is not None:
+                        del self._tickets[(failed.vkey, failed.pod)]
+                        raise RuntimeError(failed.error)
                 else:
                     failed = next((t for t in self._tickets.values()
                                    if t.state == "failed"), None)
                     if failed is not None:
-                        del self._tickets[failed.vkey]
+                        del self._tickets[(failed.vkey, failed.pod)]
                         raise RuntimeError(failed.error)
                     if not self._tickets:
                         return
@@ -288,8 +301,8 @@ class AdmissionPipeline:
                     self._cond.wait(1.0)
                 if self._closed:
                     return
-                vkey = self._work.popleft()
-                t = self._tickets.get(vkey)
+                key = self._work.popleft()
+                t = self._tickets.get(key)
                 if t is None or t.state != "queued":
                     continue
                 t.state = "staging"
@@ -314,5 +327,5 @@ class AdmissionPipeline:
                     self.stats["failures"] += 1
                     bank = self.registry.bank
                     if bank is not None:
-                        bank.unmark_staging(t.vkey)
+                        bank.unmark_staging(t.vkey, t.pod)
                     self._cond.notify_all()

@@ -69,11 +69,18 @@ class Deployment:
                  async_admission: bool = False,
                  speculative: bool = False, draft_k: int = 4,
                  eager: bool = False, warmup: bool = False,
-                 compile_cache_dir=None, base_dtype: str = "fp"):
+                 compile_cache_dir=None, base_dtype: str = "fp",
+                 pod_banks: bool = False,
+                 admission_pacing_s: float = 0.002):
         if store is not None and root_dir is not None:
             raise ValueError("pass either store or root_dir, not both")
         if base_dtype not in ("fp", "int8"):
             raise ValueError(f"unknown base dtype {base_dtype!r}")
+        if pod_banks and (speculative or scheduler == "speculative"):
+            raise ValueError(
+                "pod_banks=True does not compose with the speculative "
+                "scheduler (verify rounds lack per-pod slot translation); "
+                "use scheduler='continuous'")
         if speculative:
             if scheduler not in ("continuous", "speculative"):
                 raise ValueError(
@@ -108,11 +115,16 @@ class Deployment:
         # the resident base (and its shardings) go int8+scale.  The store
         # keeps the FP param_shardings: patch-chain walks materialise fp
         # deltas, not quantized bases.
+        # pod_banks=True (DESIGN.md §17): the overlay bank shards its slot
+        # axis over the mesh's "pod" axis (bank_size slots PER POD) and the
+        # engine's affinity router steers requests to the pod holding their
+        # variant; False keeps the globally-replicated bank (A/B baseline)
         self.registry = VariantRegistry(
             base_params, param_shardings=param_shardings,
             max_resident=max_resident, use_kernel=use_kernel,
             mode=mode, bank_size=bank_size, mesh=mesh,
-            param_axes=param_axes, base_dtype=base_dtype)
+            param_axes=param_axes, base_dtype=base_dtype,
+            pod_banks=pod_banks)
         if store is None and root_dir is not None:
             store = S.VariantStore(root_dir, base_fp=self.registry.base_fp)
         if store is not None and store.base_fp is None:
@@ -152,7 +164,10 @@ class Deployment:
                     "scheduler (staged overlays commit into the overlay "
                     "bank between decode steps)")
             from repro.serving.admission import AdmissionPipeline
-            self.admission = AdmissionPipeline(self.registry)
+            # admission_pacing_s: ingest-worker sleep between module
+            # streams (SLO pacing, serving/admission.py); 0 disables
+            self.admission = AdmissionPipeline(
+                self.registry, pacing_s=admission_pacing_s)
             self.registry.admission = self.admission
         self.engine = ServingEngine(
             model, self.registry, batch_size=batch_size,

@@ -91,17 +91,23 @@ class Request:
     drafted: int = 0              # speculative scheduler: draft tokens
     accepted: int = 0             # offered / accepted for THIS request
                                   # (the per-lane acceptance rate)
+    route_pod: Optional[int] = None   # affinity router's sticky pod choice
+                                      # (per-pod admission tickets must not
+                                      # re-ingest on every poll)
 
 
 @dataclasses.dataclass
 class _Slot:
     """One lane of the persistent continuous-batching decode batch."""
     request: Request
-    variant_slot: int             # bank slot index (0 = base)
+    variant_slot: int             # GLOBAL bank slot index (base slot of
+                                  # the lane's pod for base rows)
     remaining: int                # tokens still owed
     vkey: str = "__base__"        # pinned version key — unpinned at retire
                                   # even if the variant was hot-swapped
                                   # mid-flight
+    pod: int = 0                  # pod whose bank shard holds the slot
+                                  # (pin/unpin are per-pod)
 
 
 class ServingEngine:
@@ -151,6 +157,27 @@ class ServingEngine:
                     "caches: sliding-window layers ring-buffer their "
                     "writes, so rewinding rejected draft tokens would "
                     "clobber in-window history (DESIGN.md §15)")
+        # pod-local banks (DESIGN.md §17): lanes split evenly across pods
+        # (act_batch shards pod-major, so lane i belongs to pod
+        # i // (batch_size // pods)); the affinity router below steers
+        # requests to lanes whose pod already holds their variant
+        self._pods = getattr(registry, "pods", 1)
+        if self._pods > 1:
+            if scheduler == "speculative":
+                raise ValueError(
+                    "scheduler='speculative' does not support pod-local "
+                    "banks (pod_banks=True): drafting serves the base "
+                    "through shared params, but verify rounds would need "
+                    "per-pod slot translation the round fn lacks — use "
+                    "scheduler='continuous'")
+            if mesh is None:
+                raise ValueError(
+                    "pod-local banks need the engine's mesh (the lane->"
+                    "pod mapping comes from the act_batch sharding)")
+            if batch_size % self._pods:
+                raise ValueError(
+                    f"batch_size={batch_size} must divide evenly across "
+                    f"{self._pods} pods (lanes block-partition pod-major)")
         self.model = model
         self.registry = registry
         self.batch_size = batch_size
@@ -237,7 +264,8 @@ class ServingEngine:
                     "a sharded engine needs registry.param_shardings "
                     "(resolve them with distributed.sharding."
                     "tree_shardings under the serve rules)")
-            self._rules = rules_for("decode")
+            self._rules = rules_for(
+                "decode", pod_banks=getattr(registry, "pod_banks", False))
             cache_struct = jax.eval_shape(
                 lambda: model.init_cache(batch_size, max_len))
             self._cache_sh = tree_shardings(cache_struct,
@@ -256,9 +284,20 @@ class ServingEngine:
         self._slots: list[Optional[_Slot]] = [None] * batch_size
         self._cache = None
         self._next_tok = None
-        self._variant_idx = np.zeros(batch_size, np.int32)
+        # each idle lane serves ITS POD's base slot (slot p*bank_size —
+        # zero deltas = exact base); a single-pod/global bank keeps the
+        # historical all-zeros vector
+        self._base_vidx = np.array(
+            [self._lane_pod(i) * registry.bank_size if self._pods > 1
+             else 0 for i in range(batch_size)], np.int32)
+        self._variant_idx = self._base_vidx.copy()
         self._variant_idx_dev = None     # device copy, rebuilt on change
         self._merge_jit = None           # built on first admission merge
+        # bounded TTFT reservoir behind the p50/p99 status() reports:
+        # first _ttft_cap samples fill it, later ones overwrite in
+        # arrival order (deterministic sliding window, no RNG)
+        self._ttft_cap = 1024
+        self._ttft_samples: list = []
         self.metrics = {"batches": 0, "tokens_generated": 0,
                         "prefills": 0, "failed": 0, "admitted": 0,
                         "retired": 0, "decode_steps": 0,
@@ -270,7 +309,8 @@ class ServingEngine:
                         "spec_rounds": 0, "spec_drafted": 0,
                         "spec_accepted": 0,
                         "ttft_count": 0, "ttft_seconds_sum": 0.0,
-                        "ttft_seconds_max": 0.0}
+                        "ttft_seconds_max": 0.0,
+                        "affinity_hits": 0, "affinity_misses": 0}
         # warmup registry (extensible — register_warmup): each entry
         # builds its step pairs from the shared abstract-twin context, so
         # new step kinds (e.g. the speculative ladder) warm through the
@@ -414,10 +454,15 @@ class ServingEngine:
             return
         r.first_token_at = time.perf_counter()
         ttft = r.first_token_at - r.submitted_at
-        self.metrics["ttft_count"] += 1
+        n = self.metrics["ttft_count"]
+        self.metrics["ttft_count"] = n + 1
         self.metrics["ttft_seconds_sum"] += ttft
         self.metrics["ttft_seconds_max"] = max(
             self.metrics["ttft_seconds_max"], ttft)
+        if len(self._ttft_samples) < self._ttft_cap:
+            self._ttft_samples.append(ttft)
+        else:
+            self._ttft_samples[n % self._ttft_cap] = ttft
 
     def result(self, rid: int) -> Request:
         return self._done[rid]
@@ -473,14 +518,37 @@ class ServingEngine:
                 "bank_bytes": bank.nbytes() if bank is not None else 0,
                 "bank_per_device": (bank.per_device_nbytes()
                                     if bank is not None else {}),
+                # per-pod rollup (DESIGN.md §17): bank bytes + resident
+                # slot keys by pod — empty dicts before the first admit
+                "bank_per_pod": (bank.per_pod_nbytes()
+                                 if bank is not None else {}),
+                "bank_resident_per_pod": (bank.pod_resident()
+                                          if bank is not None else {}),
+            },
+            # affinity router counters: a hit steered a request to a pod
+            # already holding its variant's slot (zero admission bytes)
+            "affinity": {
+                "pods": self._pods,
+                "hits": self.metrics["affinity_hits"],
+                "misses": self.metrics["affinity_misses"],
+                "hit_rate": (self.metrics["affinity_hits"]
+                             / max(1, self.metrics["affinity_hits"]
+                                   + self.metrics["affinity_misses"])),
             },
             # TTFT aggregates (submit -> first emitted token), fed by
             # Request.first_token_at — benchmarks read latency from here
-            # instead of poking request internals
+            # instead of poking request internals; percentiles come from
+            # the bounded reservoir (_ttft_samples)
             "ttft": {"count": n_ttft,
                      "mean_seconds": (self.metrics["ttft_seconds_sum"]
                                       / n_ttft if n_ttft else 0.0),
-                     "max_seconds": self.metrics["ttft_seconds_max"]},
+                     "max_seconds": self.metrics["ttft_seconds_max"],
+                     "p50_seconds": (float(np.percentile(
+                         self._ttft_samples, 50))
+                         if self._ttft_samples else 0.0),
+                     "p99_seconds": (float(np.percentile(
+                         self._ttft_samples, 99))
+                         if self._ttft_samples else 0.0)},
             "metrics": dict(self.metrics),
         }
         if self.spec is not None:
@@ -611,7 +679,8 @@ class ServingEngine:
         derived shardings) — the banked and speculative warmup entries
         share it."""
         from repro.models import delta_overlay as DO
-        nb = self.registry.bank_size
+        # pod-local banks stack every pod's slot range on the one bank axis
+        nb = self.registry.bank_size * getattr(self.registry, "pods", 1)
         bank = DO.overlay_struct(ctx["base_flat"], ctx["delta_paths"],
                                  ctx["extra_paths"], bank_size=nb)
         if self.mesh is not None:
@@ -824,23 +893,63 @@ class ServingEngine:
              CC.mesh_fp(self.mesh)),
             cache=self.compile_cache)
 
+    def _lane_pod(self, i: int) -> int:
+        """Pod owning batch lane ``i``: act_batch shards pod-major over
+        ("pod", "data"), so lanes block-partition into contiguous per-pod
+        ranges."""
+        return i // (self.batch_size // self._pods)
+
+    def _route_pod(self, r: Request, free: list) -> int:
+        """Affinity router (DESIGN.md §17): steer the request to a pod
+        with a free lane that ALREADY holds its variant's bank slot
+        (hit — no admission traffic at all); cold variants go to the
+        free-est pod and admit on demand there (miss).  The choice is
+        STICKY per request — the async pipeline's tickets are per
+        (variant, pod), so re-routing a mid-ingest request would start a
+        second ingest instead of finishing the first."""
+        if self._pods == 1:
+            return 0
+        if r.route_pod is not None:
+            return r.route_pod
+        free_per_pod = collections.Counter(self._lane_pod(i) for i in free)
+        holding = ([] if r.variant == "__base__"
+                   else self.registry.bank_pods_holding(r.variant))
+        warm = [p for p in sorted(free_per_pod) if p in holding]
+        if warm:
+            pod = warm[0]
+        else:
+            pod = max(sorted(free_per_pod), key=lambda p: free_per_pod[p])
+        if r.variant != "__base__":
+            self.metrics["affinity_hits" if pod in holding
+                         else "affinity_misses"] += 1
+        r.route_pod = pod
+        return pod
+
     def _admit_free_slots(self) -> list:
-        """Pop queued requests into free lanes: resolve each variant to a
-        bank slot (loading + admitting the artifact on a miss) and pin it
-        for the request's lifetime.  Artifact failures re-queue up to
-        max_retries then fail; a fully-pinned bank re-queues the head and
-        waits for retirements."""
+        """Pop queued requests into free lanes: route each request to a
+        pod (affinity first, _route_pod), resolve its variant to a bank
+        slot IN THAT POD (loading + admitting the artifact on a miss) and
+        pin it for the request's lifetime.  Artifact failures re-queue up
+        to max_retries then fail; a fully-pinned bank re-queues the head
+        and waits for retirements."""
         newly: list = []
         skipped: list = []
         free = [i for i in range(self.batch_size) if self._slots[i] is None]
         while free and self._queue:
             r = self._queue.popleft()
+            pod = self._route_pod(r, free)
+            if not any(self._lane_pod(i) == pod for i in free):
+                # sticky pod's lanes all busy: hold the request until a
+                # retirement frees one (re-routing would thrash per-pod
+                # admission tickets and bank slots)
+                skipped.append(r)
+                continue
             if self.admission is not None and r.variant != "__base__":
                 # async path: never load on the serving thread — consult
                 # the pipeline (auto-prefetching unseen variants) and skip
                 # the request while its version is still ingesting
                 try:
-                    state = self.admission.poll(r.variant)
+                    state = self.admission.poll(r.variant, pod=pod)
                 except Exception as e:   # ingest failed: same retry budget
                     r.retries += 1       # as the sync artifact-load path
                     if r.retries > self.max_retries:
@@ -861,7 +970,7 @@ class ServingEngine:
                 # rolled back) while it waited is what it serves.  The
                 # acquire pins the resolved VERSION KEY, so a later swap
                 # cannot evict the bank slot this lane decodes from.
-                vslot, vkey = self.registry.bank_acquire(r.variant)
+                vslot, vkey = self.registry.bank_acquire(r.variant, pod)
             except RuntimeError:
                 # every bank slot pinned by in-flight requests: transient
                 # capacity pressure — retry after retirements free pins
@@ -876,10 +985,12 @@ class ServingEngine:
                 else:
                     self._queue.append(r)
                 continue
-            i = free.pop(0)
+            i = next(j for j in free if self._lane_pod(j) == pod)
+            free.remove(i)
             r.served_version = self.registry.current_version(r.variant)
             self._slots[i] = _Slot(request=r, variant_slot=vslot,
-                                   remaining=r.max_new_tokens, vkey=vkey)
+                                   remaining=r.max_new_tokens, vkey=vkey,
+                                   pod=pod)
             self._variant_idx[i] = vslot
             self._variant_idx_dev = None
             r.status = "running"
@@ -895,7 +1006,7 @@ class ServingEngine:
         prefill per admission wave; only the newly admitted rows of the
         resulting cache/logits are merged into the persistent batch."""
         bs = self.batch_size
-        pvidx = np.zeros(bs, np.int32)
+        pvidx = self._base_vidx.copy()
         for i in newly:
             pvidx[i] = self._slots[i].variant_slot
         batch = self._prompt_batch(
@@ -925,9 +1036,9 @@ class ServingEngine:
         s = self._slots[i]
         s.request.status = "done"
         self._done[s.request.rid] = s.request
-        self.registry.bank_unpin(s.vkey)
+        self.registry.bank_unpin(s.vkey, s.pod)
         self._slots[i] = None
-        self._variant_idx[i] = 0
+        self._variant_idx[i] = self._base_vidx[i]
         self._variant_idx_dev = None
         self.metrics["retired"] += 1
 

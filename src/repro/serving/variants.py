@@ -118,23 +118,47 @@ class OverlayBank:
     — weight-axis sharded tiles, replicated bank axis) and admission runs
     as one jitted donated scatter whose out_shardings keep the bank in
     place (DESIGN.md §11).
+
+    POD-LOCAL banks (``pods > 1``, DESIGN.md §17): the bank axis grows to
+    ``pods * size`` slots and shards over the mesh's "pod" axis — pod p
+    owns the GLOBAL slot range [p*size, (p+1)*size), its base slot is
+    p*size, and an admission scatter lands only on pod p's devices.  Slot
+    table, pin set, LRU and free list are all kept PER POD, so two pods
+    admit (and evict) independently; every slot index this class returns
+    is the GLOBAL index the banked kernels consume (the shard_map dispatch
+    translates it to the pod-local slot, kernels/dispatch.py).
     """
 
     def __init__(self, base_params, size: int, *, vec_dtype=jnp.float16,
                  mesh=None, param_axes=None, rules=None,
-                 compile_cache=None):
+                 compile_cache=None, pods: int = 1):
         if size < 2:
             raise ValueError("bank needs >= 2 slots (base + 1 variant)")
         if mesh is not None and param_axes is None:
             raise ValueError("a sharded bank needs param_axes (from "
                              "models.param.split) alongside the mesh")
-        self.size = size
+        if pods < 1:
+            raise ValueError("pods must be >= 1")
+        self.size = size                    # slots PER POD (incl. base)
+        self.pods = pods
+        self.total_slots = size * pods      # bank-axis length
         self.vec_dtype = vec_dtype
         self.mesh = mesh
         self._param_axes = param_axes
+        # pods the MESH spans (1 without a "pod" axis) — the replication
+        # count of a globally-replicated bank, hence the cross-pod term of
+        # the admission byte accounting below
+        self._mesh_pods = 1
+        if mesh is not None:
+            from repro.distributed.sharding import _axis_size
+            self._mesh_pods = _axis_size(mesh, "pod") or 1
+        if pods > 1 and pods != self._mesh_pods:
+            raise ValueError(
+                f"pod-local bank with pods={pods} needs a mesh whose "
+                f"'pod' axis has that size (mesh spans {self._mesh_pods})")
         if rules is None and mesh is not None:
             from repro.distributed.sharding import rules_for
-            rules = rules_for("decode")
+            rules = rules_for("decode", pod_banks=pods > 1)
         self._rules = rules
         self.shardings: Optional[dict] = None   # path -> leaf shardings
         self._base_flat = flatten_params(base_params)
@@ -145,20 +169,48 @@ class OverlayBank:
         # token path, so its compile is worth a deserialize too
         self._cc = compile_cache
         self._write = self._staged_write(_bank_write_jit)
-        self._slots: dict[str, int] = {}
-        self._pins: dict[str, int] = {}
-        self._lru: "collections.OrderedDict[str, None]" = \
-            collections.OrderedDict()
-        self._free = list(range(size - 1, 0, -1))   # pop() -> lowest slot
+        # per-pod residency state; LOCAL slot ids (0 = the pod's base)
+        self._pod_slots: list = [dict() for _ in range(pods)]
+        self._pins: list = [dict() for _ in range(pods)]
+        self._lru: list = [collections.OrderedDict() for _ in range(pods)]
+        self._free: list = [list(range(size - 1, 0, -1))
+                            for _ in range(pods)]   # pop() -> lowest slot
         # variants mid-ingest on the admission pipeline: not yet in a slot,
-        # but eviction/rollback must see them (DESIGN.md §13)
+        # but eviction/rollback must see them (DESIGN.md §13).  Keyed
+        # (pod, vkey) — per-pod tickets admit the same version into two
+        # pods concurrently (DESIGN.md §17)
         self._staging: set = set()
-        self.stats = {"admits": 0, "evictions": 0}
+        self.stats = {"admits": 0, "evictions": 0,
+                      # layout-derived admission traffic split: one
+                      # payload copy lands in the admitting pod; a
+                      # globally-replicated bank writes (mesh_pods - 1)
+                      # more copies across the pod interconnect, a
+                      # pod-sharded bank writes none
+                      "admit_bytes_in_pod": 0,
+                      "admit_bytes_cross_pod": 0}
+
+    @property
+    def _slots(self) -> dict:
+        """Back-compat merged view: {vkey -> GLOBAL slot} across pods
+        (``vkey in bank._slots`` predates per-pod tables)."""
+        out: dict = {}
+        for p, table in enumerate(self._pod_slots):
+            for name, local in table.items():
+                out.setdefault(name, self._global(p, local))
+        return out
+
+    def _global(self, pod: int, local: int) -> int:
+        return pod * self.size + local
+
+    def base_slot(self, pod: int = 0) -> int:
+        """GLOBAL slot serving base semantics for ``pod`` (slot p*size —
+        all-zero delta + base extras, never admitted or evicted)."""
+        return pod * self.size
 
     def _staged_write(self, jitted, *, sh_fp: bool = False):
         """Route the admission-scatter jit through the compile cache with
         ``vec_dtype`` baked as its static; no cache attached → plain jit."""
-        parts = ("bank-write", self.size, CCm.mesh_fp(self.mesh),
+        parts = ("bank-write", self.size, self.pods, CCm.mesh_fp(self.mesh),
                  CCm.sharding_fp(self.shardings) if sh_fp else "none")
         wrapped = CCm.CachedCallable(
             jitted, parts,
@@ -178,15 +230,15 @@ class OverlayBank:
         flat = {}
         for path, e in dm.deltas.items():
             ent = DO.from_delta_entry(e, vec_dtype=self.vec_dtype)
-            flat[path] = DO.bank_zeros(path, ent, self.size)
+            flat[path] = DO.bank_zeros(path, ent, self.total_slots)
         for path in dm.extras:
             flat[path] = DO.bank_extra_base(path, self._base_flat[path],
-                                            self.size)
+                                            self.total_slots)
         if self.mesh is not None:
             self.shardings = DO.overlay_shardings(
                 self._param_axes, self._base_flat, sorted(dm.deltas),
                 sorted(dm.extras), self._rules, self.mesh,
-                bank_size=self.size)
+                bank_size=self.total_slots)
             flat = {path: jax.device_put(leaf, self.shardings[path])
                     for path, leaf in flat.items()}
             self._write = self._staged_write(
@@ -204,61 +256,91 @@ class OverlayBank:
         self.tree = tree
 
     # -- lifecycle ---------------------------------------------------------
-    def slot_of(self, name: str) -> int:
+    def holds(self, name: str, pod: Optional[int] = None) -> bool:
+        """Variant resident in ``pod`` (any pod when None)."""
+        if pod is not None:
+            return name in self._pod_slots[pod]
+        return any(name in t for t in self._pod_slots)
+
+    def pods_holding(self, name: str) -> list:
+        """Pods where ``name`` is bank-resident — the affinity router's
+        steering signal (serving/engine.py)."""
+        return [p for p, t in enumerate(self._pod_slots) if name in t]
+
+    def slot_of(self, name: str, pod: int = 0) -> int:
         if name == "__base__":
-            return 0
-        return self._slots[name]
+            return self.base_slot(pod)
+        return self._global(pod, self._pod_slots[pod][name])
 
-    def resident(self) -> list:
-        return list(self._lru)
+    def resident(self, pod: Optional[int] = None) -> list:
+        if pod is not None:
+            return list(self._lru[pod])
+        seen: dict = {}
+        for lru in self._lru:
+            for name in lru:
+                seen.setdefault(name, None)
+        return list(seen)
 
-    def has_capacity(self) -> bool:
-        """A new variant can be admitted: a free slot exists or some
-        resident is unpinned (evictable).  Lets callers refuse BEFORE
-        paying the artifact load."""
-        return bool(self._free) or any(self._pins.get(c, 0) == 0
-                                       for c in self._lru)
+    def pod_resident(self) -> dict:
+        """{pod -> [resident vkeys]} — status()['hbm'] observability."""
+        return {p: list(lru) for p, lru in enumerate(self._lru)}
 
-    def admit(self, name: str, dm: DeltaModel) -> tuple[int, int]:
-        """Place ``dm`` into a slot (reusing evicted slots, evicting the
-        LRU unpinned resident when full).  Returns (slot, payload_bytes)."""
+    def has_capacity(self, pod: int = 0) -> bool:
+        """A new variant can be admitted into ``pod``: a free slot exists
+        or some resident is unpinned (evictable).  Lets callers refuse
+        BEFORE paying the artifact load."""
+        return bool(self._free[pod]) or any(
+            self._pins[pod].get(c, 0) == 0 for c in self._lru[pod])
+
+    def admit(self, name: str, dm: DeltaModel,
+              pod: int = 0) -> tuple[int, int]:
+        """Place ``dm`` into a slot of ``pod`` (reusing evicted slots,
+        evicting the pod's LRU unpinned resident when full).  Returns
+        (GLOBAL slot, payload_bytes)."""
         if name == "__base__":
-            return 0, 0
-        if name in self._slots:
-            self._lru.move_to_end(name)
-            return self._slots[name], 0
+            return self.base_slot(pod), 0
+        table = self._pod_slots[pod]
+        if name in table:
+            self._lru[pod].move_to_end(name)
+            return self._global(pod, table[name]), 0
         self._ensure_tree(dm)
-        if not self._free:
-            for cand in self._lru:
-                if self._pins.get(cand, 0) == 0:
+        if not self._free[pod]:
+            for cand in self._lru[pod]:
+                if self._pins[pod].get(cand, 0) == 0:
                     # slot is reassigned immediately: skip the device-side
                     # clear (admit overwrites every leaf of the slot)
-                    self._release(cand, clear=False)
+                    self._release(cand, pod, clear=False)
                     break
             else:
                 raise RuntimeError(
-                    "overlay bank full: every resident is pinned by an "
-                    "in-flight request")
-        slot = self._free.pop()
+                    f"overlay bank (pod {pod}) full: every resident is "
+                    "pinned by an in-flight request")
+        local = self._free[pod].pop()
+        gslot = self._global(pod, local)
         payload = sum(int(e.packed.size) + 2 * int(e.v_row.size)
                       + 2 * int(e.v_col.size) for e in dm.deltas.values())
         payload += sum(2 * int(v.size) for v in dm.extras.values())
         self._flat = self._write(self._flat, dict(dm.deltas),
-                                 dict(dm.extras), jnp.int32(slot))
-        self._slots[name] = slot
-        self._lru[name] = None
+                                 dict(dm.extras), jnp.int32(gslot))
+        table[name] = local
+        self._lru[pod][name] = None
         self.stats["admits"] += 1
+        # layout-derived traffic: a pod-sharded bank axis puts the slot on
+        # exactly one pod; replicated puts a copy on every mesh pod
+        copies = 1 if self.pods > 1 else self._mesh_pods
+        self.stats["admit_bytes_in_pod"] += payload
+        self.stats["admit_bytes_cross_pod"] += payload * (copies - 1)
         self._rebuild()
-        return slot, payload
+        return gslot, payload
 
-    def admit_async(self, name: str, dm: DeltaModel):
+    def admit_async(self, name: str, dm: DeltaModel, pod: int = 0):
         """``admit`` without the caller-side device fence: returns
         ``(slot, payload_bytes, fence)`` where ``fence()`` blocks until
         the admission scatter has landed.  The async admission pipeline
         dispatches the scatter between decode steps and lets jax data
         dependencies order the next decode after it — the fence is only
         for callers (tests, stats) that need a wall-clock boundary."""
-        slot, payload = self.admit(name, dm)
+        slot, payload = self.admit(name, dm, pod)
         leaves = jax.tree.leaves(self.tree) if self.tree is not None else []
         if leaves:
             def fence(leaf=leaves[0]):
@@ -269,61 +351,71 @@ class OverlayBank:
         return slot, payload, fence
 
     # -- staging marks (async admission pipeline, DESIGN.md §13) -----------
-    def mark_staging(self, name: str) -> None:
-        self._staging.add(name)
+    def mark_staging(self, name: str, pod: int = 0) -> None:
+        self._staging.add((pod, name))
 
-    def unmark_staging(self, name: str) -> None:
-        self._staging.discard(name)
+    def unmark_staging(self, name: str, pod: int = 0) -> None:
+        self._staging.discard((pod, name))
 
-    def staging(self, name: str) -> bool:
-        return name in self._staging
+    def staging(self, name: str, pod: Optional[int] = None) -> bool:
+        if pod is not None:
+            return (pod, name) in self._staging
+        return any(n == name for _, n in self._staging)
 
-    def pin(self, name: str) -> None:
+    def pin(self, name: str, pod: int = 0) -> None:
         if name != "__base__":
-            self._pins[name] = self._pins.get(name, 0) + 1
+            pins = self._pins[pod]
+            pins[name] = pins.get(name, 0) + 1
 
-    def unpin(self, name: str) -> None:
-        if name != "__base__" and name in self._pins:
-            self._pins[name] = max(0, self._pins[name] - 1)
+    def unpin(self, name: str, pod: int = 0) -> None:
+        pins = self._pins[pod]
+        if name != "__base__" and name in pins:
+            pins[name] = max(0, pins[name] - 1)
 
-    def pinned(self, name: str) -> bool:
-        return self._pins.get(name, 0) > 0
+    def pinned(self, name: str, pod: Optional[int] = None) -> bool:
+        if pod is not None:
+            return self._pins[pod].get(name, 0) > 0
+        return any(p.get(name, 0) > 0 for p in self._pins)
 
-    def evict(self, name: str) -> None:
-        """Free a slot for reuse; refuses while the variant is pinned
-        (mid-flight requests reference its slot index) or still staging
-        on the admission pipeline (its slot does not exist yet — evicting
+    def evict(self, name: str, pod: Optional[int] = None) -> None:
+        """Free ``name``'s slot in ``pod`` (every holding pod when None)
+        for reuse; refuses while the variant is pinned (mid-flight
+        requests reference its slot index) or still staging on the
+        admission pipeline (its slot does not exist yet — evicting
         mid-ingest would race the commit)."""
-        if self.staging(name):
+        pods = [pod] if pod is not None else self.pods_holding(name)
+        if self.staging(name, pod):
             raise RuntimeError(
                 f"variant {name!r} is staging on the admission pipeline; "
                 "wait for the admission to land before evicting")
-        if name not in self._slots:
-            return
-        if self.pinned(name):
-            raise RuntimeError(
-                f"variant {name!r} is pinned by in-flight requests; "
-                "retire them before evicting")
-        self._release(name, clear=True)
+        for p in pods:
+            if name in self._pod_slots[p] and self.pinned(name, p):
+                raise RuntimeError(
+                    f"variant {name!r} is pinned by in-flight requests "
+                    f"(pod {p}); retire them before evicting")
+        for p in pods:
+            if name in self._pod_slots[p]:
+                self._release(name, p, clear=True)
 
-    def _release(self, name: str, *, clear: bool) -> None:
-        """Drop a resident and recycle its slot.  ``clear=False`` skips
-        the device-side zeroing — correct when the slot is reassigned in
-        the same admit (every leaf overwritten), and it keeps the
-        eviction-under-pressure path off the eager per-leaf updates
-        ``_bank_write`` exists to avoid."""
-        slot = self._slots.pop(name)
-        self._lru.pop(name, None)
-        self._pins.pop(name, None)
+    def _release(self, name: str, pod: int, *, clear: bool) -> None:
+        """Drop a resident from ``pod`` and recycle its slot.
+        ``clear=False`` skips the device-side zeroing — correct when the
+        slot is reassigned in the same admit (every leaf overwritten), and
+        it keeps the eviction-under-pressure path off the eager per-leaf
+        updates ``_bank_write`` exists to avoid."""
+        local = self._pod_slots[pod].pop(name)
+        gslot = self._global(pod, local)
+        self._lru[pod].pop(name, None)
+        self._pins[pod].pop(name, None)
         if clear:
             for path in self._template_deltas:
                 self._flat[path] = DO.bank_clear_entry(
-                    path, self._flat[path], slot)
+                    path, self._flat[path], gslot)
             for path in self._template_extras:
                 self._flat[path] = DO.bank_set_extra_base(
-                    path, self._flat[path], slot, self._base_flat[path])
+                    path, self._flat[path], gslot, self._base_flat[path])
             self._rebuild()
-        self._free.append(slot)
+        self._free[pod].append(local)
         self.stats["evictions"] += 1
 
     def nbytes(self) -> int:
@@ -334,7 +426,8 @@ class OverlayBank:
     def per_device_nbytes(self) -> dict:
         """{device -> resident bank bytes} from the actual shard layout —
         the capacity-planning number on a mesh (each device holds its
-        weight-tile's slice of every slot plus the replicated vectors)."""
+        weight-tile's slice of every slot plus the replicated vectors;
+        under pod-local rules only its own pod's slot range)."""
         out: dict = {}
         if self._flat is None:
             return out
@@ -343,6 +436,30 @@ class OverlayBank:
                 key = str(shard.device)
                 out[key] = out.get(key, 0) + (
                     shard.data.size * shard.data.dtype.itemsize)
+        return out
+
+    def _device_pod(self) -> dict:
+        """{device str -> pod index} from the mesh layout ({} without a
+        pod axis — everything is pod 0)."""
+        if self.mesh is None or "pod" not in self.mesh.axis_names:
+            return {}
+        import numpy as np
+        ax = self.mesh.axis_names.index("pod")
+        out: dict = {}
+        for idx in np.ndindex(self.mesh.devices.shape):
+            out[str(self.mesh.devices[idx])] = idx[ax]
+        return out
+
+    def per_pod_nbytes(self) -> dict:
+        """{pod -> resident bank bytes} — per_device_nbytes rolled up by
+        the mesh's pod coordinate (status()['hbm'], DESIGN.md §17).  A
+        pod-sharded bank shows each pod holding only its slot range; a
+        replicated bank shows the full footprint in every pod."""
+        dev_pod = self._device_pod()
+        out: dict = {}
+        for dev, nbytes in self.per_device_nbytes().items():
+            p = dev_pod.get(dev, 0)
+            out[p] = out.get(p, 0) + nbytes
         return out
 
 
@@ -373,11 +490,28 @@ class VariantRegistry:
     def __init__(self, base_params, *, param_shardings=None,
                  max_resident: int = 2, use_kernel: bool = True,
                  mode: str = "dense", bank_size: int = 8,
-                 mesh=None, param_axes=None, base_dtype: str = "fp"):
+                 mesh=None, param_axes=None, base_dtype: str = "fp",
+                 pod_banks: bool = False):
         if mode not in ("dense", "fused"):
             raise ValueError(f"unknown residency mode {mode!r}")
         if base_dtype not in ("fp", "int8"):
             raise ValueError(f"unknown base dtype {base_dtype!r}")
+        # pod-local overlay banks (DESIGN.md §17): the bank's slot space
+        # splits per pod of the mesh's "pod" axis; off (the default) keeps
+        # the globally-replicated bank — the A/B baseline
+        self.pod_banks = pod_banks
+        self.pods = 1
+        if pod_banks:
+            if mesh is None:
+                raise ValueError(
+                    "pod_banks=True needs a mesh with a 'pod' axis "
+                    "(launch.mesh.make_host_mesh(pod=...))")
+            from repro.distributed.sharding import _axis_size
+            p = _axis_size(mesh, "pod")
+            if p is None:
+                raise ValueError(
+                    "pod_banks=True but the mesh has no 'pod' axis")
+            self.pods = p
         # fingerprint and dense-copy accounting come from the FP base —
         # artifacts are calibrated against (and verified by) the full-
         # precision weights, and a dense resident reconstructs to fp
@@ -647,11 +781,12 @@ class VariantRegistry:
                 self.bank = OverlayBank(self.base_params, self.bank_size,
                                         mesh=self.mesh,
                                         param_axes=self.param_axes,
-                                        compile_cache=self.compile_cache)
+                                        compile_cache=self.compile_cache,
+                                        pods=self.pods)
             return self.bank
 
     def _bank_admit(self, vkey: str, dm: DeltaModel, *,
-                    block: bool = True) -> int:
+                    block: bool = True, pod: int = 0) -> int:
         """Scatter ``dm`` into the bank under ``vkey`` and book the swap
         stats (one shared path for synchronous bank_resolve and the async
         admission pipeline's commit).  ``block=False`` skips the device
@@ -661,7 +796,7 @@ class VariantRegistry:
         bank = self._ensure_bank()
         before = bank.nbytes()
         t0 = time.perf_counter()
-        slot, payload, fence = bank.admit_async(vkey, dm)
+        slot, payload, fence = bank.admit_async(vkey, dm, pod)
         if block:
             fence()
         self.stats["swaps"] += 1
@@ -673,42 +808,51 @@ class VariantRegistry:
         self._bank_evictions_seen = bank.stats["evictions"]
         return slot
 
-    def bank_resolve(self, nameish: str) -> int:
+    def bank_resolve(self, nameish: str, pod: int = 0) -> int:
         """Admit the CURRENT version of ``nameish`` (or an explicit
-        ``name@vN``) into the overlay bank (created on demand) and return
-        its bank slot index — the per-row ``variant_idx`` value.
-        '__base__' is always slot 0.  Swap/residency stats migrate to the
+        ``name@vN``) into ``pod``'s slot range of the overlay bank
+        (created on demand) and return its GLOBAL bank slot index — the
+        per-row ``variant_idx`` value.  '__base__' is pod's base slot
+        (slot 0 for a global bank).  Swap/residency stats migrate to the
         bank: ``resident_bytes`` tracks the bank allocation (charged when
         the bank grows, not per admitted variant)."""
         bank = self._ensure_bank()
         if nameish == "__base__":
-            return 0
+            return bank.base_slot(pod)
         name, version = self._parse(nameish)
         vkey = self._vkey(name, version)
-        if vkey in bank._slots:
+        if bank.holds(vkey, pod):
             self.stats["hits"] += 1
-            return bank.admit(vkey, None)[0]   # LRU touch, no payload
-        if bank.tree is not None and not bank.has_capacity():
+            return bank.admit(vkey, None, pod)[0]  # LRU touch, no payload
+        if bank.tree is not None and not bank.has_capacity(pod):
             # refuse BEFORE the disk load: a fully-pinned bank would
             # otherwise re-read + re-verify the artifact every scheduler
             # step while waiting for a retirement to free a pin
             raise RuntimeError(
-                "overlay bank full: every resident is pinned by an "
-                "in-flight request")
+                f"overlay bank (pod {pod}) full: every resident is pinned "
+                "by an in-flight request")
         dm = self._load(name, version)
-        return self._bank_admit(vkey, dm, block=True)
+        return self._bank_admit(vkey, dm, block=True, pod=pod)
 
-    def bank_acquire(self, nameish: str) -> tuple:
+    def bank_acquire(self, nameish: str, pod: int = 0) -> tuple:
         """Admit AND pin in one step: returns (slot, version_key).  The
         caller unpins with the returned KEY, not the request's variant
         name — the serving pointer may move while the request is in
         flight (hot-swap), and the pin must stay on the version the
         request is actually decoding."""
-        slot = self.bank_resolve(nameish)
+        slot = self.bank_resolve(nameish, pod)
         vkey = "__base__" if nameish == "__base__" \
             else self._vkey(*self._parse(nameish))
-        self.bank.pin(vkey)
+        self.bank.pin(vkey, pod)
         return slot, vkey
+
+    def bank_pods_holding(self, nameish: str) -> list:
+        """Pods where the variant's CURRENT version is bank-resident —
+        the affinity router's steering signal (empty when unadmitted or
+        no bank yet)."""
+        if self.bank is None:
+            return []
+        return self.bank.pods_holding(self._bank_key(nameish))
 
     def spec_resolve(self) -> tuple:
         """The speculative scheduler's weight resolution (DESIGN.md §15):
@@ -739,13 +883,13 @@ class VariantRegistry:
         except KeyError:
             return nameish
 
-    def bank_pin(self, nameish: str) -> None:
+    def bank_pin(self, nameish: str, pod: int = 0) -> None:
         if self.bank is not None:
-            self.bank.pin(self._bank_key(nameish))
+            self.bank.pin(self._bank_key(nameish), pod)
 
-    def bank_unpin(self, nameish: str) -> None:
+    def bank_unpin(self, nameish: str, pod: int = 0) -> None:
         if self.bank is not None:
-            self.bank.unpin(self._bank_key(nameish))
+            self.bank.unpin(self._bank_key(nameish), pod)
 
     def resident(self) -> list:
         return list(self._resident)
@@ -795,7 +939,10 @@ class VariantRegistry:
             self.stats["resident_bytes"] -= r.nbytes
             self.stats["evictions"] += 1
         if self.bank is not None and key in self.bank._slots:
-            # bank bytes stay allocated — the slot is reusable, not freed
+            # bank bytes stay allocated — the slot is reusable, not freed;
+            # a pod-local bank may hold the key in several pods: evict
+            # releases every holding pod's slot
+            before = self.bank.stats["evictions"]
             self.bank.evict(key)
-            self.stats["evictions"] += 1
+            self.stats["evictions"] += self.bank.stats["evictions"] - before
             self._bank_evictions_seen = self.bank.stats["evictions"]

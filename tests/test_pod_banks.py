@@ -1,0 +1,300 @@
+"""Pod-local overlay banks + affinity routing (DESIGN.md §17).
+
+Three tiers, matching the CI job layout:
+
+* pure rule/spec resolution with fake meshes (no devices) — always runs;
+* bank residency semantics (per-pod slot tables, per_device_nbytes,
+  evict-while-pinned / evict-while-staging) on a 3-axis
+  (pod, data, model) mesh — needs 4 devices (sharded-smoke CI job);
+* end-to-end engine parity + affinity routing on a (2, 2, 2) mesh —
+  needs 8 devices (pod-smoke CI job); skips elsewhere.
+
+Contract under test: pod-local banking is a LAYOUT + ROUTING decision.
+Greedy tokens must match the global-bank engine bit-for-bit whether a
+request was an affinity hit or a cold-pod miss; slot indices returned by
+the bank are GLOBAL (pod p owns [p*size, (p+1)*size), its base slot is
+p*size); admission writes exactly one pod's shard.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import calibration as C
+from repro.distributed import sharding as S
+from repro.models import build_model
+from repro.models.param import split
+from repro.serving import Deployment, VariantRegistry
+from repro.serving.variants import OverlayBank
+
+
+def _fake_mesh(shape, names):
+    class M:
+        axis_names = names
+        devices = np.empty(shape, object)
+    return M()
+
+
+def _mesh_pod(pod=2, data=1, model=2) -> Mesh:
+    n = pod * data * model
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices (pod/sharded-smoke CI jobs)")
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(pod, data, model),
+                ("pod", "data", "model"))
+
+
+def _pair(arch: str = "deepseek-7b", layers: int = 2):
+    cfg = dataclasses.replace(get_config(arch).reduced(), num_layers=layers,
+                              compute_dtype="float32", remat=False)
+    model = build_model(cfg)
+    base, axes = split(model.init(jax.random.PRNGKey(0)))
+    pert, _ = split(model.init(jax.random.PRNGKey(1)))
+    ft1 = jax.tree.map(lambda b, f: b + 0.05 * f, base, pert)
+    ft2 = jax.tree.map(lambda b, f: b - 0.05 * f, base, pert)
+    return model, base, axes, C.compress(base, ft1), C.compress(base, ft2)
+
+
+# ---------------------------------------------------------------------------
+# rule resolution (no devices)
+# ---------------------------------------------------------------------------
+
+def test_bank_rule_pod_sharded():
+    mesh = _fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = S.rules_for("decode", pod_banks=True)
+    assert S.resolve_spec((10,), ("bank",), rules, mesh) == P("pod")
+    # default rules keep the bank replicated even on a pod mesh
+    base = S.rules_for("decode")
+    assert S.resolve_spec((10,), ("bank",), base, mesh) == P(None)
+
+
+def test_bank_rule_degrades_without_pod_axis():
+    """pod_banks rules on a 2-axis mesh fall through to replicated (the
+    divisibility fallback skips absent axes) — tier-1 CPU safety."""
+    mesh = _fake_mesh((2, 2), ("data", "model"))
+    rules = S.rules_for("decode", pod_banks=True)
+    assert S.resolve_spec((10,), ("bank",), rules, mesh) == P(None)
+
+
+def test_bank_rule_indivisible_slots_replicates():
+    mesh = _fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = S.rules_for("decode", pod_banks=True)
+    # 2 pods cannot split 7 slots evenly -> replicated, not an error
+    assert S.resolve_spec((7,), ("bank",), rules, mesh) == P(None)
+
+
+def test_act_batch_pod_major_on_pod_mesh():
+    """Lanes block-partition pod-major: act_batch resolves to
+    ("pod", "data") when the pod axis exists — the layout the engine's
+    _lane_pod mapping assumes."""
+    mesh = _fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = S.rules_for("decode")
+    assert S.resolve_spec((8,), ("act_batch",), rules, mesh) == \
+        P(("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# per-pod bank residency semantics (slot math needs no mesh at all)
+# ---------------------------------------------------------------------------
+
+def test_global_slot_convention_host_only():
+    model, base, axes, dm1, dm2 = _pair()
+    bank = OverlayBank(base, 4, pods=1)
+    s1, p1 = bank.admit("a@v1", dm1)
+    assert s1 == 1 and p1 > 0
+    assert bank.base_slot() == 0
+    assert bank.slot_of("a@v1") == 1
+    # LRU hit: same slot, no payload
+    assert bank.admit("a@v1", None) == (1, 0)
+
+
+def test_registry_pod_banks_requires_pod_mesh():
+    model, base, axes, dm1, _ = _pair()
+    with pytest.raises(ValueError, match="pod"):
+        VariantRegistry(base, pod_banks=True)        # no mesh at all
+
+
+def test_pod_bank_per_pod_slots_and_eviction():
+    """Per-pod slot tables on a (2, 1, 2) mesh: global slot ids, per-pod
+    base slots, independent LRU/eviction, evict-while-pinned and
+    evict-while-staging refusals."""
+    model, base, axes, dm1, dm2 = _pair()
+    mesh = _mesh_pod(2, 1, 2)
+    shardings = S.tree_shardings(base, axes, S.rules_for("decode"), mesh)
+    base_dev = jax.device_put(base, shardings)
+    bank = OverlayBank(base_dev, 3, mesh=mesh, param_axes=axes, pods=2)
+    assert bank.total_slots == 6
+    assert bank.base_slot(0) == 0 and bank.base_slot(1) == 3
+
+    s_a0, pay = bank.admit("a@v1", dm1, pod=0)
+    assert s_a0 == 1 and pay > 0
+    s_a1, pay1 = bank.admit("a@v1", dm1, pod=1)     # same vkey, other pod
+    assert s_a1 == 4 and pay1 > 0                   # global ids differ
+    assert bank.pods_holding("a@v1") == [0, 1]
+    assert bank.slot_of("a@v1", pod=1) == 4
+    assert sorted(bank.resident()) == ["a@v1"]
+    assert bank.pod_resident() == {0: ["a@v1"], 1: ["a@v1"]}
+
+    # admission traffic: pod-sharded bank crosses no pod boundary
+    assert bank.stats["admit_bytes_in_pod"] == pay + pay1
+    assert bank.stats["admit_bytes_cross_pod"] == 0
+
+    # pin in pod 0 only: evicting pod 0 raises, pod 1 evicts fine
+    bank.pin("a@v1", pod=0)
+    with pytest.raises(RuntimeError, match="pinned"):
+        bank.evict("a@v1", pod=0)
+    with pytest.raises(RuntimeError, match="pinned"):
+        bank.evict("a@v1")                 # pod=None hits the pinned pod
+    bank.evict("a@v1", pod=1)
+    assert bank.pods_holding("a@v1") == [0]
+    bank.unpin("a@v1", pod=0)
+
+    # staging marks are per (pod, vkey)
+    bank.mark_staging("b@v1", pod=1)
+    assert bank.staging("b@v1") and bank.staging("b@v1", pod=1)
+    assert not bank.staging("b@v1", pod=0)
+    with pytest.raises(RuntimeError, match="staging"):
+        bank.evict("b@v1", pod=1)
+    bank.unmark_staging("b@v1", pod=1)
+
+    # per-pod LRU pressure: fill pod 0's two variant slots, third admit
+    # evicts pod 0's LRU but never touches pod 1's table
+    bank.admit("b@v1", dm2, pod=0)
+    bank.admit("a@v1", dm1, pod=1)
+    ev0 = bank.stats["evictions"]
+    s_c, _ = bank.admit("c@v1", dm2, pod=0)
+    assert s_c in (1, 2)                   # reused a pod-0 slot
+    assert bank.stats["evictions"] == ev0 + 1
+    assert bank.pods_holding("a@v1") in ([1], [0, 1])
+    assert "c@v1" in bank._slots           # back-compat merged view
+
+
+def test_per_device_and_per_pod_nbytes():
+    """A pod-sharded bank puts each pod's slot range only on its own
+    devices: per-device bytes are uniform, and the per-pod rollup keyed
+    by the mesh's pod coordinate covers all devices."""
+    model, base, axes, dm1, _ = _pair()
+    mesh = _mesh_pod(2, 1, 2)
+    shardings = S.tree_shardings(base, axes, S.rules_for("decode"), mesh)
+    base_dev = jax.device_put(base, shardings)
+    bank = OverlayBank(base_dev, 2, mesh=mesh, param_axes=axes, pods=2)
+    bank.admit("a@v1", dm1, pod=0)
+    per_dev = bank.per_device_nbytes()
+    assert len(per_dev) == 4               # every mesh device holds bank
+    per_pod = bank.per_pod_nbytes()
+    assert sorted(per_pod) == [0, 1]
+    assert sum(per_pod.values()) == sum(per_dev.values())
+
+    # global bank on the same mesh: same totals pattern, one merged pod
+    # range replicated everywhere -> per-device bytes match across pods
+    bank_g = OverlayBank(base_dev, 4, mesh=mesh, param_axes=axes)
+    bank_g.admit("a@v1", dm1)
+    g_dev = bank_g.per_device_nbytes()
+    assert len(set(g_dev.values())) <= 2   # weight tiles may differ by axis
+    # replication accounting: global-bank admit charges cross-pod bytes
+    assert bank_g.stats["admit_bytes_cross_pod"] == \
+        bank_g.stats["admit_bytes_in_pod"]
+
+
+# ---------------------------------------------------------------------------
+# TTFT reservoir (single device)
+# ---------------------------------------------------------------------------
+
+def test_ttft_percentiles_in_status():
+    model, base, axes, dm1, _ = _pair()
+    dep = Deployment(model, base, batch_size=2, prompt_len=16, max_len=64,
+                     bank_size=4)
+    dep.publish("a", dm1)
+    for i in range(4):
+        dep.submit(np.arange(1, 9), variant=["__base__", "a"][i % 2],
+                   max_new_tokens=2)
+    dep.drain()
+    tt = dep.status()["ttft"]
+    assert tt["count"] == 4
+    assert 0 < tt["p50_seconds"] <= tt["p99_seconds"] <= tt["max_seconds"]
+    dep.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end engine parity + routing (8 devices: pod-smoke CI job)
+# ---------------------------------------------------------------------------
+
+TRAFFIC = ["v0", "v0", "v1", "v0", "v1", "v0", "v1", "v0"]
+
+
+def _run_dep(model, base, axes, dms, mesh, **kw):
+    dep = Deployment(model, base, batch_size=4, prompt_len=16, max_len=64,
+                     bank_size=4, mesh=mesh,
+                     param_axes=axes if mesh is not None else None, **kw)
+    for name, dm in dms.items():
+        dep.publish(name, dm)
+    rids = [dep.submit(np.arange(1, 9), variant=v, max_new_tokens=4)
+            for v in TRAFFIC]
+    dep.drain()
+    toks = [dep.result(r).out_tokens for r in rids]
+    assert all(dep.result(r).status == "done" for r in rids)
+    return toks, dep
+
+
+def test_pod_banks_engine_parity():
+    """Pod-local banks + affinity routing emit exactly the global bank's
+    greedy tokens (hits AND misses), with per-pod status reporting."""
+    model, base, axes, dm1, dm2 = _pair()
+    mesh = _mesh_pod(2, 2, 2)
+    dms = {"v0": dm1, "v1": dm2}
+    toks_g, dep_g = _run_dep(model, base, axes, dms, mesh)
+    toks_p, dep_p = _run_dep(model, base, axes, dms, mesh, pod_banks=True)
+    assert toks_p == toks_g
+    st = dep_p.status()
+    assert st["affinity"]["pods"] == 2
+    assert st["affinity"]["hits"] > 0      # skew makes v0 re-route warm
+    assert st["affinity"]["misses"] > 0    # first touches are cold
+    assert sorted(st["hbm"]["bank_per_pod"]) == [0, 1]
+    res = st["hbm"]["bank_resident_per_pod"]
+    assert set(res) == {0, 1}
+    # zero cross-pod admission traffic under the pod-sharded layout
+    assert dep_p.registry.bank.stats["admit_bytes_cross_pod"] == 0
+    assert dep_g.registry.bank.stats["admit_bytes_cross_pod"] > 0
+    dep_g.close()
+    dep_p.close()
+
+
+def test_pod_banks_gspmd_parity():
+    """The global-index GSPMD lowering serves the pod-sharded bank with
+    the same tokens as the shard_map translation path."""
+    model, base, axes, dm1, dm2 = _pair()
+    mesh = _mesh_pod(2, 2, 2)
+    dms = {"v0": dm1, "v1": dm2}
+    toks_sm, dep_sm = _run_dep(model, base, axes, dms, mesh,
+                               pod_banks=True)
+    toks_g, dep_g = _run_dep(model, base, axes, dms, mesh, pod_banks=True,
+                             kernel_dispatch="gspmd")
+    assert toks_sm == toks_g
+    dep_sm.close()
+    dep_g.close()
+
+
+def test_pod_banks_async_admission():
+    """Per-pod admission tickets: the async pipeline commits each pod's
+    ingest independently and requests drain to done with parity intact."""
+    model, base, axes, dm1, dm2 = _pair()
+    mesh = _mesh_pod(2, 2, 2)
+    dms = {"v0": dm1, "v1": dm2}
+    toks_sync, dep_s = _run_dep(model, base, axes, dms, mesh,
+                                pod_banks=True)
+    toks_async, dep_a = _run_dep(model, base, axes, dms, mesh,
+                                 pod_banks=True, async_admission=True,
+                                 admission_pacing_s=0.0)
+    assert toks_async == toks_sync
+    assert dep_a.metrics["async_admits"] > 0
+    dep_s.close()
+    dep_a.close()
+
+
+def test_pod_banks_rejects_speculative():
+    model, base, axes, _, _ = _pair()
+    with pytest.raises(ValueError, match="speculative"):
+        Deployment(model, base, pod_banks=True, speculative=True)
